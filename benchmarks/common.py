@@ -1,0 +1,55 @@
+"""Shared helpers for the paper-figure benchmarks.
+
+Every benchmark reports two kinds of numbers, clearly labelled:
+
+  * measured_us — wall-clock microseconds of the *functional* stack
+    running on this container (real bytes moved through the simulated
+    tiers and containers),
+  * modelled_s  — seconds projected by the tier/fabric performance model
+    at the PAPER's hardware scale (Table I constants), which is what
+    reproduces the paper's claimed ratios (Figs 3-10).
+
+CSV contract (benchmarks/run.py): ``name,us_per_call,derived``.
+"""
+
+from __future__ import annotations
+
+import tempfile
+import time
+from pathlib import Path
+from typing import Callable, Dict, List
+
+from repro.cluster.topology import VirtualCluster
+from repro.core.nam import NAMDevice
+from repro.core.scr import SCRManager, Strategy
+from repro.memory.tiers import MemoryHierarchy
+
+GB = 1e9
+
+
+def timed(fn: Callable, repeats: int = 3) -> float:
+    """Median wall time of fn() in microseconds."""
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        ts.append((time.perf_counter() - t0) * 1e6)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def paper_cluster(n_cluster=16, n_booster=8, xor_group_size=4, tmp=None):
+    root = Path(tmp or tempfile.mkdtemp(prefix="deeper_bench_"))
+    cl = VirtualCluster(n_cluster, n_booster, root=root,
+                        xor_group_size=xor_group_size)
+    hier = MemoryHierarchy(cl)  # DEEPER_TIERS by default
+    return cl, hier
+
+
+def make_scr(cl, hier, strategy: Strategy, **kw):
+    nam = NAMDevice(hier.nam_tier) if strategy == Strategy.NAM_XOR else None
+    return SCRManager(cl, hier, nam=nam, strategy=strategy, **kw)
+
+
+def row(name: str, us: float, derived: str) -> Dict[str, str]:
+    return {"name": name, "us_per_call": f"{us:.1f}", "derived": derived}

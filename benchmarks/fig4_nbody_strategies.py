@@ -1,0 +1,59 @@
+"""Fig 4: N-body weak scaling under the four checkpoint strategies.
+
+Paper claim (DEEP-ER Cluster, N-body, weak scaling): BUDDY beats stock
+SCR_PARTNER, NAM-XOR beats stock Distributed-XOR, at every node count.
+
+We checkpoint an N-body state (pos/vel/mass: 56 B/particle, 2M particles
+per node — weak scaling) through the full SCR stack and report both the
+measured functional time and the paper-scale modelled time per strategy.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import make_scr, paper_cluster, row, timed
+from repro.core.scr import Strategy
+
+NODES = [4, 8, 16]
+PARTICLES_PER_NODE = 50_000   # functional run size (measured)
+MODEL_PARTICLES_PER_NODE = 2_000_000  # paper-scale (modelled)
+
+
+def nbody_state(n_particles: int):
+    rng = np.random.default_rng(0)
+    return {
+        "pos": rng.normal(size=(n_particles, 3)).astype(np.float32),
+        "vel": rng.normal(size=(n_particles, 3)).astype(np.float32),
+        "mass": rng.random(n_particles).astype(np.float32),
+    }
+
+
+def run():
+    rows = []
+    order = [Strategy.PARTNER, Strategy.BUDDY, Strategy.XOR, Strategy.NAM_XOR]
+    for n in NODES:
+        state = nbody_state(PARTICLES_PER_NODE * n)
+        modelled = {}
+        for strat in order:
+            cl, hier = paper_cluster(n_cluster=n, n_booster=0)
+            scr = make_scr(cl, hier, strat, procs_per_node=4, flush_every=0)
+            rec = scr.save(1, state)
+            us = timed(lambda: scr.save(2, state), repeats=1)
+            # paper-scale: scale modelled time by the data-size ratio
+            scale = MODEL_PARTICLES_PER_NODE / PARTICLES_PER_NODE
+            modelled[strat] = rec.foreground_s * scale
+            rows.append(row(
+                f"fig4/{strat.value}_n{n}", us,
+                f"modelled_cp_s={modelled[strat]:.3f}",
+            ))
+            cl.teardown()
+        ok = (modelled[Strategy.BUDDY] < modelled[Strategy.PARTNER]
+              and modelled[Strategy.NAM_XOR] < modelled[Strategy.XOR])
+        rows.append(row(
+            f"fig4/claim_n{n}", 0.0,
+            f"buddy<partner={modelled[Strategy.BUDDY]<modelled[Strategy.PARTNER]} "
+            f"nam<xor={modelled[Strategy.NAM_XOR]<modelled[Strategy.XOR]} "
+            f"{'PASS' if ok else 'FAIL'}",
+        ))
+    return rows

@@ -1,0 +1,116 @@
+"""Roofline analysis over the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Terms per (arch x shape) on the single-pod 16x16 mesh, TPU v5e constants:
+
+  compute term    = HLO_FLOPs_per_device / 197 TFLOP/s
+  memory term     = HLO_bytes_per_device / 819 GB/s        (upper bound:
+                    XLA 'bytes accessed' counts logical op traffic, i.e.
+                    pre-fusion; true HBM traffic is lower)
+  collective term = collective_bytes_per_device / 50 GB/s  (ring-model
+                    bytes from the SPMD HLO, 1 link conservatively)
+
+cost_analysis() of the SPMD-partitioned module is per-device, so dividing
+by per-chip peak equals the spec's global/(chips*peak) form.  MODEL_FLOPS
+= 6*N*D (train) / 2*N*D (inference), N = active params.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+CHIPS = 256
+
+RESULTS = Path(__file__).parent / "results"
+
+
+def load(path: Optional[Path] = None) -> List[Dict]:
+    path = path or (RESULTS / "dryrun_single_pod.json")
+    if not path.exists():
+        return []
+    return json.loads(path.read_text())
+
+
+def terms(rec: Dict) -> Optional[Dict]:
+    if not rec.get("ok"):
+        return None
+    flops = rec.get("hlo_flops", rec.get("hlo_flops_raw", 0.0))
+    byts = rec.get("hlo_bytes", rec.get("hlo_bytes_raw", 0.0))
+    coll = rec.get("collectives", rec.get("collectives_raw", {}))
+    coll_bytes = sum(v["bytes"] for v in coll.values())
+    t_c = flops / PEAK_FLOPS
+    t_m = byts / HBM_BW
+    t_n = coll_bytes / LINK_BW
+    dom = max(("compute", t_c), ("memory", t_m), ("collective", t_n),
+              key=lambda kv: kv[1])
+    model_flops_dev = rec["model_flops"] / CHIPS
+    return {
+        "arch": rec["arch"],
+        "shape": rec["shape"],
+        "mesh": rec["mesh"],
+        "compute_s": t_c,
+        "memory_s": t_m,
+        "collective_s": t_n,
+        "dominant": dom[0],
+        "bound_s": dom[1],
+        "model_flops_dev": model_flops_dev,
+        "useful_ratio": model_flops_dev / flops if flops else 0.0,
+        "roofline_frac": t_c / dom[1] if dom[1] else 0.0,
+        "coll_detail": coll,
+        "micro_batches": rec.get("micro_batches", 1),
+        "memory_rec": rec.get("memory", {}),
+    }
+
+
+def table(path: Optional[Path] = None) -> List[Dict]:
+    out = []
+    for rec in load(path):
+        t = terms(rec)
+        if t:
+            out.append(t)
+    out.sort(key=lambda r: (r["arch"], r["shape"]))
+    return out
+
+
+def run():
+    """Benchmark-harness entry: one CSV row per dry-run cell."""
+    from benchmarks.common import row
+
+    rows = []
+    tab = table()
+    if not tab:
+        return [row("roofline/missing", 0.0,
+                    "run `python -m repro.launch.dryrun --all` first")]
+    for t in tab:
+        rows.append(row(
+            f"roofline/{t['arch']}/{t['shape']}",
+            t["bound_s"] * 1e6,
+            f"compute_s={t['compute_s']:.4f} memory_s={t['memory_s']:.4f} "
+            f"collective_s={t['collective_s']:.4f} dom={t['dominant']} "
+            f"useful={t['useful_ratio']:.2f} "
+            f"roofline_frac={t['roofline_frac']:.2f}",
+        ))
+    return rows
+
+
+def print_markdown(path: Optional[Path] = None) -> str:
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | dominant | "
+        "MODEL/HLO | roofline frac |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for t in table(path):
+        lines.append(
+            f"| {t['arch']} | {t['shape']} | {t['compute_s']:.4f} | "
+            f"{t['memory_s']:.4f} | {t['collective_s']:.4f} | {t['dominant']} | "
+            f"{t['useful_ratio']:.2f} | {t['roofline_frac']:.2f} |"
+        )
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(print_markdown())

@@ -1,0 +1,96 @@
+"""Batched serving example: decode with a KV cache + serving-state CP.
+
+Loads a (reduced) model, prefills a batch of prompts, decodes tokens with
+the jitted serve_step, checkpoints the serving state (params + KV cache +
+positions) through SCR mid-stream, kills a node, and resumes decoding
+from the checkpoint — byte-identical continuation tokens.
+
+  PYTHONPATH=src python examples/serve.py [--arch minicpm3-4b]
+"""
+
+import argparse
+import tempfile
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.cluster.topology import VirtualCluster
+from repro.configs import get_config
+from repro.core.scr import SCRManager, Strategy
+from repro.memory.tiers import MemoryHierarchy
+from repro.models.registry import get_model
+from repro.train.step import make_serve_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="minicpm3-4b")
+    ap.add_argument("--tokens", type=int, default=24)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    model = get_model(cfg)
+    batch, max_len = 4, 64
+
+    params = model.init(jax.random.PRNGKey(0), cfg)
+    cache = model.init_cache(cfg, batch, max_len)
+    serve_step = jax.jit(make_serve_step(cfg, model))
+
+    # prefill a short prompt token-by-token (tiny model: keep it simple)
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (batch, 8), 0,
+                                cfg.vocab_size, jnp.int32)
+    toks = prompt[:, 0]
+    for pos in range(8):
+        nxt, cache = serve_step(params, cache, prompt[:, pos], jnp.int32(pos))
+    generated = [np.asarray(nxt)]
+
+    # decode half the stream, checkpoint the serving state, decode the rest
+    half = args.tokens // 2
+    pos = 8
+    for _ in range(half):
+        nxt, cache = serve_step(params, cache, nxt, jnp.int32(pos))
+        generated.append(np.asarray(nxt))
+        pos += 1
+
+    root = Path(tempfile.mkdtemp(prefix="deeper_serve_"))
+    cluster = VirtualCluster(4, 4, root=root)
+    hierarchy = MemoryHierarchy(cluster)
+    scr = SCRManager(cluster, hierarchy, strategy=Strategy.XOR, procs_per_node=2)
+    serving_state = {"cache": jax.device_get(cache), "last": np.asarray(nxt),
+                     "pos": np.int32(pos)}
+    scr.save(pos, serving_state)
+
+    # continue to the end (reference stream)
+    ref = []
+    nxt_ref, cache_ref, p = nxt, cache, pos
+    for _ in range(args.tokens - half):
+        nxt_ref, cache_ref = serve_step(params, cache_ref, nxt_ref, jnp.int32(p))
+        ref.append(np.asarray(nxt_ref))
+        p += 1
+
+    # node dies; restore serving state and replay the remainder
+    cluster.fail(1)
+    cluster.recover(1)
+    hierarchy.invalidate(1)
+    restored, _ = scr.restore(serving_state)
+    nxt2 = jnp.asarray(restored["last"])
+    cache2 = jax.tree_util.tree_map(jnp.asarray, restored["cache"])
+    p2 = int(restored["pos"])
+    out = []
+    for _ in range(args.tokens - half):
+        nxt2, cache2 = serve_step(params, cache2, nxt2, jnp.int32(p2))
+        out.append(np.asarray(nxt2))
+        p2 += 1
+
+    assert all(np.array_equal(a, b) for a, b in zip(ref, out)), \
+        "post-restore decode diverged"
+    print(f"decoded {args.tokens} tokens/seq x {batch} seqs on {cfg.name}")
+    print("OK: serving state survived a node loss (XOR reconstruction); "
+          "resumed stream is byte-identical.")
+    cluster.teardown()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+from repro.cluster.topology import (
+    Module,
+    NodeState,
+    Node,
+    VirtualCluster,
+    NodeFailure,
+)
+
+__all__ = ["Module", "NodeState", "Node", "VirtualCluster", "NodeFailure"]

@@ -1,0 +1,22 @@
+"""starcoder2-7b [dense] — arXiv:2402.19173.
+
+32L d_model=4608 36H (GQA kv=4) d_ff=18432 vocab=49152; RoPE, GQA,
+layer-norm + non-gated GELU MLP (StarCoder2 uses a classic MLP).
+"""
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="starcoder2-7b",
+    family="dense",
+    n_layers=32,
+    d_model=4608,
+    n_heads=36,
+    n_kv_heads=4,
+    d_ff=18432,
+    vocab_size=49152,
+    head_dim=128,
+    norm="layernorm",
+    act="gelu",
+    rope_theta=1e5,
+)

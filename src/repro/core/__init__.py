@@ -1,0 +1,25 @@
+"""The paper's primary contribution: DEEP-ER I/O + resiliency stack."""
+
+from repro.core.scr import SCRManager, Strategy, CheckpointRecord, FabricSpec, EXTOLL, TPU_ICI
+from repro.core.nam import NAMDevice, make_nam
+from repro.core.tasks import TaskRuntime, TaskError, TaskStats
+from repro.core.offload import OffloadEngine, ModuleMesh, split_mesh
+from repro.core import parity
+
+__all__ = [
+    "SCRManager",
+    "Strategy",
+    "CheckpointRecord",
+    "FabricSpec",
+    "EXTOLL",
+    "TPU_ICI",
+    "NAMDevice",
+    "make_nam",
+    "TaskRuntime",
+    "TaskError",
+    "TaskStats",
+    "OffloadEngine",
+    "ModuleMesh",
+    "split_mesh",
+    "parity",
+]

@@ -1,0 +1,108 @@
+"""Cluster<->Booster offload over mesh sub-grids (DEEP-ER §III-A/B).
+
+The Cluster-Booster architecture lets an application split itself across
+two heterogeneous modules connected by one fabric: e.g. xPic runs its
+field solver on the Cluster and offloads the particle solver to the
+Booster.  DEEP-ER realizes this with MPI_Comm_spawn + the OmpSs offload
+pragma; the TPU-native equivalent is *device sub-grids of one mesh*:
+
+  * the global mesh's `pod`/`data` axes are partitioned into module
+    sub-meshes (CLUSTER rows / BOOSTER rows),
+  * "offload" = jit-compiling the task onto the target sub-mesh's devices
+    and transferring its inputs across (the fabric hop),
+  * results come back as committed device arrays on the source module.
+
+Because resources are reserved independently per module (the paper's key
+claim vs. accelerated nodes), the two solvers can be sized independently:
+any split of mesh rows works, no 1:1 host/accelerator coupling.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.cluster.topology import Module, VirtualCluster
+
+
+@dataclasses.dataclass
+class ModuleMesh:
+    """A module's slice of the global device grid."""
+
+    module: Module
+    mesh: Mesh
+
+    def sharding(self, spec: P) -> NamedSharding:
+        return NamedSharding(self.mesh, spec)
+
+
+def split_mesh(mesh: Mesh, n_cluster_rows: int, axis: str = "data") -> Dict[Module, ModuleMesh]:
+    """Partition a mesh along `axis` into CLUSTER and BOOSTER sub-meshes.
+
+    The leading `n_cluster_rows` slices along `axis` become the Cluster
+    module, the rest the Booster — mirroring the prototype's 16+8 split.
+    """
+    axis_idx = list(mesh.axis_names).index(axis)
+    devs = np.asarray(mesh.devices)
+    n_total = devs.shape[axis_idx]
+    if not (0 < n_cluster_rows < n_total):
+        raise ValueError(f"need 0 < n_cluster_rows < {n_total}")
+    take = [slice(None)] * devs.ndim
+    take[axis_idx] = slice(0, n_cluster_rows)
+    cluster_devs = devs[tuple(take)]
+    take[axis_idx] = slice(n_cluster_rows, None)
+    booster_devs = devs[tuple(take)]
+    return {
+        Module.CLUSTER: ModuleMesh(Module.CLUSTER, Mesh(cluster_devs, mesh.axis_names)),
+        Module.BOOSTER: ModuleMesh(Module.BOOSTER, Mesh(booster_devs, mesh.axis_names)),
+    }
+
+
+class OffloadEngine:
+    """Spawn-like offload of jitted computations onto a module sub-mesh."""
+
+    def __init__(self, modules: Dict[Module, ModuleMesh]):
+        self.modules = modules
+        self._cache: Dict[Tuple, Any] = {}
+
+    def offload(
+        self,
+        fn: Callable[..., Any],
+        target: Module,
+        *args: Any,
+        in_specs: Optional[Sequence[P]] = None,
+        out_specs: Optional[P] = None,
+        donate: bool = False,
+    ) -> Any:
+        """Run `fn(*args)` on the target module's sub-mesh.
+
+        Inputs are re-sharded (the Cluster->Booster fabric transfer);
+        outputs stay committed on the target so chained offloads don't
+        bounce through the source module.
+        """
+        mm = self.modules[target]
+        in_specs = list(in_specs or [P()] * len(args))
+        placed = [
+            jax.device_put(a, mm.sharding(s)) for a, s in zip(args, in_specs)
+        ]
+        key = (fn, target, mm.mesh.shape_tuple)
+        jitted = self._cache.get(key)
+        if jitted is None:
+            kw = {}
+            if out_specs is not None:
+                kw["out_shardings"] = mm.sharding(out_specs)
+            if donate:
+                kw["donate_argnums"] = tuple(range(len(args)))
+            jitted = jax.jit(fn, **kw)
+            self._cache[key] = jitted
+        with mm.mesh:
+            return jitted(*placed)
+
+    def gather(self, module_result: Any, target: Module, spec: P = P()) -> Any:
+        """Bring a result back to another module (the return fabric hop)."""
+        mm = self.modules[target]
+        return jax.device_put(module_result, mm.sharding(spec))

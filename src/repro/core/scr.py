@@ -1,0 +1,551 @@
+"""SCR-style multi-level checkpoint/restart (DEEP-ER §III-D1).
+
+Implements the paper's full strategy lattice over the VirtualCluster +
+MemoryHierarchy substrate:
+
+  SINGLE   — node-local NVM only; survives transient (process) failures.
+  PARTNER  — stock SCR_PARTNER: write local, *re-read* from local storage,
+             send to partner node, partner writes one file per process.
+  BUDDY    — DEEP-ER enhancement: SIONlib streams the data directly from
+             memory to the buddy (no local re-read) and bundles all
+             processes of a node into ONE container file on the buddy.
+  XOR      — stock SCR Distributed-XOR: RAID-5-rotated parity blocks,
+             each node stores parity of size |F|/(G-1) on its own NVM.
+  NAM_XOR  — DEEP-ER enhancement: plain group parity computed *on the NAM*
+             (near-memory FPGA logic) and stored there, off the failure
+             domain; nodes only trigger the pull.
+
+Every strategy additionally drains checkpoints asynchronously to global
+storage through the BeeOND cache layer every ``flush_every`` checkpoints
+(the multi-level part: NVM for frequent/fast, PFS for rare/durable).
+
+The manager is also a *performance model*: each save returns modelled
+foreground/background seconds derived from the tier and fabric specs, so
+the benchmark harness can reproduce the paper's Figs 4, 8, 9 at paper
+scale without the paper's hardware.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+import json
+import threading
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from repro.cluster.topology import NodeFailure, NodeState, VirtualCluster
+from repro.core import parity
+from repro.core.nam import NAMDevice
+from repro.io.beeond import CacheFS
+from repro.io.serialization import (
+    StateBlob,
+    deserialize_state,
+    join_fragments,
+    partition_blob,
+    serialize_state,
+)
+from repro.io.sion import SionContainer
+from repro.memory.tiers import MemoryHierarchy, TierSpec
+
+
+class Strategy(str, enum.Enum):
+    SINGLE = "single"
+    PARTNER = "partner"
+    BUDDY = "buddy"
+    XOR = "xor"
+    NAM_XOR = "nam_xor"
+
+
+@dataclasses.dataclass(frozen=True)
+class FabricSpec:
+    """Inter-node fabric (EXTOLL Tourmalet in the prototype)."""
+
+    bandwidth: float = 12.5e9   # 100 Gbit/s
+    latency_s: float = 1.5e-6
+
+    def time(self, nbytes: int, concurrent: int = 1) -> float:
+        return self.latency_s + nbytes * concurrent / self.bandwidth
+
+
+EXTOLL = FabricSpec()
+TPU_ICI = FabricSpec(bandwidth=50e9, latency_s=1e-6)
+
+
+@dataclasses.dataclass
+class CheckpointRecord:
+    step: int
+    strategy: Strategy
+    total_bytes: int
+    node_frag_bytes: int
+    foreground_s: float    # modelled time on the application's critical path
+    background_s: float    # modelled time of offloaded/async work
+    drained: bool
+
+
+def _desc_key(step: int) -> str:
+    return f"scr/desc/step{step:08d}.json"
+
+
+def _local_key(step: int, proc: int) -> str:
+    return f"ckpt/step{step:08d}/proc{proc:03d}.bin"
+
+
+def _container_key(step: int) -> str:
+    return f"ckpt/step{step:08d}/node.sion"
+
+
+def _partner_key(step: int, origin: int, proc: int) -> str:
+    return f"ckpt/step{step:08d}/partner{origin:05d}_proc{proc:03d}.bin"
+
+
+def _buddy_container_key(step: int, origin: int) -> str:
+    return f"ckpt/step{step:08d}/buddy{origin:05d}.sion"
+
+
+def _parity_key(step: int) -> str:
+    return f"ckpt/step{step:08d}/xor_parity.bin"
+
+
+def _nam_region(step: int, group_id: int) -> str:
+    return f"nam_parity/step{step:08d}/group{group_id:03d}"
+
+
+def _global_key(step: int, node: int) -> str:
+    return f"ckpt/step{step:08d}/node{node:05d}.bin"
+
+
+class SCRManager:
+    def __init__(
+        self,
+        cluster: VirtualCluster,
+        hierarchy: MemoryHierarchy,
+        nam: Optional[NAMDevice] = None,
+        strategy: Strategy = Strategy.BUDDY,
+        procs_per_node: int = 4,
+        keep: int = 2,
+        flush_every: int = 1,
+        fabric: FabricSpec = EXTOLL,
+        async_redundancy: bool = False,
+    ):
+        self.cluster = cluster
+        self.hierarchy = hierarchy
+        self.nam = nam
+        self.strategy = Strategy(strategy)
+        self.procs_per_node = int(procs_per_node)
+        self.keep = keep
+        self.flush_every = flush_every
+        self.fabric = fabric
+        self.async_redundancy = async_redundancy
+        self._save_count = 0
+        self._bg_thread: Optional[threading.Thread] = None
+        self._bg_error: Optional[BaseException] = None
+        if self.strategy == Strategy.NAM_XOR and nam is None:
+            raise ValueError("NAM_XOR strategy requires a NAMDevice")
+
+    # ------------------------------------------------------------------ #
+    # helpers
+    # ------------------------------------------------------------------ #
+
+    def _nvm(self, rank: int):
+        return self.hierarchy.nvm(rank)
+
+    def _node_fragment(self, frags: List[bytes], node: int) -> bytes:
+        p = self.procs_per_node
+        return b"".join(frags[node * p : (node + 1) * p])
+
+    def wait(self) -> None:
+        """Barrier on the async redundancy/drain worker."""
+        if self._bg_thread is not None:
+            self._bg_thread.join()
+            self._bg_thread = None
+        if self._bg_error is not None:
+            err, self._bg_error = self._bg_error, None
+            raise IOError("async checkpoint redundancy failed") from err
+
+    # ------------------------------------------------------------------ #
+    # save
+    # ------------------------------------------------------------------ #
+
+    def save(self, step: int, state: Any, meta: Optional[Dict] = None) -> CheckpointRecord:
+        """Checkpoint `state` at `step` using the configured strategy."""
+        self.wait()  # previous async redundancy must land first (double-buffer)
+        blob = serialize_state(state, step=step, meta=meta)
+        n_nodes = self.cluster.size
+        frags = partition_blob(blob.data, n_nodes * self.procs_per_node)
+        proc_bytes = len(frags[0])
+        node_bytes = proc_bytes * self.procs_per_node
+
+        # Phase 1 (critical path): every node writes its own data to NVM.
+        fg = self._write_local(step, frags)
+
+        # Phase 2: strategy-specific redundancy (optionally async).
+        def redundancy() -> float:
+            if self.strategy == Strategy.SINGLE:
+                return 0.0
+            if self.strategy == Strategy.PARTNER:
+                return self._partner_redundancy(step, node_bytes)
+            if self.strategy == Strategy.BUDDY:
+                return self._buddy_redundancy(step, frags, node_bytes)
+            if self.strategy == Strategy.XOR:
+                return self._xor_redundancy(step, frags, node_bytes)
+            if self.strategy == Strategy.NAM_XOR:
+                return self._nam_xor_redundancy(step, frags, node_bytes)
+            raise AssertionError(self.strategy)
+
+        self._save_count += 1
+        drain = self.flush_every > 0 and (self._save_count % self.flush_every == 0)
+        bg = 0.0
+        if self.async_redundancy:
+            def _bg():
+                try:
+                    redundancy()
+                    if drain:
+                        self._drain_to_global(step, frags)
+                except BaseException as e:  # surfaced at wait()
+                    self._bg_error = e
+
+            self._bg_thread = threading.Thread(target=_bg, daemon=True)
+            self._bg_thread.start()
+        else:
+            fg += redundancy()
+            if drain:
+                bg += self._drain_to_global(step, frags)
+
+        # descriptor goes to global storage (tiny, durable, like SCR's index)
+        desc = {
+            "step": int(step),
+            "strategy": self.strategy.value,
+            "n_nodes": n_nodes,
+            "procs_per_node": self.procs_per_node,
+            "proc_bytes": proc_bytes,
+            "node_frag_bytes": node_bytes,
+            "drained": bool(drain),
+            "manifest": blob.manifest,
+        }
+        self.hierarchy.global_tier.put(_desc_key(step), json.dumps(desc).encode())
+
+        self._prune(step)
+        return CheckpointRecord(
+            step=step,
+            strategy=self.strategy,
+            total_bytes=blob.nbytes,
+            node_frag_bytes=node_bytes,
+            foreground_s=fg,
+            background_s=bg,
+            drained=drain,
+        )
+
+    # -- phase 1: local write ------------------------------------------- #
+
+    def _write_local(self, step: int, frags: List[bytes]) -> float:
+        """All nodes write concurrently; modelled time = max over nodes."""
+        per_node = 0.0
+        p = self.procs_per_node
+        use_container = self.strategy in (Strategy.BUDDY, Strategy.NAM_XOR)
+        for node in self.cluster.up_ranks():
+            nvm = self._nvm(node)
+            if use_container:
+                # SIONlib path: all procs of the node share one container
+                c = SionContainer()
+                for j in range(p):
+                    c.write_chunk(node * p + j, f"proc{j}", frags[node * p + j])
+                t = c.store(nvm, _container_key(step))
+            else:
+                t = 0.0
+                for j in range(p):
+                    t += nvm.put(_local_key(step, j), frags[node * p + j])
+            per_node = max(per_node, t)
+        return per_node
+
+    def _read_own(self, step: int, node: int) -> bytes:
+        """Read this node's fragment back from its NVM (if alive)."""
+        nvm = self._nvm(node)
+        if self.strategy in (Strategy.BUDDY, Strategy.NAM_XOR):
+            c = SionContainer.open(nvm, _container_key(step))
+            p = self.procs_per_node
+            return b"".join(c.read_chunk(node * p + j, f"proc{j}") for j in range(p))
+        return b"".join(
+            nvm.get(_local_key(step, j)) for j in range(self.procs_per_node)
+        )
+
+    # -- strategy redundancy --------------------------------------------- #
+
+    def _partner_redundancy(self, step: int, node_bytes: int) -> float:
+        """Stock SCR_PARTNER: local re-read -> fabric -> partner writes p files."""
+        p = self.procs_per_node
+        per_node = 0.0
+        for node in self.cluster.up_ranks():
+            buddy = self.cluster.buddy_of(node)
+            nvm = self._nvm(node)
+            buddy_nvm = self._nvm(buddy)
+            t = 0.0
+            for j in range(p):
+                data = nvm.get(_local_key(step, j))        # the re-read SCR does
+                t += nvm.spec.read_time(len(data))
+                t += self.fabric.time(len(data))
+                t += buddy_nvm.put(_partner_key(step, node, j), data)
+            per_node = max(per_node, t)
+        return per_node
+
+    def _buddy_redundancy(self, step: int, frags: List[bytes], node_bytes: int) -> float:
+        """DEEP-ER Buddy: stream from memory (no re-read), one SION container."""
+        p = self.procs_per_node
+        per_node = 0.0
+        for node in self.cluster.up_ranks():
+            buddy = self.cluster.buddy_of(node)
+            buddy_nvm = self._nvm(buddy)
+            c = SionContainer()
+            for j in range(p):
+                c.write_chunk(node * p + j, f"proc{j}", frags[node * p + j])
+            t = self.fabric.time(node_bytes)
+            t += c.store(buddy_nvm, _buddy_container_key(step, node))
+            per_node = max(per_node, t)
+        return per_node
+
+    def _xor_redundancy(self, step: int, frags: List[bytes], node_bytes: int) -> float:
+        """Stock SCR Distributed-XOR: RAID-5 parity blocks on each node's NVM.
+
+        Like SCR_PARTNER, stock SCR computes parity from the checkpoint
+        *files*: each node re-reads its fragment from NVM, reduce-scatters
+        XOR over the fabric, and writes its parity block back to NVM.  The
+        NVMe round-trip is the overhead the NAM offload removes (Fig 9).
+        """
+        per_node = 0.0
+        for group in self.cluster.xor_groups:
+            node_frags = [self._node_fragment(frags, n) for n in group]
+            blocks = parity.encode_xor_group(node_frags)
+            net_t = self.fabric.time(node_bytes)
+            for local_idx, node in enumerate(group):
+                nvm = self._nvm(node)
+                t = nvm.spec.read_time(node_bytes)  # the SCR re-read
+                t += net_t + nvm.put(_parity_key(step), blocks[local_idx])
+                per_node = max(per_node, t)
+        return per_node
+
+    def _nam_xor_redundancy(self, step: int, frags: List[bytes], node_bytes: int) -> float:
+        """DEEP-ER NAM-XOR: the NAM pulls fragments and computes parity."""
+        assert self.nam is not None
+        busy = 0.0
+        for gid, group in enumerate(self.cluster.xor_groups):
+            region = _nam_region(step, gid)
+            if not self.nam.exists(region):
+                try:
+                    self.nam.alloc(region, node_bytes)
+                except MemoryError:
+                    # pool full: evict oldest step's regions, then retry
+                    self._evict_nam_regions(keep_step=step)
+                    self.nam.alloc(region, node_bytes)
+            node_frags = [self._node_fragment(frags, n) for n in group]
+            busy = max(
+                busy,
+                self.nam.offload_parity(
+                    region, [lambda f=f: f for f in node_frags], node_bytes
+                ),
+            )
+        # foreground cost on the nodes: just the trigger (the NAM pulls);
+        # when synchronous, the caller waits for the NAM to finish.
+        if self.async_redundancy:
+            return self.fabric.latency_s
+        return self.fabric.latency_s + busy
+
+    def _evict_nam_regions(self, keep_step: int) -> None:
+        for key in list(self.nam.tier.keys()):
+            if key.startswith("nam_parity/") and f"step{keep_step:08d}" not in key:
+                self.nam.tier.delete(key)
+        for name in list(self.nam._regions):
+            if name.startswith("nam_parity/") and f"step{keep_step:08d}" not in name:
+                self.nam.free(name)
+
+    # -- global drain (BeeOND async level) -------------------------------- #
+
+    def _drain_to_global(self, step: int, frags: List[bytes]) -> float:
+        t = 0.0
+        streams = max(1, len(self.cluster.up_ranks()))
+        for node in self.cluster.up_ranks():
+            data = self._node_fragment(frags, node)
+            t = max(t, self.hierarchy.global_tier.put(_global_key(step, node), data,
+                                                      streams=streams))
+        return t
+
+    # ------------------------------------------------------------------ #
+    # restore
+    # ------------------------------------------------------------------ #
+
+    def available_steps(self) -> List[int]:
+        steps = []
+        for key in self.hierarchy.global_tier.keys():
+            if key.startswith("scr/desc/"):
+                steps.append(int(key.split("step")[1].split(".")[0]))
+        return sorted(steps)
+
+    def _descriptor(self, step: int) -> Dict:
+        raw = self.hierarchy.global_tier.get(_desc_key(step))
+        return json.loads(raw.decode())
+
+    def restore(
+        self,
+        like: Any,
+        step: Optional[int] = None,
+        rebuild: bool = True,
+    ) -> Tuple[Any, int]:
+        """Recover the newest (or given) checkpoint; reconstructs fragments
+        lost to node failures via the strategy's redundancy data."""
+        self.wait()
+        candidates = [step] if step is not None else list(reversed(self.available_steps()))
+        last_err: Optional[BaseException] = None
+        for s in candidates:
+            try:
+                return self._restore_step(like, s, rebuild), s
+            except (KeyError, IOError, RuntimeError, NodeFailure) as e:
+                last_err = e
+                continue
+        raise IOError("no recoverable checkpoint found") from last_err
+
+    def _restore_step(self, like: Any, step: int, rebuild: bool) -> Any:
+        desc = self._descriptor(step)
+        n_nodes = desc["n_nodes"]
+        strategy = Strategy(desc["strategy"])
+        node_frags: Dict[int, bytes] = {}
+        missing: List[int] = []
+        for node in range(n_nodes):
+            try:
+                node_frags[node] = self._read_own_for(desc, step, node)
+            except (KeyError, IOError, NodeFailure):
+                missing.append(node)
+
+        for node in missing:
+            node_frags[node] = self._recover_fragment(desc, step, node, node_frags)
+            if rebuild and self.cluster.node(node).is_up:
+                self._rebuild_local(desc, step, node, node_frags[node])
+
+        frag_list = [node_frags[n] for n in range(n_nodes)]
+        data = join_fragments(frag_list, desc["manifest"]["total_bytes"])
+        blob = StateBlob(data=data, manifest=desc["manifest"])
+        return deserialize_state(blob, like)
+
+    def _read_own_for(self, desc: Dict, step: int, node: int) -> bytes:
+        nvm = self._nvm(node)  # raises NodeFailure if node down
+        p = desc["procs_per_node"]
+        if Strategy(desc["strategy"]) in (Strategy.BUDDY, Strategy.NAM_XOR):
+            c = SionContainer.open(nvm, _container_key(step))
+            return b"".join(c.read_chunk(node * p + j, f"proc{j}") for j in range(p))
+        return b"".join(nvm.get(_local_key(step, j)) for j in range(p))
+
+    def _recover_fragment(
+        self, desc: Dict, step: int, node: int, have: Dict[int, bytes]
+    ) -> bytes:
+        strategy = Strategy(desc["strategy"])
+        p = desc["procs_per_node"]
+        node_bytes = desc["node_frag_bytes"]
+
+        # 1) strategy-specific redundancy
+        if strategy == Strategy.PARTNER:
+            buddy = self.cluster.buddy_of(node)
+            try:
+                buddy_nvm = self._nvm(buddy)
+                return b"".join(
+                    buddy_nvm.get(_partner_key(step, node, j)) for j in range(p)
+                )
+            except (KeyError, NodeFailure):
+                pass
+        elif strategy == Strategy.BUDDY:
+            buddy = self.cluster.buddy_of(node)
+            try:
+                buddy_nvm = self._nvm(buddy)
+                c = SionContainer.open(buddy_nvm, _buddy_container_key(step, node))
+                return b"".join(
+                    c.read_chunk(node * p + j, f"proc{j}") for j in range(p)
+                )
+            except (KeyError, IOError, NodeFailure):
+                pass
+        elif strategy == Strategy.XOR:
+            try:
+                return self._recover_via_xor(desc, step, node, have)
+            except (KeyError, RuntimeError, NodeFailure):
+                pass
+        elif strategy == Strategy.NAM_XOR:
+            try:
+                return self._recover_via_nam(desc, step, node, have)
+            except (KeyError, RuntimeError, NodeFailure):
+                pass
+
+        # 2) last resort: the drained copy on global storage
+        if desc.get("drained"):
+            return self.hierarchy.global_tier.get(_global_key(step, node))
+        raise IOError(f"fragment of node {node} unrecoverable for step {step}")
+
+    def _recover_via_xor(
+        self, desc: Dict, step: int, node: int, have: Dict[int, bytes]
+    ) -> bytes:
+        group = self.cluster.xor_group_of(node)
+        g = len(group)
+        local_idx = group.index(node)
+        frag_map: Dict[int, bytes] = {}
+        parity_map: Dict[int, bytes] = {}
+        for i, member in enumerate(group):
+            if member == node:
+                continue
+            frag_map[i] = have.get(member) or self._read_own_for(desc, step, member)
+            parity_map[i] = self._nvm(member).get(_parity_key(step))
+        return parity.reconstruct_xor_group(
+            local_idx, frag_map, parity_map, g, desc["node_frag_bytes"]
+        )
+
+    def _recover_via_nam(
+        self, desc: Dict, step: int, node: int, have: Dict[int, bytes]
+    ) -> bytes:
+        assert self.nam is not None, "NAM_XOR restore requires the NAM device"
+        group = self.cluster.xor_group_of(node)
+        gid = self.cluster.xor_groups.index(group)
+        local_idx = group.index(node)
+        frag_map: Dict[int, bytes] = {}
+        for i, member in enumerate(group):
+            if member == node:
+                continue
+            frag_map[i] = have.get(member) or self._read_own_for(desc, step, member)
+        nam_parity = self.nam.get(_nam_region(step, gid))
+        return parity.reconstruct_from_nam(local_idx, frag_map, nam_parity, len(group))
+
+    def _rebuild_local(self, desc: Dict, step: int, node: int, fragment: bytes) -> None:
+        """Re-establish the recovered node's local copy (SCR rebuild)."""
+        p = desc["procs_per_node"]
+        piece = len(fragment) // p
+        nvm = self._nvm(node)
+        if Strategy(desc["strategy"]) in (Strategy.BUDDY, Strategy.NAM_XOR):
+            c = SionContainer()
+            for j in range(p):
+                c.write_chunk(node * p + j, f"proc{j}", fragment[j * piece : (j + 1) * piece])
+            c.store(nvm, _container_key(step))
+        else:
+            for j in range(p):
+                nvm.put(_local_key(step, j), fragment[j * piece : (j + 1) * piece])
+
+    # ------------------------------------------------------------------ #
+    # retention
+    # ------------------------------------------------------------------ #
+
+    def _prune(self, newest_step: int) -> None:
+        if self.keep <= 0:
+            return
+        steps = self.available_steps()
+        for old in steps[: max(0, len(steps) - self.keep)]:
+            self._delete_step(old)
+
+    def _delete_step(self, step: int) -> None:
+        prefix = f"ckpt/step{step:08d}/"
+        for node in self.cluster.up_ranks():
+            try:
+                nvm = self._nvm(node)
+            except NodeFailure:
+                continue
+            for key in list(nvm.keys()):
+                if key.startswith(prefix):
+                    nvm.delete(key)
+        gt = self.hierarchy.global_tier
+        for key in list(gt.keys()):
+            if key.startswith(prefix) or key == _desc_key(step):
+                gt.delete(key)
+        if self.nam is not None:
+            for key in list(self.nam.tier.keys()):
+                if key.startswith(f"nam_parity/step{step:08d}"):
+                    self.nam.tier.delete(key)

@@ -1,0 +1,15 @@
+from repro.distributed.sharding import (
+    ShardingRules,
+    TRAIN_RULES,
+    DECODE_RULES,
+    specs_from_axes,
+    shardings_for,
+)
+
+__all__ = [
+    "ShardingRules",
+    "TRAIN_RULES",
+    "DECODE_RULES",
+    "specs_from_axes",
+    "shardings_for",
+]

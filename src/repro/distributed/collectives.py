@@ -1,0 +1,59 @@
+"""TPU-native collectives for the DEEP-ER parity path.
+
+The NAM's near-memory XOR (§II-B2) maps onto TPU as an **on-device XOR
+reduce over ICI**: each device contributes its checkpoint block; a
+recursive-halving butterfly of ``ppermute`` rounds combines blocks with
+the Pallas XOR kernel (bitwise ops have no psum primitive, so the
+butterfly is built explicitly).  log2(N) rounds, ~N bytes moved per
+device total — the same "parity computed at fabric speed, storage path
+untouched" property the NAM provides.
+
+``xor_all_reduce`` runs inside shard_map over one mesh axis and returns
+the XOR of every shard's block on all shards (parity everywhere =
+any single lost shard is reconstructible from any survivor's copy).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+
+def xor_all_reduce(x: jax.Array, axis_name: str, use_pallas: bool | None = None):
+    """Butterfly XOR all-reduce over `axis_name` (power-of-two size).
+
+    x: int32 array, identical shape on every shard.
+    """
+    n = jax.lax.psum(1, axis_name)
+    idx = jax.lax.axis_index(axis_name)
+    step = 1
+    while step < n:
+        partner_perm = []
+        for i in range(n):
+            partner_perm.append((i, i ^ step))
+        other = jax.lax.ppermute(x, axis_name, partner_perm)
+        stacked = jnp.stack([x, other])
+        x = ops.xor_reduce(stacked, use_pallas=use_pallas) \
+            if stacked.ndim == 3 and stacked.shape[-1] == 128 \
+            else jnp.bitwise_xor(x, other)
+        step *= 2
+    return x
+
+
+def xor_reduce_to(x: jax.Array, axis_name: str, root: int = 0):
+    """Butterfly XOR reduce; result is only guaranteed on `root` (cheaper
+    trees are possible, but the all-reduce form doubles as replication —
+    which is what checkpoint parity wants anyway)."""
+    return xor_all_reduce(x, axis_name)
+
+
+def hierarchical_psum(x: jax.Array, inner: str = "data", outer: str = "pod"):
+    """Two-level gradient reduction: reduce-scatter-equivalent psum inside
+    a pod, then the (slow) cross-pod hop, matching the Cluster-Booster
+    bandwidth asymmetry.  With jit+GSPMD a flat psum over both axes is
+    equivalent; this explicit form is for shard_map islands where the
+    schedule must pin the cross-pod traffic (e.g. to compress it first)."""
+    x = jax.lax.psum(x, inner)
+    return jax.lax.psum(x, outer)

@@ -1,0 +1,139 @@
+"""Logical-axis -> mesh-axis sharding rules (DP/TP/EP/SP + pod axis).
+
+Models annotate every parameter/cache dim with a *logical* name
+(models/layers.py LeafSpec.axes); this module maps those names onto the
+production mesh:
+
+  batch        -> (pod, data)      data parallelism, hierarchical over pods
+  heads_dh     -> model            attention TP (heads padded to TP degree)
+  kv_heads_dh  -> model            KV heads sharded when divisible ...
+  kv_heads_rep -> None             ... replicated otherwise (GQA kv=4)
+  d_ff         -> model            FFN TP (column/row parallel pairs)
+  d_expert     -> model            TP-inside-experts (fine-grained MoE:
+                                   one psum/layer beats k-way all-to-all)
+  vocab        -> model            embedding + logits sharded
+  kv_seq       -> model            decode KV cache sharded along SEQUENCE
+                                   (flash-decoding combine via GSPMD) —
+                                   this is what makes 32k/500k caches fit
+  layers       -> None             scan dim (stacked params)
+
+``specs_from_axes`` converts a pytree of logical-axis tuples into
+PartitionSpecs; unknown names fail loudly rather than silently
+replicating.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Optional[Tuple[str, ...]]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    rules: Dict[str, Any]
+
+    def spec_for(self, axes: Tuple[Optional[str], ...]) -> P:
+        entries = []
+        for name in axes:
+            if name is None:
+                entries.append(None)
+                continue
+            if name not in self.rules:
+                raise KeyError(f"no sharding rule for logical axis {name!r}")
+            entries.append(self.rules[name])
+        return P(*entries)
+
+
+_COMMON = {
+    "batch": ("pod", "data"),
+    "layers": None,
+    "d_model": None,
+    "d_model2": None,
+    "vocab": "model",
+    "heads_dh": "model",
+    "heads": "model",
+    "kv_heads_dh": "model",
+    "kv_heads_rep": None,
+    "d_ff": "model",
+    "q_lora": None,
+    "kv_lora": None,
+    "experts": None,           # expert-stacked dim replicated ...
+    "d_expert": "model",       # ... hidden dim sharded (TP-inside-experts)
+    "experts_router": None,
+}
+
+TRAIN_RULES = ShardingRules({**_COMMON, "kv_seq": None})
+# decode: KV cache sequence-sharded over `model` => flash-decoding combine
+DECODE_RULES = ShardingRules({**_COMMON, "kv_seq": "model"})
+
+
+def _strip_pod(spec: P, mesh: Mesh) -> P:
+    """Drop mesh axes the current mesh doesn't have (single-pod mode)."""
+    names = set(mesh.axis_names)
+    entries = []
+    for e in spec:
+        if e is None:
+            entries.append(None)
+        elif isinstance(e, tuple):
+            kept = tuple(a for a in e if a in names)
+            entries.append(kept if kept else None)
+        else:
+            entries.append(e if e in names else None)
+    return P(*entries)
+
+
+def specs_from_axes(axes_tree: Any, rules: ShardingRules, mesh: Mesh) -> Any:
+    """Pytree of logical-axis tuples -> pytree of PartitionSpecs."""
+    def conv(axes):
+        return _strip_pod(rules.spec_for(tuple(axes)), mesh)
+
+    return jax.tree_util.tree_map(
+        conv, axes_tree, is_leaf=lambda x: isinstance(x, tuple)
+    )
+
+
+def shardings_for(axes_tree: Any, rules: ShardingRules, mesh: Mesh) -> Any:
+    specs = specs_from_axes(axes_tree, rules, mesh)
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def _axis_size(mesh: Mesh, entry) -> int:
+    if entry is None:
+        return 1
+    names = entry if isinstance(entry, tuple) else (entry,)
+    size = 1
+    for n in names:
+        size *= mesh.shape[n]
+    return size
+
+
+def fit_spec(spec: P, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Replicate dims whose size is not divisible by the assigned mesh
+    axes (e.g. global_batch=1 on a 16-way data axis: long_500k decode)."""
+    entries = []
+    for dim, entry in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if entry is not None and dim % _axis_size(mesh, entry) != 0:
+            entry = None
+        entries.append(entry)
+    return P(*entries)
+
+
+def shardings_for_shapes(
+    axes_tree: Any, shapes_tree: Any, rules: ShardingRules, mesh: Mesh
+) -> Any:
+    """Shape-aware variant: prunes non-divisible axis assignments."""
+    specs = specs_from_axes(axes_tree, rules, mesh)
+    return jax.tree_util.tree_map(
+        lambda s, shp: NamedSharding(mesh, fit_spec(s, shp.shape, mesh)),
+        specs,
+        shapes_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )

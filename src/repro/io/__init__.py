@@ -1,0 +1,21 @@
+from repro.io.serialization import (
+    StateBlob,
+    serialize_state,
+    deserialize_state,
+    partition_blob,
+    join_fragments,
+    fragment_key,
+)
+from repro.io.sion import SionContainer
+from repro.io.beeond import CacheFS
+
+__all__ = [
+    "StateBlob",
+    "serialize_state",
+    "deserialize_state",
+    "partition_blob",
+    "join_fragments",
+    "fragment_key",
+    "SionContainer",
+    "CacheFS",
+]

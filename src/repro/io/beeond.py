@@ -1,0 +1,115 @@
+"""BeeOND-style cache file system (DEEP-ER §III-C).
+
+BeeGFS-on-demand (BeeOND) builds a cache domain from the node-local NVM
+devices in front of the global parallel file system.  Writes land on the
+local tier at NVM speed; a *sync* cache also writes through to global
+storage, an *async* cache drains in the background so the application is
+decoupled from the global-storage bottleneck (the Fig 6 scaling argument:
+local bandwidth is per-node constant, global bandwidth is shared).
+
+``CacheFS`` wraps a (local_tier, global_tier) pair with exactly those two
+modes plus the consistency operations checkpointing needs: ``flush`` (drain
+barrier) and read-through ``get`` with cache fill.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Dict, List, Optional, Tuple
+
+from repro.memory.tiers import MemoryTier
+
+
+class CacheFS:
+    def __init__(
+        self,
+        local: MemoryTier,
+        global_tier: MemoryTier,
+        mode: str = "async",
+        drain_streams: int = 1,
+    ):
+        if mode not in ("sync", "async", "local-only"):
+            raise ValueError(mode)
+        self.local = local
+        self.global_tier = global_tier
+        self.mode = mode
+        self.drain_streams = drain_streams
+        self._q: "queue.Queue[Optional[str]]" = queue.Queue()
+        self._pending: set = set()
+        self._lock = threading.Lock()
+        self._errors: List[BaseException] = []
+        self._drainer: Optional[threading.Thread] = None
+        if mode == "async":
+            self._drainer = threading.Thread(target=self._drain_loop, daemon=True)
+            self._drainer.start()
+
+    # -- write path ------------------------------------------------------ #
+
+    def put(self, key: str, data: bytes, streams: int = 1) -> float:
+        """Write to the cache domain; returns modelled *foreground* seconds.
+
+        sync  : local + global both on the critical path (write-through).
+        async : local only; global write happens on the drain thread.
+        """
+        t = self.local.put(key, data, streams=streams)
+        if self.mode == "sync":
+            t += self.global_tier.put(key, data, streams=streams)
+        elif self.mode == "async":
+            with self._lock:
+                self._pending.add(key)
+            self._q.put(key)
+        return t
+
+    def _drain_loop(self) -> None:
+        while True:
+            key = self._q.get()
+            if key is None:
+                self._q.task_done()
+                return
+            try:
+                data = self.local.get(key, streams=self.drain_streams)
+                self.global_tier.put(key, data, streams=self.drain_streams)
+            except BaseException as e:  # surfaced at flush()
+                self._errors.append(e)
+            finally:
+                with self._lock:
+                    self._pending.discard(key)
+                self._q.task_done()
+
+    def flush(self) -> None:
+        """Barrier: wait until every queued write reached global storage."""
+        if self.mode == "async":
+            self._q.join()
+        if self._errors:
+            err, self._errors = self._errors[0], []
+            raise IOError("async drain failed") from err
+
+    def pending(self) -> int:
+        with self._lock:
+            return len(self._pending)
+
+    # -- read path ------------------------------------------------------- #
+
+    def get(self, key: str, streams: int = 1, fill: bool = True) -> bytes:
+        """Read-through: local hit, else global (optionally filling cache)."""
+        if self.local.exists(key):
+            return self.local.get(key, streams=streams)
+        data = self.global_tier.get(key, streams=streams)
+        if fill:
+            self.local.put(key, data, streams=streams)
+        return data
+
+    def exists(self, key: str) -> bool:
+        return self.local.exists(key) or self.global_tier.exists(key)
+
+    def delete(self, key: str) -> None:
+        self.local.delete(key)
+        self.global_tier.delete(key)
+
+    def close(self) -> None:
+        if self.mode == "async" and self._drainer is not None:
+            self.flush()
+            self._q.put(None)
+            self._drainer.join(timeout=10)
+            self._drainer = None

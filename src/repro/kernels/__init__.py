@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the perf-critical hot spots, with jnp oracles.
+
+xor_parity      — near-memory checkpoint parity (the NAM's FPGA logic)
+flash_attention — blocked causal attention (train/prefill hot spot)
+flash_decode    — seq-sharded KV decode combine (32k/500k caches)
+rwkv6_scan      — chunked WKV6 recurrence (Finch)
+mamba2_ssd      — chunked state-space dual scan (Zamba2)
+
+``ops`` holds the jit'd dispatch wrappers (Pallas on TPU, oracle on CPU);
+``ref`` holds the pure-jnp oracles the test sweeps assert against.
+"""

@@ -1,0 +1,140 @@
+"""Pallas TPU kernel: blocked causal flash attention (fwd).
+
+Grid (B, Hq, nQ, nK); the innermost (nK) dimension is sequential on TPU,
+so the running-softmax statistics live in VMEM scratch across k-steps.
+Causal block-skipping: fully-masked (q_block, k_block) tiles are skipped
+with ``pl.when`` — the jnp fallback computes-then-masks, so this kernel
+does ~2x less attention work on causal shapes (the roofline §Perf item).
+
+GQA is handled in the BlockSpec index maps (query head h reads kv head
+h // group), so K/V are never materialized per-query-head.
+
+VMEM working set per step: q(bq,d) + k/v(bk,d) + acc(bq,dv) + stats —
+defaults (bq=bk=256, d<=256) stay well under 2 MiB.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+STATS_LANES = 128  # m/l scratch lane width (TPU vector lane alignment)
+
+
+def _fa_kernel(
+    q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+    *, scale: float, causal: bool, q_offset: int, bq: int, bk: int,
+    tk: int, nk: int,
+):
+    qi = pl.program_id(2)
+    kj = pl.program_id(3)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    if causal:
+        # skip tiles where every key position is after every query position
+        run = (kj * bk) <= (qi * bq + bq - 1 + q_offset)
+    else:
+        run = kj >= 0  # uniform structure; always true
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)           # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)           # (bk, d)
+        v = v_ref[0, 0]                               # (bk, dv)
+        # zero OOB value rows: p is 0 there, but 0 * garbage != 0
+        v_rows = kj * bk + jax.lax.broadcasted_iota(jnp.int32, v.shape, 0)
+        v = jnp.where(v_rows < tk, v, jnp.zeros_like(v))
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale                                      # (bq, bk)
+        k_pos = kj * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        valid = k_pos < tk
+        if causal:
+            q_pos = (
+                qi * bq
+                + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+                + q_offset
+            )
+            valid = valid & (k_pos <= q_pos)
+        s = jnp.where(valid, s, NEG_INF)
+
+        m_prev = m_scr[...]                            # (bq, 128)
+        m_cur = jnp.max(s, axis=-1, keepdims=True)     # (bq, 1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new[:, :1])
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, -1, keepdims=True)
+        m_scr[...] = m_new
+        pv = jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        acc_scr[...] = acc_scr[...] * corr[:, :1] + pv
+
+    @pl.when(kj == nk - 1)
+    def _fin():
+        l = l_scr[..., :1]
+        o_ref[0, 0] = (acc_scr[...] / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "scale", "block_q", "block_k", "interpret")
+)
+def flash_attention_pallas(
+    q: jax.Array,   # (B, Tq, Hq, D)
+    k: jax.Array,   # (B, Tk, Hkv, D)
+    v: jax.Array,   # (B, Tk, Hkv, Dv)
+    causal: bool = True,
+    scale: Optional[float] = None,
+    block_q: int = 256,
+    block_k: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    b, tq, hq, d = q.shape
+    _, tk, hkv, dv = v.shape
+    assert hq % hkv == 0, (hq, hkv)
+    g = hq // hkv
+    scale = float(d ** -0.5) if scale is None else float(scale)
+    q_offset = tk - tq
+
+    qt = jnp.moveaxis(q, 2, 1)  # (B, Hq, Tq, D)
+    kt = jnp.moveaxis(k, 2, 1)  # (B, Hkv, Tk, D)
+    vt = jnp.moveaxis(v, 2, 1)
+    bq = min(block_q, tq)
+    bk = min(block_k, tk)
+    nq = pl.cdiv(tq, bq)
+    nk = pl.cdiv(tk, bk)
+
+    kernel = functools.partial(
+        _fa_kernel, scale=scale, causal=causal, q_offset=q_offset,
+        bq=bq, bk=bk, tk=tk, nk=nk,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda bi, h, qi, kj: (bi, h, qi, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda bi, h, qi, kj: (bi, h // g, kj, 0)),
+            pl.BlockSpec((1, 1, bk, dv), lambda bi, h, qi, kj: (bi, h // g, kj, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, dv), lambda bi, h, qi, kj: (bi, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, nq * bq, dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, STATS_LANES), jnp.float32),
+            pltpu.VMEM((bq, STATS_LANES), jnp.float32),
+            pltpu.VMEM((bq, dv), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return jnp.moveaxis(out[:, :, :tq], 1, 2)  # (B, Tq, Hq, Dv)

@@ -1,0 +1,246 @@
+"""Jit'd dispatch wrappers for the Pallas kernels.
+
+Each op picks the best implementation for the current backend:
+
+  * TPU      -> the Pallas kernel (VMEM-tiled),
+  * CPU/GPU  -> the chunked jnp formulation (same math, XLA-fused), which
+    is also what the dry-run lowers so cost_analysis counts real FLOPs.
+
+The *chunked* jnp forms here are algorithmically identical to the Pallas
+kernels (same blocking, same fp32 state handling); the naive oracles live
+in ref.py and the test sweeps assert chunked == naive == pallas.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as kref
+
+
+def _backend() -> str:
+    return jax.default_backend()
+
+
+# ---------------------------------------------------------------------- #
+# xor parity
+# ---------------------------------------------------------------------- #
+
+
+def xor_reduce(stacked: jax.Array, use_pallas: Optional[bool] = None) -> jax.Array:
+    from repro.kernels.xor_parity import xor_reduce_pallas
+
+    if use_pallas is None:
+        use_pallas = _backend() == "tpu"
+    if use_pallas:
+        return xor_reduce_pallas(stacked)
+    return kref.xor_reduce_ref(stacked)
+
+
+# ---------------------------------------------------------------------- #
+# flash attention
+# ---------------------------------------------------------------------- #
+
+
+def flash_attention(q, k, v, causal=True, prefix_len=0, scale=None,
+                    use_pallas: Optional[bool] = None):
+    """Dispatch: Pallas flash kernel on TPU, chunked jnp elsewhere."""
+    from repro.models.layers import flash_attention as jnp_flash
+
+    if use_pallas is None:
+        use_pallas = _backend() == "tpu"
+    if use_pallas:
+        from repro.kernels.flash_attention import flash_attention_pallas
+
+        return flash_attention_pallas(q, k, v, causal=causal, scale=scale)
+    return jnp_flash(q, k, v, causal=causal, prefix_len=prefix_len, scale=scale)
+
+
+# ---------------------------------------------------------------------- #
+# rwkv6 chunked WKV (Finch recurrence, data-dependent per-channel decay)
+# ---------------------------------------------------------------------- #
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "d_block"))
+def wkv6_chunked(
+    r: jax.Array,   # (B, T, H, D)
+    k: jax.Array,
+    v: jax.Array,
+    w: jax.Array,   # (B, T, H, D) decay in (0, 1)
+    u: jax.Array,   # (H, D)
+    state: Optional[jax.Array] = None,  # (B, H, D, D)
+    chunk: int = 32,
+    d_block: int = 16,
+) -> Tuple[jax.Array, jax.Array]:
+    """Chunked WKV6: O(T * chunk) attention-like intra-chunk work plus an
+    O(T/chunk) state recurrence — the SSD decomposition of the Finch
+    recurrence.  fp32 state; per-channel decays handled in d_block slices
+    to bound the exp(L_i - L_j) tensor (numerics identical to fla's
+    chunked rwkv6).
+    """
+    b, t, h, d = r.shape
+    if state is None:
+        state = jnp.zeros((b, h, d, d), jnp.float32)
+    nc = (t + chunk - 1) // chunk
+    pad = nc * chunk - t
+    if pad:
+        padw = ((0, 0), (0, pad), (0, 0), (0, 0))
+        r, k, v = (jnp.pad(x, padw) for x in (r, k, v))
+        w = jnp.pad(w, padw, constant_values=1.0)  # identity decay on padding
+
+    f32 = jnp.float32
+    rs, ks, vs, ws = (
+        jnp.moveaxis(x.astype(f32).reshape(b, nc, chunk, h, d), 1, 0)
+        for x in (r, k, v, w)
+    )
+
+    mask_lt = jnp.tril(jnp.ones((chunk, chunk), bool), -1)  # j <  i
+
+    def chunk_body(S, xs):
+        rc, kc, vc, wc = xs  # (B, c, H, D)
+        logw = jnp.log(jnp.maximum(wc, 1e-30))          # (B, c, H, D)
+        L = jnp.cumsum(logw, axis=1)                     # L_i = sum_{t<=i}
+        Lprev = L - logw                                 # L_{i-1}
+
+        # intra-chunk scores in d_block slices: A_ij = sum_d r_id k_jd e^{Lp_i - L_j}
+        def d_slice(carry, idx):
+            sl = jax.lax.dynamic_slice_in_dim
+            rd = sl(rc, idx * d_block, d_block, 3)
+            kd = sl(kc, idx * d_block, d_block, 3)
+            Lpd = sl(Lprev, idx * d_block, d_block, 3)
+            Ld = sl(L, idx * d_block, d_block, 3)
+            diff = Lpd[:, :, None] - Ld[:, None, :, :]   # (B, i, j, H, dblk)
+            a = jnp.einsum("bihd,bjhd,bijhd->bhij", rd, kd, jnp.exp(diff))
+            return carry + a, None
+
+        nblk = d // d_block
+        A0 = jnp.zeros((b, h, chunk, chunk), f32)
+        A, _ = jax.lax.scan(d_slice, A0, jnp.arange(nblk))
+        A = A * mask_lt[None, None]
+        # diagonal bonus term: (r_i . u*k_i) v_i
+        diag = jnp.einsum("bihd,hd,bihd->bhi", rc, u.astype(f32), kc)
+        y_intra = jnp.einsum("bhij,bjhd->bihd", A, vc)
+        y_intra = y_intra + diag[..., None].transpose(0, 2, 1, 3) * vc
+
+        # inter-chunk: y_i += (r_i * e^{Lprev_i}) S
+        rdec = rc * jnp.exp(Lprev)
+        y_inter = jnp.einsum("bihd,bhde->bihe", rdec, S)
+
+        # state update: S' = diag(e^{L_c}) S + sum_j (k_j e^{L_c - L_j}) v_j^T
+        Ltot = L[:, -1]                                  # (B, H, D)
+        kdec = kc * jnp.exp(Ltot[:, None] - L)
+        S = jnp.exp(Ltot)[..., None] * S + jnp.einsum("bjhd,bjhe->bhde", kdec, vc)
+        return S, (y_intra + y_inter)
+
+    state, ys = jax.lax.scan(chunk_body, state, (rs, ks, vs, ws))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, nc * chunk, h, d)[:, :t]
+    return y.astype(r.dtype), state
+
+
+def wkv6(r, k, v, w, u, state=None, use_pallas: Optional[bool] = None):
+    if use_pallas is None:
+        use_pallas = _backend() == "tpu"
+    if use_pallas:
+        from repro.kernels.rwkv6_scan import wkv6_pallas
+
+        return wkv6_pallas(r, k, v, w, u, state)
+    return wkv6_chunked(r, k, v, w, u, state)
+
+
+def wkv6_decode_step(r, k, v, w, u, state):
+    """Single-token WKV6: r,k,v,w (B,H,D); state (B,H,D,D) -> (y, state)."""
+    f32 = jnp.float32
+    r_, k_, v_, w_ = (x.astype(f32) for x in (r, k, v, w))
+    kv = k_[..., :, None] * v_[..., None, :]
+    y = jnp.einsum("bhd,bhde->bhe", r_, state + u.astype(f32)[..., :, None] * kv)
+    state = w_[..., :, None] * state + kv
+    return y.astype(r.dtype), state
+
+
+# ---------------------------------------------------------------------- #
+# mamba2 SSD chunked scan
+# ---------------------------------------------------------------------- #
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def mamba2_chunked(
+    x: jax.Array,    # (B, T, H, P)
+    dt: jax.Array,   # (B, T, H)   (already softplus'd, >0)
+    A: jax.Array,    # (H,)        negative decay rate
+    Bm: jax.Array,   # (B, T, N)
+    Cm: jax.Array,   # (B, T, N)
+    state: Optional[jax.Array] = None,  # (B, H, P, N)
+    chunk: int = 64,
+) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD: scalar per-head decay makes A_ij a plain (c, c) matrix.
+
+    S_t = e^{A dt_t} S_{t-1} + dt_t x_t B_t^T ;  y_t = S_t C_t  (update
+    *includes* the current token, so the intra mask is j <= i).
+    """
+    b, t, h, p = x.shape
+    n = Bm.shape[-1]
+    if state is None:
+        state = jnp.zeros((b, h, p, n), jnp.float32)
+    nc = (t + chunk - 1) // chunk
+    pad = nc * chunk - t
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+
+    f32 = jnp.float32
+    xs = jnp.moveaxis(x.astype(f32).reshape(b, nc, chunk, h, p), 1, 0)
+    dts = jnp.moveaxis(dt.astype(f32).reshape(b, nc, chunk, h), 1, 0)
+    bs = jnp.moveaxis(Bm.astype(f32).reshape(b, nc, chunk, n), 1, 0)
+    cs = jnp.moveaxis(Cm.astype(f32).reshape(b, nc, chunk, n), 1, 0)
+
+    mask_le = jnp.tril(jnp.ones((chunk, chunk), bool))  # j <= i
+
+    def chunk_body(S, xs_):
+        xc, dtc, bc, cc = xs_
+        L = jnp.cumsum(A[None, None, :] * dtc, axis=1)   # (B, c, H)
+        # A_ij = (C_i . B_j) e^{L_i - L_j} dt_j   for j <= i
+        G = jnp.einsum("bin,bjn->bij", cc, bc)
+        D = jnp.exp(L[:, :, None] - L[:, None, :])       # (B, i, j, H)
+        Aij = G[..., None] * D * dtc[:, None, :, :]      # (B, i, j, H)
+        Aij = jnp.where(mask_le[None, :, :, None], Aij, 0.0)
+        y_intra = jnp.einsum("bijh,bjhp->bihp", Aij, xc)
+        # inter: y_i += (C_i e^{L_i}) . S
+        cdec = cc[:, :, None, :] * jnp.exp(L)[..., None]  # (B, c, H, N)
+        y_inter = jnp.einsum("bihn,bhpn->bihp", cdec, S)
+        # state: S' = e^{L_c} S + sum_j dt_j x_j (B_j e^{L_c - L_j})^T
+        Ltot = L[:, -1]                                   # (B, H)
+        bdec = bc[:, :, None, :] * jnp.exp(Ltot[:, None, :, None] - L[..., None])
+        upd = jnp.einsum("bjhp,bjhn,bjh->bhpn", xc, bdec, dtc)
+        S = jnp.exp(Ltot)[..., None, None] * S + upd
+        return S, y_intra + y_inter
+
+    state, ys = jax.lax.scan(chunk_body, state, (xs, dts, bs, cs))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, nc * chunk, h, p)[:, :t]
+    return y.astype(x.dtype), state
+
+
+def mamba2_ssd(x, dt, A, Bm, Cm, state=None, use_pallas: Optional[bool] = None):
+    if use_pallas is None:
+        use_pallas = _backend() == "tpu"
+    if use_pallas:
+        from repro.kernels.mamba2_ssd import mamba2_pallas
+
+        return mamba2_pallas(x, dt, A, Bm, Cm, state)
+    return mamba2_chunked(x, dt, A, Bm, Cm, state)
+
+
+def mamba2_decode_step(x, dt, A, Bm, Cm, state):
+    """Single-token SSD step: x (B,H,P), dt (B,H), Bm/Cm (B,N)."""
+    f32 = jnp.float32
+    decay = jnp.exp(A[None, :] * dt.astype(f32))
+    upd = (dt.astype(f32)[..., None, None] * x.astype(f32)[..., :, None]) \
+        * Bm.astype(f32)[:, None, None, :]
+    state = decay[..., None, None] * state + upd
+    y = jnp.einsum("bhpn,bn->bhp", state, Cm.astype(f32))
+    return y.astype(x.dtype), state

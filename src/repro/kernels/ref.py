@@ -1,0 +1,149 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each ``*_ref`` implements the mathematically obvious version of its kernel
+with no tiling/blocking, used by the per-kernel allclose test sweeps and by
+CPU execution paths where interpret-mode Pallas would be needlessly slow.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------- #
+# xor_parity
+# ---------------------------------------------------------------------- #
+
+
+def xor_reduce_ref(stacked: jax.Array) -> jax.Array:
+    """XOR-reduce over axis 0 of an integer array."""
+    return jax.lax.reduce(
+        stacked,
+        jnp.zeros((), stacked.dtype),
+        jax.lax.bitwise_xor,
+        dimensions=(0,),
+    )
+
+
+# ---------------------------------------------------------------------- #
+# flash attention (causal / non-causal, GQA)
+# ---------------------------------------------------------------------- #
+
+
+def mha_ref(
+    q: jax.Array,  # (B, Tq, Hq, D)
+    k: jax.Array,  # (B, Tk, Hkv, D)
+    v: jax.Array,  # (B, Tk, Hkv, Dv)
+    causal: bool = True,
+    scale: float | None = None,
+) -> jax.Array:
+    """Reference multi-head attention with GQA head-group broadcasting."""
+    b, tq, hq, d = q.shape
+    _, tk, hkv, dv = v.shape
+    assert hq % hkv == 0, (hq, hkv)
+    group = hq // hkv
+    scale = (d ** -0.5) if scale is None else scale
+    kq = jnp.repeat(k, group, axis=2)  # (B, Tk, Hq, D)
+    vq = jnp.repeat(v, group, axis=2)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q * scale, kq).astype(jnp.float32)
+    if causal:
+        # decode convention: query i attends to keys [0, i + Tk - Tq]
+        qi = jnp.arange(tq)[:, None] + (tk - tq)
+        ki = jnp.arange(tk)[None, :]
+        logits = jnp.where(ki <= qi, logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs.astype(vq.dtype), vq)
+
+
+def decode_attention_ref(
+    q: jax.Array,        # (B, Hq, D)       one new query token per sequence
+    k_cache: jax.Array,  # (B, S, Hkv, D)
+    v_cache: jax.Array,  # (B, S, Hkv, Dv)
+    length: jax.Array | int,  # valid cache length per batch (B,) or scalar
+    scale: float | None = None,
+) -> jax.Array:
+    """Single-token decode attention over a (possibly padded) KV cache."""
+    b, s, hkv, d = k_cache.shape
+    hq = q.shape[1]
+    group = hq // hkv
+    scale = (d ** -0.5) if scale is None else scale
+    kq = jnp.repeat(k_cache, group, axis=2)
+    vq = jnp.repeat(v_cache, group, axis=2)
+    logits = jnp.einsum("bhd,bshd->bhs", q * scale, kq).astype(jnp.float32)
+    lengths = jnp.broadcast_to(jnp.asarray(length), (b,))
+    mask = jnp.arange(s)[None, None, :] < lengths[:, None, None]
+    logits = jnp.where(mask, logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhs,bshd->bhd", probs.astype(vq.dtype), vq)
+
+
+# ---------------------------------------------------------------------- #
+# rwkv6 (Finch) WKV recurrence with data-dependent decay
+# ---------------------------------------------------------------------- #
+
+
+def rwkv6_ref(
+    r: jax.Array,  # (B, T, H, D)  receptance
+    k: jax.Array,  # (B, T, H, D)
+    v: jax.Array,  # (B, T, H, D)
+    w: jax.Array,  # (B, T, H, D)  per-step decay, already exp(-exp(.)) in (0,1)
+    u: jax.Array,  # (H, D)        bonus for current token
+    state: jax.Array | None = None,  # (B, H, D, D)
+):
+    """Naive sequential WKV6: S_t = diag(w_t) S_{t-1} + k_t v_t^T,
+    o_t = r_t (S_{t-1} + diag(u) k_t v_t^T)."""
+    b, t, h, d = r.shape
+    if state is None:
+        state = jnp.zeros((b, h, d, d), jnp.float32)
+
+    def step(s, xs):
+        rt, kt, vt, wt = xs  # (B, H, D) each
+        kv = kt[..., :, None] * vt[..., None, :]          # (B,H,D,D)
+        out = jnp.einsum("bhd,bhde->bhe", rt, s + u[..., :, None] * kv)
+        s = wt[..., :, None] * s + kv
+        return s, out
+
+    xs = tuple(jnp.moveaxis(x.astype(jnp.float32), 1, 0) for x in (r, k, v, w))
+    state, outs = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(outs, 0, 1).astype(r.dtype), state
+
+
+# ---------------------------------------------------------------------- #
+# mamba2 SSD (state-space dual) chunked-reference
+# ---------------------------------------------------------------------- #
+
+
+def mamba2_ref(
+    x: jax.Array,   # (B, T, H, P)   input heads
+    dt: jax.Array,  # (B, T, H)      softplus'd timestep
+    A: jax.Array,   # (H,)           negative state decay rate
+    Bm: jax.Array,  # (B, T, N)      input->state projection (shared across heads)
+    Cm: jax.Array,  # (B, T, N)      state->output projection
+    state: jax.Array | None = None,  # (B, H, P, N)
+):
+    """Naive sequential Mamba2 SSD:
+    S_t = exp(A dt_t) S_{t-1} + dt_t * x_t B_t^T ;  y_t = S_t C_t."""
+    b, t, h, p = x.shape
+    n = Bm.shape[-1]
+    if state is None:
+        state = jnp.zeros((b, h, p, n), jnp.float32)
+
+    def step(s, xs):
+        xt, dtt, bt, ct = xs  # (B,H,P), (B,H), (B,N), (B,N)
+        decay = jnp.exp(A[None, :] * dtt)  # (B,H)
+        upd = (dtt[..., None, None] * xt[..., :, None]) * bt[:, None, None, :]
+        s = decay[..., None, None] * s + upd
+        y = jnp.einsum("bhpn,bn->bhp", s, ct)
+        return s, y
+
+    xs = (
+        jnp.moveaxis(x.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(dt.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(Bm.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(Cm.astype(jnp.float32), 1, 0),
+    )
+    state, ys = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), state

@@ -1,0 +1,56 @@
+"""Pallas TPU kernel: XOR parity reduce (the NAM's near-memory logic).
+
+DEEP-ER's NAM computes checkpoint parity *near memory* on its FPGA so the
+nodes never stage parity through their own storage path.  The TPU-native
+adaptation: parity is an elementwise XOR reduce over R equally-sized
+checkpoint fragments, streamed HBM -> VMEM in lane-aligned blocks and
+combined on the VPU — one pass, no intermediate HBM round-trips.  The same
+kernel serves encode (reduce over all fragments) and reconstruct (reduce
+over parity + survivors).
+
+Layout: fragments are stacked as ``(R, M, 128)`` int32 words — last dim is
+the TPU lane width, M rows are tiled by ``block_rows`` (sublane dim).  VMEM
+working set per grid step is ``R * block_rows * 128 * 4`` bytes; the
+default block_rows=256 keeps it at 128 KiB * R, comfortably inside the
+~16 MiB VMEM budget for any realistic XOR-set size (SCR sets are 4-16).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+
+
+def _xor_reduce_kernel(x_ref, o_ref):
+    """o = x[0] ^ x[1] ^ ... ^ x[R-1] over one (block_rows, 128) tile."""
+    r = x_ref.shape[0]
+    acc = x_ref[0]
+    for i in range(1, r):  # R is static; unrolled XOR chain on the VPU
+        acc = acc ^ x_ref[i]
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def xor_reduce_pallas(
+    stacked: jax.Array, block_rows: int = 256, interpret: bool = False
+) -> jax.Array:
+    """XOR-reduce ``stacked``: (R, M, 128) int32  ->  (M, 128) int32."""
+    if stacked.ndim != 3 or stacked.shape[-1] != LANES:
+        raise ValueError(f"expected (R, M, {LANES}), got {stacked.shape}")
+    r, m, _ = stacked.shape
+    grid = (pl.cdiv(m, block_rows),)
+    return pl.pallas_call(
+        _xor_reduce_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((r, block_rows, LANES), lambda j: (0, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, LANES), lambda j: (j, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, LANES), stacked.dtype),
+        interpret=interpret,
+    )(stacked)

@@ -1,0 +1,89 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+Wires the full stack for a real run: VirtualCluster topology + memory
+hierarchy + (optional) NAM + SCR strategy + TokenPipeline + Trainer.
+On this CPU container it runs reduced configs; on a fleet the same
+launcher runs the full configs over the production mesh.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+import jax
+
+from repro.cluster.topology import NodeState, VirtualCluster
+from repro.configs import get_config
+from repro.core.nam import NAMDevice
+from repro.core.scr import SCRManager, Strategy
+from repro.data.pipeline import TokenPipeline
+from repro.memory.tiers import MemoryHierarchy
+from repro.models.registry import get_model
+from repro.optim.adamw import AdamWConfig
+from repro.train.trainer import FailureEvent, Trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--reduced", action="store_true", default=True,
+                    help="use the reduced (CPU-scale) config")
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--strategy", default="buddy",
+                    choices=[s.value for s in Strategy])
+    ap.add_argument("--ckpt-every", type=int, default=10)
+    ap.add_argument("--n-cluster", type=int, default=4)
+    ap.add_argument("--n-booster", type=int, default=4)
+    ap.add_argument("--fail-at", type=int, default=None,
+                    help="inject a node failure at this step")
+    ap.add_argument("--fail-rank", type=int, default=2)
+    ap.add_argument("--run-dir", default=".deeper_run")
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--micro-batches", type=int, default=1)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    model = get_model(cfg)
+
+    cluster = VirtualCluster(args.n_cluster, args.n_booster, root=Path(args.run_dir))
+    hierarchy = MemoryHierarchy(cluster)
+    strategy = Strategy(args.strategy)
+    nam = NAMDevice(hierarchy.nam_tier) if strategy == Strategy.NAM_XOR else None
+    scr = SCRManager(cluster, hierarchy, nam=nam, strategy=strategy,
+                     procs_per_node=2)
+
+    pipeline = TokenPipeline(cfg.vocab_size, args.global_batch, args.seq_len)
+    schedule = []
+    if args.fail_at is not None:
+        schedule.append(FailureEvent(step=args.fail_at, rank=args.fail_rank))
+
+    trainer = Trainer(
+        cfg, model, pipeline, scr,
+        opt_cfg=AdamWConfig(lr=args.lr),
+        ckpt_every=args.ckpt_every,
+        micro_batches=args.micro_batches,
+        failure_schedule=schedule,
+    )
+    report = trainer.run(args.steps)
+    print(json.dumps({
+        "arch": cfg.name,
+        "steps_run": report.steps_run,
+        "failures": report.failures,
+        "recoveries": report.recoveries,
+        "restarts_from_step": report.restarts_from_step,
+        "checkpoints": report.checkpoints,
+        "modelled_ckpt_fg_s": round(report.checkpoint_fg_s, 4),
+        "first_loss": report.losses[0] if report.losses else None,
+        "last_loss": report.losses[-1] if report.losses else None,
+    }, indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+from repro.memory.tiers import (
+    TierKind,
+    TierSpec,
+    MemoryTier,
+    MemoryHierarchy,
+    DEEPER_TIERS,
+    TPU_V5E_TIERS,
+)
+
+__all__ = [
+    "TierKind",
+    "TierSpec",
+    "MemoryTier",
+    "MemoryHierarchy",
+    "DEEPER_TIERS",
+    "TPU_V5E_TIERS",
+]

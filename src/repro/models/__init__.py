@@ -1,0 +1,17 @@
+"""Model zoo: the ten assigned architectures as functional JAX modules.
+
+Every family module exposes the same interface:
+
+  init(key, cfg)                  -> params pytree
+  param_axes(cfg)                 -> same-structure pytree of logical axis
+                                     tuples (consumed by distributed/sharding)
+  forward(params, batch, cfg)     -> (logits, aux) full-sequence pass
+  init_cache(cfg, batch, max_len) -> decode cache pytree
+  cache_axes(cfg)                 -> logical axes for the cache
+  decode_step(params, cache, tokens, cfg) -> (logits, cache)
+"""
+
+from repro.models import registry as _registry
+from repro.models.registry import get_model
+
+__all__ = ["get_model"]

@@ -1,0 +1,301 @@
+"""Zamba2 (zamba2-2.7b): Mamba2 backbone + shared attention block.
+
+54 Mamba2 layers; after every 6th layer the SHARED transformer block
+(attention + MLP, one set of parameters reused for all 9 invocations —
+the Zamba2 parameter-sharing design; per-invocation LoRA deltas omitted,
+see DESIGN.md) is applied.  Layer scan is structured as
+``scan(groups=9) { scan(mamba x6); shared_block }`` so no conditionals
+appear in the lowered HLO.
+
+Mamba2 block: separate z/x/B/C/dt projections (clean TP: heads 80/16),
+depthwise causal conv on (x,B,C), softplus dt, SSD chunked scan
+(kernels/ops.mamba2_ssd), gated RMSNorm, out projection.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.kernels import ops
+from repro.models import layers as L
+from repro.models import transformer as T
+
+CONV_W = 4
+
+
+def _dims(cfg: ArchConfig):
+    din = cfg.d_inner
+    n = cfg.ssm_state
+    p = cfg.ssm_state           # head dim == state dim (Mamba2 default)
+    h = cfg.padded_ssm_heads
+    return din, n, p, h
+
+
+def mamba_table(cfg: ArchConfig) -> Dict[str, Any]:
+    d = cfg.d_model
+    din, n, p, h = _dims(cfg)
+    dp = h * p  # padded inner
+    return {
+        "norm": L.norm_table(cfg),
+        "wz": L.LeafSpec((d, dp), ("d_model", "heads_dh")),
+        "wx": L.LeafSpec((d, dp), ("d_model", "heads_dh")),
+        "wB": L.LeafSpec((d, n), ("d_model", None)),
+        "wC": L.LeafSpec((d, n), ("d_model", None)),
+        "wdt": L.LeafSpec((d, h), ("d_model", "heads")),
+        "dt_bias": L.LeafSpec((h,), ("heads",), "zeros"),
+        "A_log": L.LeafSpec((h,), ("heads",), "zeros"),
+        "D_skip": L.LeafSpec((h,), ("heads",), "ones"),
+        "conv_x": L.LeafSpec((CONV_W, dp), (None, "heads_dh"), "embed"),
+        "conv_B": L.LeafSpec((CONV_W, n), (None, None), "embed"),
+        "conv_C": L.LeafSpec((CONV_W, n), (None, None), "embed"),
+        "gn": L.LeafSpec((dp,), ("heads_dh",), "ones"),
+        "wo": L.LeafSpec((dp, d), ("heads_dh", "d_model")),
+    }
+
+
+def shared_block_table(cfg: ArchConfig) -> Dict[str, Any]:
+    return {
+        "ln1": L.norm_table(cfg),
+        "attn": T.attention_table(cfg),
+        "ln2": L.norm_table(cfg),
+        "ffn": T.ffn_table(cfg),
+    }
+
+
+def param_table(cfg: ArchConfig) -> Dict[str, Any]:
+    v = cfg.padded_vocab
+    groups, per = _group_shape(cfg)
+    return {
+        "embed": L.LeafSpec((v, cfg.d_model), ("vocab", "d_model"), "embed"),
+        "groups": L.stacked(L.stacked(mamba_table(cfg), per), groups),
+        "shared": shared_block_table(cfg),
+        "ln_f": L.norm_table(cfg),
+        "lm_head": L.LeafSpec((cfg.d_model, v), ("d_model", "vocab")),
+    }
+
+
+def _group_shape(cfg: ArchConfig) -> Tuple[int, int]:
+    per = max(1, cfg.attn_every)
+    assert cfg.n_layers % per == 0, (cfg.n_layers, per)
+    return cfg.n_layers // per, per
+
+
+def init(key: jax.Array, cfg: ArchConfig):
+    params = L.materialize(key, param_table(cfg), jnp.dtype(cfg.param_dtype))
+    # negative decay rates: A in [-1, -e]; zero-init padded head wo rows
+    a = jax.random.uniform(key, (params["groups"]["A_log"].shape), minval=0.0, maxval=1.0)
+    params["groups"]["A_log"] = a.astype(params["groups"]["A_log"].dtype)
+    din, n, p, h = _dims(cfg)
+    extra = h - cfg.ssm_heads
+    if extra:
+        mask = (jnp.arange(h * p) < cfg.ssm_heads * p)
+        wo = params["groups"]["wo"]
+        params["groups"]["wo"] = wo * mask[None, None, :, None].astype(wo.dtype)
+    return params
+
+
+def param_axes(cfg: ArchConfig):
+    return L.axes_of(param_table(cfg))
+
+
+def param_shapes(cfg: ArchConfig):
+    return L.shapes_of(param_table(cfg), jnp.dtype(cfg.param_dtype))
+
+
+# ---------------------------------------------------------------------- #
+# mamba2 block
+# ---------------------------------------------------------------------- #
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, carry: Optional[jax.Array] = None):
+    """Depthwise causal conv, width CONV_W.  x (B,T,C), w (W,C).
+    Returns (y, new_carry) where carry holds the last W-1 inputs."""
+    b, t, c = x.shape
+    if carry is None:
+        carry = jnp.zeros((b, CONV_W - 1, c), x.dtype)
+    xp = jnp.concatenate([carry, x], axis=1)
+    y = sum(xp[:, i : i + t] * w[i][None, None] for i in range(CONV_W))
+    return jax.nn.silu(y), xp[:, -(CONV_W - 1) :]
+
+
+def mamba_block(
+    p: Dict[str, jax.Array],
+    x: jax.Array,                     # (B, T, D)
+    cfg: ArchConfig,
+    state: Optional[jax.Array] = None,
+    conv_state: Optional[Dict[str, jax.Array]] = None,
+) -> Tuple[jax.Array, jax.Array, Dict[str, jax.Array]]:
+    b, t, d = x.shape
+    din, n, pp, h = _dims(cfg)
+    cd = x.dtype
+    z = x @ p["wz"]
+    xi = x @ p["wx"]
+    Bm = x @ p["wB"]
+    Cm = x @ p["wC"]
+    dt = jax.nn.softplus((x @ p["wdt"]) + p["dt_bias"])
+    cs = conv_state or {}
+    xi, cs_x = _causal_conv(xi, p["conv_x"], cs.get("x"))
+    Bm, cs_b = _causal_conv(Bm, p["conv_B"], cs.get("B"))
+    Cm, cs_c = _causal_conv(Cm, p["conv_C"], cs.get("C"))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xh = xi.reshape(b, t, h, pp)
+    if t == 1:  # decode: O(1) recurrent step, no chunk padding
+        if state is None:
+            state = jnp.zeros((b, h, pp, n), jnp.float32)
+        y1, state = ops.mamba2_decode_step(
+            xh[:, 0], dt[:, 0], A, Bm[:, 0], Cm[:, 0], state
+        )
+        y = y1[:, None]
+    else:
+        y, state = ops.mamba2_ssd(xh, dt, A, Bm, Cm, state)
+    y = y + xh * p["D_skip"].astype(cd)[None, None, :, None]
+    y = y.reshape(b, t, h * pp)
+    # gated RMSNorm (mamba2's norm before out projection)
+    y = y * jax.nn.silu(z)
+    y32 = y.astype(jnp.float32)
+    rms = jax.lax.rsqrt(jnp.mean(y32 * y32, axis=-1, keepdims=True) + cfg.norm_eps)
+    y = (y32 * rms * p["gn"].astype(jnp.float32)).astype(cd)
+    return y @ p["wo"], state, {"x": cs_x, "B": cs_b, "C": cs_c}
+
+
+# ---------------------------------------------------------------------- #
+# forward / decode
+# ---------------------------------------------------------------------- #
+
+
+def _cast(tree, cd):
+    return jax.tree_util.tree_map(lambda a: a.astype(cd), tree)
+
+
+def forward(params, batch, cfg: ArchConfig, remat: bool = True):
+    tokens = batch["tokens"]
+    cd = jnp.dtype(cfg.compute_dtype)
+    x = L.embed_tokens(params["embed"], tokens, cd)
+    t = x.shape[1]
+    cos, sin = L.rope_freqs(cfg.rope_dim or cfg.resolved_head_dim,
+                            cfg.rope_theta, jnp.arange(t))
+    shared = _cast(params["shared"], cd)
+
+    def mamba_body(h, lp):
+        lp = _cast(lp, cd)
+        y, _, _ = mamba_block(lp, L.apply_norm(cfg, h, lp["norm"]), cfg)
+        return h + y, None
+
+    if remat:
+        mamba_body = jax.checkpoint(mamba_body, prevent_cse=False)
+
+    def group_body(h, gp):
+        h, _ = jax.lax.scan(mamba_body, h, gp, unroll=cfg.scan_unroll)
+        h = T.decoder_layer(shared, h, cfg, cos, sin)  # shared attn + MLP
+        return h, None
+
+    x, _ = jax.lax.scan(group_body, x, params["groups"], unroll=cfg.group_unroll)
+    x = L.apply_norm(cfg, x, params["ln_f"])
+    logits = L.lm_logits(x, params["lm_head"], cfg.vocab_size, cd)
+    return logits, {}
+
+
+def cache_table(cfg: ArchConfig, batch: int, max_len: int) -> Dict[str, Any]:
+    din, n, p, h = _dims(cfg)
+    groups, per = _group_shape(cfg)
+    dh = cfg.resolved_head_dim
+    return {
+        "ssm_state": L.LeafSpec(
+            (groups, per, batch, h, p, n),
+            (None, "layers", "batch", "heads", None, None), "zeros",
+        ),
+        "conv_x": L.LeafSpec(
+            (groups, per, batch, CONV_W - 1, h * p),
+            (None, "layers", "batch", None, "heads_dh"), "zeros",
+        ),
+        "conv_B": L.LeafSpec(
+            (groups, per, batch, CONV_W - 1, n),
+            (None, "layers", "batch", None, None), "zeros",
+        ),
+        "conv_C": L.LeafSpec(
+            (groups, per, batch, CONV_W - 1, n),
+            (None, "layers", "batch", None, None), "zeros",
+        ),
+        # shared attention block KV cache — one per invocation (group)
+        "shared_k": L.LeafSpec(
+            (groups, batch, max_len, cfg.padded_kv_heads, dh),
+            (None, "batch", "kv_seq", None, None), "zeros",
+        ),
+        "shared_v": L.LeafSpec(
+            (groups, batch, max_len, cfg.padded_kv_heads, dh),
+            (None, "batch", "kv_seq", None, None), "zeros",
+        ),
+    }
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=None):
+    cd = dtype or jnp.dtype(cfg.compute_dtype)
+    c = L.materialize(jax.random.PRNGKey(0), cache_table(cfg, batch, max_len), cd)
+    c["ssm_state"] = c["ssm_state"].astype(jnp.float32)
+    return c
+
+
+def cache_axes(cfg: ArchConfig, batch: int = 1, max_len: int = 1):
+    return L.axes_of(cache_table(cfg, batch, max_len))
+
+
+def decode_step(params, cache, tokens, pos, cfg: ArchConfig):
+    cd = jnp.dtype(cfg.compute_dtype)
+    x = L.embed_tokens(params["embed"], tokens, cd)   # (B, D)
+    b = x.shape[0]
+    din, n, pp, h = _dims(cfg)
+    cos, sin = L.rope_freqs(cfg.rope_dim or cfg.resolved_head_dim,
+                            cfg.rope_theta, pos[None])
+    shared = _cast(params["shared"], cd)
+    hq = cfg.padded_heads
+    dh = cfg.resolved_head_dim
+
+    def mamba_step(hh, xs):
+        lp, sst, cx, cb, cc = xs
+        lp = _cast(lp, cd)
+        xin = L.apply_norm(cfg, hh[:, None], lp["norm"])  # (B,1,D)
+        y, sst, cs = mamba_block(lp, xin, cfg, state=sst,
+                                 conv_state={"x": cx, "B": cb, "C": cc})
+        return hh + y[:, 0], (sst, cs["x"], cs["B"], cs["C"])
+
+    def group_step(carry, xs):
+        hh = carry
+        gp, sst_g, cx_g, cb_g, cc_g, kc, vc = xs
+        hh, (sst_g, cx_g, cb_g, cc_g) = jax.lax.scan(
+            mamba_step, hh, (gp, sst_g, cx_g, cb_g, cc_g)
+        )
+        # shared attention block, single-token
+        p = shared["attn"]
+        xin = L.apply_norm(cfg, hh[:, None], shared["ln1"])[:, 0]
+        q = (xin @ p["wq"]).reshape(b, hq, dh)
+        knew = (xin @ p["wk"]).reshape(b, cfg.padded_kv_heads, dh)
+        vnew = (xin @ p["wv"]).reshape(b, cfg.padded_kv_heads, dh)
+        if cfg.rope_theta > 0:
+            q = L.apply_rope(q[:, None], cos, sin)[:, 0]
+            knew = L.apply_rope(knew[:, None], cos, sin)[:, 0]
+        kc = jax.lax.dynamic_update_slice_in_dim(kc, knew[:, None].astype(kc.dtype), pos, 1)
+        vc = jax.lax.dynamic_update_slice_in_dim(vc, vnew[:, None].astype(vc.dtype), pos, 1)
+        lengths = jnp.full((b,), pos + 1, jnp.int32)
+        a = L.decode_attention(q, kc, vc, lengths).reshape(b, hq * dh)
+        hh = hh + (a.astype(cd) @ p["wo"]).astype(hh.dtype)
+        xff = L.apply_norm(cfg, hh[:, None], shared["ln2"])[:, 0]
+        hh = hh + T.ffn_block(shared["ffn"], xff[:, None], cfg)[:, 0]
+        return hh, (sst_g, cx_g, cb_g, cc_g, kc, vc)
+
+    x, (sst, cx, cb, cc, kc, vc) = jax.lax.scan(
+        group_step, x,
+        (params["groups"], cache["ssm_state"], cache["conv_x"],
+         cache["conv_B"], cache["conv_C"], cache["shared_k"], cache["shared_v"]),
+    )
+    new_cache = {
+        "ssm_state": sst, "conv_x": cx, "conv_B": cb, "conv_C": cc,
+        "shared_k": kc, "shared_v": vc,
+    }
+    x = L.apply_norm(cfg, x[:, None], params["ln_f"])[:, 0]
+    logits = L.lm_logits(x[:, None], params["lm_head"].astype(cd),
+                         cfg.vocab_size, cd)[:, 0]
+    return logits, new_cache

@@ -1,0 +1,39 @@
+"""PaliGemma-3B backbone: gemma-style decoder over a SigLIP patch prefix.
+
+The SigLIP vision tower is a STUB per the assignment: ``input_specs()``
+provides precomputed patch embeddings (B, 256, D).  Attention is
+prefix-LM: bidirectional over the image prefix, causal over text — handled
+by transformer.forward(prefix_embeds=..., prefix_len=256).  MQA (kv=1):
+query heads padded 8 -> TP degree, K/V replicated.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models import transformer as T
+
+# param structure is the dense transformer's
+param_table = T.param_table
+init = T.init
+param_axes = T.param_axes
+param_shapes = T.param_shapes
+cache_table = T.cache_table
+init_cache = T.init_cache
+cache_axes = T.cache_axes
+
+
+def forward(params, batch, cfg: ArchConfig, remat: bool = True):
+    """batch: tokens (B, T_text) + patches (B, n_prefix, D)."""
+    return T.forward(params, batch, cfg, remat=remat,
+                     prefix_embeds=batch["patches"])
+
+
+def decode_step(params, cache, tokens, pos, cfg: ArchConfig):
+    """Text decode after the prefix was prefilled into the cache."""
+    return T.decode_step(params, cache, tokens, pos, cfg)

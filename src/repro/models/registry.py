@@ -1,0 +1,106 @@
+"""Family dispatch + input_specs for every (arch x shape) cell.
+
+``get_model(cfg)`` returns a ModelApi wrapping the family module.
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins for every
+model input of that cell — weak-type-correct, shardable, no allocation —
+exactly what the multi-pod dry-run lowers against.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.configs.shapes import ShapeSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelApi:
+    family: str
+    init: Callable
+    param_axes: Callable
+    param_shapes: Callable
+    forward: Callable
+    init_cache: Callable
+    cache_axes: Callable
+    cache_table: Callable
+    decode_step: Callable
+
+
+def get_model(cfg: ArchConfig) -> ModelApi:
+    if cfg.family in ("dense",):
+        from repro.models import transformer as m
+    elif cfg.family == "moe":
+        from repro.models import moe as m
+    elif cfg.family == "rwkv":
+        from repro.models import rwkv6 as m
+    elif cfg.family == "hybrid":
+        from repro.models import mamba2 as m
+    elif cfg.family == "encdec":
+        from repro.models import whisper as m
+    elif cfg.family == "vlm":
+        from repro.models import paligemma as m
+    else:
+        raise ValueError(cfg.family)
+    return ModelApi(
+        family=cfg.family,
+        init=m.init,
+        param_axes=m.param_axes,
+        param_shapes=m.param_shapes,
+        forward=m.forward,
+        init_cache=m.init_cache,
+        cache_axes=m.cache_axes,
+        cache_table=m.cache_table,
+        decode_step=m.decode_step,
+    )
+
+
+# ---------------------------------------------------------------------- #
+# input specs (ShapeDtypeStruct stand-ins, dry-run pattern)
+# ---------------------------------------------------------------------- #
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Model inputs for one (arch x shape) cell.
+
+    train/prefill: full sequences (tokens+labels / tokens).
+    decode: one new token per sequence (the KV cache is separate state).
+    Modality frontends are stubs: whisper gets frame embeddings,
+    paligemma gets patch embeddings; their text seq_len is reduced by the
+    prefix length so the total positions match the assigned shape.
+    """
+    b = shape.global_batch
+    t = shape.seq_len
+    i32 = jnp.int32
+    cd = jnp.dtype(cfg.compute_dtype)
+    if shape.kind == "decode":
+        return {"tokens": jax.ShapeDtypeStruct((b,), i32)}
+    specs: Dict[str, jax.ShapeDtypeStruct] = {}
+    if cfg.family == "encdec":
+        specs["enc_frames"] = jax.ShapeDtypeStruct((b, cfg.enc_seq, cfg.d_model), cd)
+        specs["tokens"] = jax.ShapeDtypeStruct((b, t), i32)
+    elif cfg.family == "vlm":
+        specs["patches"] = jax.ShapeDtypeStruct((b, cfg.n_prefix, cfg.d_model), cd)
+        specs["tokens"] = jax.ShapeDtypeStruct((b, t - cfg.n_prefix), i32)
+    else:
+        specs["tokens"] = jax.ShapeDtypeStruct((b, t), i32)
+    if shape.kind == "train":
+        specs["labels"] = jax.ShapeDtypeStruct(specs["tokens"].shape, i32)
+    return specs
+
+
+def make_inputs(cfg: ArchConfig, shape: ShapeSpec, key: jax.Array) -> Dict[str, jax.Array]:
+    """Concrete random inputs matching input_specs (for smoke tests)."""
+    specs = input_specs(cfg, shape)
+    out = {}
+    for i, (name, s) in enumerate(sorted(specs.items())):
+        sub = jax.random.fold_in(key, i)
+        if jnp.issubdtype(s.dtype, jnp.integer):
+            out[name] = jax.random.randint(sub, s.shape, 0, cfg.vocab_size, s.dtype)
+        else:
+            out[name] = jax.random.normal(sub, s.shape, jnp.float32).astype(s.dtype)
+    return out

@@ -1,0 +1,284 @@
+"""RWKV6 "Finch" (rwkv6-3b): attention-free, data-dependent decay.
+
+Time-mix block: token-shift ddlerp (LoRA-modulated interpolation with the
+previous token), r/k/v/g projections, data-dependent per-channel decay
+``w = exp(-exp(w0 + lora(x)))``, WKV recurrence (chunked kernel), per-head
+group-norm, silu(g) gating, output projection.
+
+Channel-mix block: token-shift lerp, squared-ReLU k projection, sigmoid
+receptance gate.
+
+Heads (40 of size 64) are padded to the TP degree with inert heads (zero
+output-projection rows).  Decode state is O(H * D^2) per layer — a few MB
+— which is why long_500k runs here: no KV cache at all.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.kernels import ops
+from repro.models import layers as L
+
+LORA_MIX = 32     # ddlerp LoRA rank (5 interpolations)
+LORA_DECAY = 64   # decay LoRA rank
+
+
+def _dims(cfg: ArchConfig) -> Tuple[int, int, int]:
+    dh = cfg.ssm_state                      # RWKV head size (64)
+    hp = cfg.padded_rwkv_heads              # padded head count
+    return cfg.d_model, hp, dh
+
+
+def time_mix_table(cfg: ArchConfig) -> Dict[str, Any]:
+    d, hp, dh = _dims(cfg)
+    dp = hp * dh  # padded inner width
+    return {
+        "mu_x": L.LeafSpec((d,), ("d_model",), "zeros"),
+        "mu_rkvgw": L.LeafSpec((5, d), (None, "d_model"), "zeros"),
+        "mix_w1": L.LeafSpec((d, 5 * LORA_MIX), ("d_model", None)),
+        "mix_w2": L.LeafSpec((5, LORA_MIX, d), (None, None, "d_model")),
+        "wr": L.LeafSpec((d, dp), ("d_model", "heads_dh")),
+        "wk": L.LeafSpec((d, dp), ("d_model", "heads_dh")),
+        "wv": L.LeafSpec((d, dp), ("d_model", "heads_dh")),
+        "wg": L.LeafSpec((d, dp), ("d_model", "heads_dh")),
+        "w0": L.LeafSpec((dp,), ("heads_dh",), "zeros"),
+        "decay_w1": L.LeafSpec((d, LORA_DECAY), ("d_model", None)),
+        "decay_w2": L.LeafSpec((LORA_DECAY, dp), (None, "heads_dh")),
+        "u": L.LeafSpec((hp, dh), ("heads", None), "zeros"),
+        "ln_x_g": L.LeafSpec((hp, dh), ("heads", None), "ones"),
+        "ln_x_b": L.LeafSpec((hp, dh), ("heads", None), "zeros"),
+        "wo": L.LeafSpec((dp, d), ("heads_dh", "d_model")),
+    }
+
+
+def channel_mix_table(cfg: ArchConfig) -> Dict[str, Any]:
+    d = cfg.d_model
+    return {
+        "mu_k": L.LeafSpec((d,), ("d_model",), "zeros"),
+        "mu_r": L.LeafSpec((d,), ("d_model",), "zeros"),
+        "wk": L.LeafSpec((d, cfg.d_ff), ("d_model", "d_ff")),
+        "wv": L.LeafSpec((cfg.d_ff, d), ("d_ff", "d_model")),
+        "wr": L.LeafSpec((d, d), ("d_model", "d_model2")),
+    }
+
+
+def layer_table(cfg: ArchConfig) -> Dict[str, Any]:
+    return {
+        "ln1": L.norm_table(cfg),
+        "time_mix": time_mix_table(cfg),
+        "ln2": L.norm_table(cfg),
+        "channel_mix": channel_mix_table(cfg),
+    }
+
+
+def param_table(cfg: ArchConfig) -> Dict[str, Any]:
+    v = cfg.padded_vocab
+    return {
+        "embed": L.LeafSpec((v, cfg.d_model), ("vocab", "d_model"), "embed"),
+        "ln_in": L.norm_table(cfg),
+        "layers": L.stacked(layer_table(cfg), cfg.n_layers),
+        "ln_f": L.norm_table(cfg),
+        "lm_head": L.LeafSpec((cfg.d_model, v), ("d_model", "vocab")),
+    }
+
+
+def init(key: jax.Array, cfg: ArchConfig):
+    params = L.materialize(key, param_table(cfg), jnp.dtype(cfg.param_dtype))
+    extra = cfg.padded_rwkv_heads - cfg.rwkv_heads
+    if extra:
+        dh = cfg.ssm_state
+        dp = cfg.padded_rwkv_heads * dh
+        mask = (jnp.arange(dp) < cfg.rwkv_heads * dh)
+        wo = params["layers"]["time_mix"]["wo"]
+        params["layers"]["time_mix"]["wo"] = wo * mask[None, :, None].astype(wo.dtype)
+    return params
+
+
+def param_axes(cfg: ArchConfig):
+    return L.axes_of(param_table(cfg))
+
+
+def param_shapes(cfg: ArchConfig):
+    return L.shapes_of(param_table(cfg), jnp.dtype(cfg.param_dtype))
+
+
+# ---------------------------------------------------------------------- #
+# blocks
+# ---------------------------------------------------------------------- #
+
+
+def _shift(x: jax.Array, last: Optional[jax.Array] = None) -> jax.Array:
+    """Token shift: previous position (zeros / supplied carry at t=0)."""
+    pad = jnp.zeros_like(x[:, :1]) if last is None else last[:, None]
+    return jnp.concatenate([pad, x[:, :-1]], axis=1)
+
+
+def _ddlerp(p, x, dx):
+    """RWKV6 data-dependent interpolation -> 5 mixed inputs (r,k,v,g,w)."""
+    xx = x + dx * p["mu_x"]
+    mix = jnp.tanh(xx @ p["mix_w1"]).reshape(*x.shape[:-1], 5, LORA_MIX)
+    delta = jnp.einsum("btfr,frd->btfd", mix, p["mix_w2"])  # (B,T,5,D)
+    mus = p["mu_rkvgw"][None, None] + delta
+    return x[..., None, :] + dx[..., None, :] * mus         # (B,T,5,D)
+
+
+def time_mix(
+    p: Dict[str, jax.Array],
+    x: jax.Array,                      # (B, T, D)
+    cfg: ArchConfig,
+    state: Optional[jax.Array] = None,  # (B, H, Dh, Dh) WKV state
+    shift_last: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    b, t, d = x.shape
+    _, hp, dh = _dims(cfg)
+    cd = x.dtype
+    dx = _shift(x, shift_last) - x
+    mixed = _ddlerp(p, x, dx)
+    xr, xk, xv, xg, xw = (mixed[:, :, i] for i in range(5))
+    r = (xr @ p["wr"]).reshape(b, t, hp, dh)
+    k = (xk @ p["wk"]).reshape(b, t, hp, dh)
+    v = (xv @ p["wv"]).reshape(b, t, hp, dh)
+    g = xg @ p["wg"]
+    dec = jnp.tanh(xw @ p["decay_w1"]) @ p["decay_w2"]
+    w = jnp.exp(-jnp.exp((p["w0"] + dec).astype(jnp.float32).clip(-8.0, 1.0)))
+    w = w.reshape(b, t, hp, dh)
+
+    y, state = ops.wkv6(r, k, v, w, p["u"], state)
+    # per-head group norm
+    y32 = y.astype(jnp.float32)
+    mu = y32.mean(-1, keepdims=True)
+    var = y32.var(-1, keepdims=True)
+    y = ((y32 - mu) * jax.lax.rsqrt(var + 64e-5) * p["ln_x_g"] + p["ln_x_b"]).astype(cd)
+    y = (y.reshape(b, t, hp * dh) * jax.nn.silu(g)) @ p["wo"]
+    return y, state
+
+
+def channel_mix(p, x, shift_last=None):
+    dx = _shift(x, shift_last) - x
+    xk = x + dx * p["mu_k"]
+    xr = x + dx * p["mu_r"]
+    k = jnp.square(jax.nn.relu(xk @ p["wk"]))
+    return jax.nn.sigmoid(xr @ p["wr"]) * (k @ p["wv"])
+
+
+# ---------------------------------------------------------------------- #
+# forward / decode
+# ---------------------------------------------------------------------- #
+
+
+def _cast_layer(lp, cd):
+    return jax.tree_util.tree_map(lambda a: a.astype(cd), lp)
+
+
+def forward(params, batch, cfg: ArchConfig, remat: bool = True,
+            ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    tokens = batch["tokens"]
+    cd = jnp.dtype(cfg.compute_dtype)
+    x = L.embed_tokens(params["embed"], tokens, cd)
+    x = L.apply_norm(cfg, x, params["ln_in"])
+
+    def body(h, lp):
+        lp = _cast_layer(lp, cd)
+        tm, _ = time_mix(lp["time_mix"], L.apply_norm(cfg, h, lp["ln1"]), cfg)
+        h = h + tm
+        h = h + channel_mix(lp["channel_mix"], L.apply_norm(cfg, h, lp["ln2"]))
+        return h, None
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params["layers"], unroll=cfg.scan_unroll)
+    x = L.apply_norm(cfg, x, params["ln_f"])
+    logits = L.lm_logits(x, params["lm_head"], cfg.vocab_size, cd)
+    return logits, {}
+
+
+def cache_table(cfg: ArchConfig, batch: int, max_len: int) -> Dict[str, Any]:
+    d, hp, dh = _dims(cfg)
+    lyr = cfg.n_layers
+    return {
+        "wkv_state": L.LeafSpec(
+            (lyr, batch, hp, dh, dh), ("layers", "batch", "heads", None, None), "zeros"
+        ),
+        "shift_tm": L.LeafSpec((lyr, batch, d), ("layers", "batch", None), "zeros"),
+        "shift_cm": L.LeafSpec((lyr, batch, d), ("layers", "batch", None), "zeros"),
+    }
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=None):
+    # WKV state is fp32 (recurrence numerics); shifts follow compute dtype.
+    c = L.materialize(jax.random.PRNGKey(0), cache_table(cfg, batch, max_len),
+                      jnp.float32)
+    cd = dtype or jnp.dtype(cfg.compute_dtype)
+    c["shift_tm"] = c["shift_tm"].astype(cd)
+    c["shift_cm"] = c["shift_cm"].astype(cd)
+    return c
+
+
+def cache_axes(cfg: ArchConfig, batch: int = 1, max_len: int = 1):
+    return L.axes_of(cache_table(cfg, batch, max_len))
+
+
+def decode_step(params, cache, tokens, pos, cfg: ArchConfig):
+    """O(1)-state decode: WKV state + the two token-shift carries."""
+    del pos  # recurrent: position-free
+    cd = jnp.dtype(cfg.compute_dtype)
+    x = L.embed_tokens(params["embed"], tokens, cd)          # (B, D)
+    x = L.apply_norm(cfg, x[:, None], params["ln_in"])[:, 0]
+    b, d = x.shape
+    _, hp, dh = _dims(cfg)
+
+    def body(h, xs):
+        lp, wkv_s, sh_tm, sh_cm = xs
+        lp = _cast_layer(lp, cd)
+        xin = L.apply_norm(cfg, h[:, None], lp["ln1"])[:, 0]
+        tm_out, wkv_s = _time_mix_step(lp["time_mix"], xin, cfg, wkv_s, sh_tm)
+        h = h + tm_out
+        xcm = L.apply_norm(cfg, h[:, None], lp["ln2"])[:, 0]
+        dxc = sh_cm - xcm
+        kcm = jnp.square(jax.nn.relu((xcm + dxc * lp["channel_mix"]["mu_k"])
+                                     @ lp["channel_mix"]["wk"]))
+        rcm = jax.nn.sigmoid((xcm + dxc * lp["channel_mix"]["mu_r"])
+                             @ lp["channel_mix"]["wr"])
+        h = h + rcm * (kcm @ lp["channel_mix"]["wv"])
+        return h, (wkv_s, xin, xcm)
+
+    x, (wkv_new, sh_tm_new, sh_cm_new) = jax.lax.scan(
+        body, x, (params["layers"], cache["wkv_state"],
+                  cache["shift_tm"], cache["shift_cm"])
+    )
+    new_cache = {"wkv_state": wkv_new, "shift_tm": sh_tm_new, "shift_cm": sh_cm_new}
+    x = L.apply_norm(cfg, x[:, None], params["ln_f"])[:, 0]
+    logits = L.lm_logits(x[:, None], params["lm_head"].astype(cd),
+                         cfg.vocab_size, cd)[:, 0]
+    return logits, new_cache
+
+
+def _time_mix_step(p, x, cfg, state, shift_last):
+    """Single-token time-mix: x (B, D), state (B,H,Dh,Dh)."""
+    b, d = x.shape
+    _, hp, dh = _dims(cfg)
+    dx = shift_last - x
+    xx = x + dx * p["mu_x"]
+    mix = jnp.tanh(xx @ p["mix_w1"]).reshape(b, 5, LORA_MIX)
+    delta = jnp.einsum("bfr,frd->bfd", mix, p["mix_w2"])
+    mixed = x[:, None, :] + dx[:, None, :] * (p["mu_rkvgw"][None] + delta)
+    xr, xk, xv, xg, xw = (mixed[:, i] for i in range(5))
+    r = (xr @ p["wr"]).reshape(b, hp, dh)
+    k = (xk @ p["wk"]).reshape(b, hp, dh)
+    v = (xv @ p["wv"]).reshape(b, hp, dh)
+    g = xg @ p["wg"]
+    dec = jnp.tanh(xw @ p["decay_w1"]) @ p["decay_w2"]
+    w = jnp.exp(-jnp.exp((p["w0"] + dec).astype(jnp.float32).clip(-8.0, 1.0)))
+    w = w.reshape(b, hp, dh)
+    y, state = ops.wkv6_decode_step(r, k, v, w, p["u"], state)
+    y32 = y.astype(jnp.float32)
+    mu = y32.mean(-1, keepdims=True)
+    var = y32.var(-1, keepdims=True)
+    y = ((y32 - mu) * jax.lax.rsqrt(var + 64e-5) * p["ln_x_g"] + p["ln_x_b"]).astype(x.dtype)
+    y = (y.reshape(b, hp * dh) * jax.nn.silu(g)) @ p["wo"]
+    return y, state

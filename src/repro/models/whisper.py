@@ -1,0 +1,208 @@
+"""Whisper-tiny: encoder-decoder with a stubbed conv/audio frontend.
+
+The conv frontend is a STUB per the assignment: ``input_specs()`` provides
+precomputed frame embeddings (B, enc_seq, D).  Encoder: non-causal
+self-attention layers over frames + sinusoidal positions.  Decoder:
+causal self-attention + cross-attention to the encoder output.
+
+Decode caches: decoder self-attn K/V (growing) + cross-attn K/V
+(precomputed once from the encoder output; here initialized from zero
+frames for the serve_step shape cell — the realism caveat for 32k decoder
+positions on whisper is recorded in DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models import transformer as T
+
+
+def dec_layer_table(cfg: ArchConfig) -> Dict[str, Any]:
+    return {
+        "ln1": L.norm_table(cfg),
+        "self_attn": T.attention_table(cfg),
+        "ln_cross": L.norm_table(cfg),
+        "cross_attn": T.attention_table(cfg),
+        "ln2": L.norm_table(cfg),
+        "ffn": T.ffn_table(cfg),
+    }
+
+
+def param_table(cfg: ArchConfig) -> Dict[str, Any]:
+    v = cfg.padded_vocab
+    return {
+        "embed": L.LeafSpec((v, cfg.d_model), ("vocab", "d_model"), "embed"),
+        "enc_layers": L.stacked(T.layer_table(cfg), cfg.n_enc_layers),
+        "ln_enc": L.norm_table(cfg),
+        "dec_layers": L.stacked(dec_layer_table(cfg), cfg.n_layers),
+        "ln_f": L.norm_table(cfg),
+    }
+
+
+def init(key: jax.Array, cfg: ArchConfig):
+    return L.materialize(key, param_table(cfg), jnp.dtype(cfg.param_dtype))
+
+
+def param_axes(cfg: ArchConfig):
+    return L.axes_of(param_table(cfg))
+
+
+def param_shapes(cfg: ArchConfig):
+    return L.shapes_of(param_table(cfg), jnp.dtype(cfg.param_dtype))
+
+
+# ---------------------------------------------------------------------- #
+# attention helpers (whisper has no RoPE: sinusoidal added to inputs)
+# ---------------------------------------------------------------------- #
+
+
+def _attn(p, xq, xkv, cfg, causal):
+    b, tq, d = xq.shape
+    cd = xq.dtype
+    hq = cfg.padded_heads
+    dh = cfg.resolved_head_dim
+    q = (xq @ p["wq"].astype(cd)).reshape(b, tq, hq, dh)
+    k = (xkv @ p["wk"].astype(cd)).reshape(b, xkv.shape[1], cfg.padded_kv_heads, dh)
+    v = (xkv @ p["wv"].astype(cd)).reshape(b, xkv.shape[1], cfg.padded_kv_heads, dh)
+    o = L.flash_attention(q, k, v, causal=causal, q_offset=0 if not causal else None)
+    return (o.reshape(b, tq, hq * dh) @ p["wo"].astype(cd)).astype(xq.dtype)
+
+
+def encode(params, frames: jax.Array, cfg: ArchConfig) -> jax.Array:
+    """frames: (B, enc_seq, D) stub embeddings -> encoder states."""
+    cd = jnp.dtype(cfg.compute_dtype)
+    pos = jnp.asarray(L.sinusoidal_positions(frames.shape[1], cfg.d_model), cd)
+    x = frames.astype(cd) + pos[None]
+
+    def body(h, lp):
+        h = h + _attn(lp["attn"], L.apply_norm(cfg, h, lp["ln1"]),
+                      L.apply_norm(cfg, h, lp["ln1"]), cfg, causal=False)
+        h = h + T.ffn_block(lp["ffn"], L.apply_norm(cfg, h, lp["ln2"]), cfg)
+        return h, None
+
+    x, _ = jax.lax.scan(body, x, params["enc_layers"], unroll=cfg.scan_unroll)
+    return L.apply_norm(cfg, x, params["ln_enc"])
+
+
+def forward(params, batch, cfg: ArchConfig, remat: bool = True):
+    """batch: tokens (B, T) decoder ids + enc_frames (B, enc_seq, D)."""
+    tokens = batch["tokens"]
+    cd = jnp.dtype(cfg.compute_dtype)
+    enc = encode(params, batch["enc_frames"], cfg)
+    x = L.embed_tokens(params["embed"], tokens, cd)
+    pos = jnp.asarray(L.sinusoidal_positions(x.shape[1], cfg.d_model), cd)
+    x = x + pos[None]
+
+    def body(h, lp):
+        h = h + _attn(lp["self_attn"], L.apply_norm(cfg, h, lp["ln1"]),
+                      L.apply_norm(cfg, h, lp["ln1"]), cfg, causal=True)
+        h = h + _attn(lp["cross_attn"], L.apply_norm(cfg, h, lp["ln_cross"]),
+                      enc, cfg, causal=False)
+        h = h + T.ffn_block(lp["ffn"], L.apply_norm(cfg, h, lp["ln2"]), cfg)
+        return h, None
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params["dec_layers"], unroll=cfg.scan_unroll)
+    x = L.apply_norm(cfg, x, params["ln_f"])
+    logits = L.lm_logits(x, params["embed"].T, cfg.vocab_size, cd)  # tied head
+    return logits, {}
+
+
+# ---------------------------------------------------------------------- #
+# decode
+# ---------------------------------------------------------------------- #
+
+
+def cache_table(cfg: ArchConfig, batch: int, max_len: int) -> Dict[str, Any]:
+    dh = cfg.resolved_head_dim
+    lyr = cfg.n_layers
+    return {
+        "k": L.LeafSpec((lyr, batch, max_len, cfg.padded_kv_heads, dh),
+                        ("layers", "batch", "kv_seq", None, None), "zeros"),
+        "v": L.LeafSpec((lyr, batch, max_len, cfg.padded_kv_heads, dh),
+                        ("layers", "batch", "kv_seq", None, None), "zeros"),
+        "cross_k": L.LeafSpec((lyr, batch, cfg.enc_seq, cfg.padded_kv_heads, dh),
+                              ("layers", "batch", None, None, None), "zeros"),
+        "cross_v": L.LeafSpec((lyr, batch, cfg.enc_seq, cfg.padded_kv_heads, dh),
+                              ("layers", "batch", None, None, None), "zeros"),
+    }
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.compute_dtype)
+    return L.materialize(jax.random.PRNGKey(0), cache_table(cfg, batch, max_len), dtype)
+
+
+def cache_axes(cfg: ArchConfig, batch: int = 1, max_len: int = 1):
+    return L.axes_of(cache_table(cfg, batch, max_len))
+
+
+def prime_cross_cache(params, cache, enc: jax.Array, cfg: ArchConfig):
+    """Fill the cross-attention K/V from encoder states (prefill)."""
+    cd = enc.dtype
+    dh = cfg.resolved_head_dim
+
+    def per_layer(lp):
+        k = (enc @ lp["cross_attn"]["wk"].astype(cd)).reshape(
+            enc.shape[0], enc.shape[1], cfg.padded_kv_heads, dh)
+        v = (enc @ lp["cross_attn"]["wv"].astype(cd)).reshape(
+            enc.shape[0], enc.shape[1], cfg.padded_kv_heads, dh)
+        return k, v
+
+    ks, vs = jax.vmap(per_layer)(params["dec_layers"])
+    cache = dict(cache)
+    cache["cross_k"] = ks.astype(cache["cross_k"].dtype)
+    cache["cross_v"] = vs.astype(cache["cross_v"].dtype)
+    return cache
+
+
+def decode_step(params, cache, tokens, pos, cfg: ArchConfig):
+    cd = jnp.dtype(cfg.compute_dtype)
+    x = L.embed_tokens(params["embed"], tokens, cd)
+    b = x.shape[0]
+    hq = cfg.padded_heads
+    dh = cfg.resolved_head_dim
+    postab = jnp.asarray(L.sinusoidal_positions(cache["k"].shape[2], cfg.d_model), cd)
+    x = x + postab[pos]
+
+    def body(h, xs):
+        lp, kc, vc, ck, cv = xs
+        p = lp["self_attn"]
+        xin = L.apply_norm(cfg, h[:, None], lp["ln1"])[:, 0]
+        q = (xin @ p["wq"].astype(cd)).reshape(b, hq, dh)
+        knew = (xin @ p["wk"].astype(cd)).reshape(b, cfg.padded_kv_heads, dh)
+        vnew = (xin @ p["wv"].astype(cd)).reshape(b, cfg.padded_kv_heads, dh)
+        kc = jax.lax.dynamic_update_slice_in_dim(kc, knew[:, None].astype(kc.dtype), pos, 1)
+        vc = jax.lax.dynamic_update_slice_in_dim(vc, vnew[:, None].astype(vc.dtype), pos, 1)
+        lengths = jnp.full((b,), pos + 1, jnp.int32)
+        a = L.decode_attention(q, kc, vc, lengths).reshape(b, hq * dh)
+        h = h + (a.astype(cd) @ p["wo"].astype(cd)).astype(h.dtype)
+        # cross attention over the (fixed) encoder cache
+        pc = lp["cross_attn"]
+        xin = L.apply_norm(cfg, h[:, None], lp["ln_cross"])[:, 0]
+        qx = (xin @ pc["wq"].astype(cd)).reshape(b, hq, dh)
+        enc_len = jnp.full((b,), ck.shape[1], jnp.int32)
+        ax = L.decode_attention(qx, ck, cv, enc_len).reshape(b, hq * dh)
+        h = h + (ax.astype(cd) @ pc["wo"].astype(cd)).astype(h.dtype)
+        xff = L.apply_norm(cfg, h[:, None], lp["ln2"])[:, 0]
+        h = h + T.ffn_block(lp["ffn"], xff[:, None], cfg)[:, 0]
+        return h, (kc, vc)
+
+    x, (kc, vc) = jax.lax.scan(
+        body, x,
+        (params["dec_layers"], cache["k"], cache["v"],
+         cache["cross_k"], cache["cross_v"]),
+    )
+    new_cache = dict(cache)
+    new_cache["k"], new_cache["v"] = kc, vc
+    x = L.apply_norm(cfg, x[:, None], params["ln_f"])[:, 0]
+    logits = L.lm_logits(x[:, None], params["embed"].T.astype(cd),
+                         cfg.vocab_size, cd)[:, 0]
+    return logits, new_cache

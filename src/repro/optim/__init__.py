@@ -1,0 +1,10 @@
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.optim.compression import compress_grads, decompress_grads
+
+__all__ = [
+    "AdamWConfig",
+    "adamw_init",
+    "adamw_update",
+    "compress_grads",
+    "decompress_grads",
+]

@@ -1,0 +1,74 @@
+"""AdamW with decoupled weight decay and global-norm clipping.
+
+Optimizer state (m, v) mirrors the parameter pytree and inherits the same
+PartitionSpecs, so TP-sharded params get TP-sharded moments for free.
+fp32 moments regardless of parameter dtype.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+
+
+def adamw_init(params: Any) -> Dict[str, Any]:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "m": jax.tree_util.tree_map(zeros, params),
+        "v": jax.tree_util.tree_map(zeros, params),
+    }
+
+
+def _schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    warm = jnp.minimum(1.0, (step + 1) / max(1, cfg.warmup_steps))
+    return cfg.lr * warm
+
+
+def adamw_update(
+    cfg: AdamWConfig,
+    params: Any,
+    grads: Any,
+    opt_state: Dict[str, Any],
+    step: jax.Array,
+) -> Tuple[Any, Dict[str, Any]]:
+    # global-norm clip in fp32
+    leaves = jax.tree_util.tree_leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-12))
+    lr = _schedule(cfg, step)
+    b1, b2 = cfg.beta1, cfg.beta2
+    bc1 = 1.0 - b1 ** (step.astype(jnp.float32) + 1.0)
+    bc2 = 1.0 - b2 ** (step.astype(jnp.float32) + 1.0)
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32) * scale
+        m = b1 * m + (1 - b1) * g32
+        v = b2 * v + (1 - b2) * jnp.square(g32)
+        mh = m / bc1
+        vh = v / bc2
+        step_val = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step_val).astype(p.dtype), m, v
+
+    flat_p, tdef = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_m = jax.tree_util.tree_leaves(opt_state["m"])
+    flat_v = jax.tree_util.tree_leaves(opt_state["v"])
+    new = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree_util.tree_unflatten(tdef, [n[0] for n in new])
+    new_m = jax.tree_util.tree_unflatten(tdef, [n[1] for n in new])
+    new_v = jax.tree_util.tree_unflatten(tdef, [n[2] for n in new])
+    return new_p, {"m": new_m, "v": new_v}

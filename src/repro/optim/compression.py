@@ -1,0 +1,47 @@
+"""Error-feedback int8 gradient compression for the slow cross-pod hop.
+
+The Cluster<->Booster link (pod axis) is the scarce fabric resource, just
+as in DEEP-ER's two-module prototype.  Before the cross-pod gradient
+reduction we can quantize grads to int8 with per-tensor scales and an
+error-feedback residual (the quantization error is added back into the
+next step's grads, keeping the optimizer unbiased in expectation).
+
+4x less cross-pod traffic; the residual state is checkpointed with the
+optimizer state so restarts stay exact.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_grads(grads: Any, residual: Any) -> Tuple[Any, Any, Any]:
+    """-> (int8 grads, scales, new residual carried to next step)."""
+
+    def comp(g, r):
+        g32 = g.astype(jnp.float32) + r
+        scale = jnp.maximum(jnp.max(jnp.abs(g32)), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+        new_r = g32 - q.astype(jnp.float32) * scale
+        return q, scale, new_r
+
+    out = jax.tree_util.tree_map(comp, grads, residual)
+    qs = jax.tree_util.tree_map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    ss = jax.tree_util.tree_map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    rs = jax.tree_util.tree_map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return qs, ss, rs
+
+
+def decompress_grads(qs: Any, ss: Any) -> Any:
+    return jax.tree_util.tree_map(
+        lambda q, s: q.astype(jnp.float32) * s, qs, ss
+    )
+
+
+def init_residual(grads_like: Any) -> Any:
+    return jax.tree_util.tree_map(
+        lambda g: jnp.zeros(g.shape, jnp.float32), grads_like
+    )

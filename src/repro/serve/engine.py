@@ -1,0 +1,82 @@
+"""Batched serving loop with checkpointable serving state.
+
+Wraps the jitted serve_step with: greedy batched decoding, KV-cache
+management, and SCR checkpointing of the *serving* state (cache + stream
+positions) so an interrupted decode resumes byte-identically — the
+inference-side counterpart of the trainer's fault tolerance
+(demonstrated end-to-end in examples/serve.py).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core.scr import SCRManager
+from repro.models.registry import ModelApi
+from repro.train.step import make_serve_step
+
+
+class ServeEngine:
+    def __init__(self, cfg: ArchConfig, model: ModelApi, params: Any,
+                 batch: int, max_len: int, scr: Optional[SCRManager] = None):
+        self.cfg = cfg
+        self.model = model
+        self.params = params
+        self.max_len = max_len
+        self.cache = model.init_cache(cfg, batch, max_len)
+        self.pos = 0
+        self.last: Optional[jax.Array] = None
+        self.scr = scr
+        self._step = jax.jit(make_serve_step(cfg, model))
+
+    def prefill(self, prompt: jax.Array) -> jax.Array:
+        """Token-by-token prefill (tiny models; batched prefill uses
+        launch/dryrun's prefill_step path)."""
+        nxt = prompt[:, 0]
+        for i in range(prompt.shape[1]):
+            nxt, self.cache = self._step(self.params, self.cache,
+                                         prompt[:, i], jnp.int32(self.pos))
+            self.pos += 1
+        self.last = nxt
+        return nxt
+
+    def decode(self, n_tokens: int) -> List[np.ndarray]:
+        assert self.last is not None, "prefill first"
+        out = []
+        for _ in range(n_tokens):
+            if self.pos >= self.max_len:
+                break
+            self.last, self.cache = self._step(self.params, self.cache,
+                                               self.last, jnp.int32(self.pos))
+            self.pos += 1
+            out.append(np.asarray(self.last))
+        return out
+
+    # -- serving-state checkpoint/restore -------------------------------- #
+
+    def serving_state(self) -> Dict[str, Any]:
+        batch = jax.tree_util.tree_leaves(self.cache)[0].shape[1]
+        last = (np.asarray(self.last) if self.last is not None
+                else np.zeros((batch,), np.int32))  # template-friendly
+        return {
+            "cache": jax.device_get(self.cache),
+            "last": last,
+            "pos": np.int32(self.pos),
+        }
+
+    def save(self) -> None:
+        assert self.scr is not None
+        self.scr.save(self.pos, self.serving_state())
+
+    def restore(self) -> int:
+        assert self.scr is not None
+        state, step = self.scr.restore(self.serving_state())
+        self.cache = jax.tree_util.tree_map(jnp.asarray, state["cache"])
+        self.last = jnp.asarray(state["last"])
+        self.pos = int(state["pos"])
+        return step

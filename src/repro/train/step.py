@@ -1,0 +1,172 @@
+"""train_step / serve_step builders shared by the trainer and the dry-run.
+
+TrainState is a plain pytree dict {params, opt{m,v}, step} so the whole
+thing flows through serialization, SCR checkpointing, and jit shardings
+without special casing.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.registry import ModelApi
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+
+ROUTER_AUX_COEF = 0.001
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean next-token CE; logits may be vocab-padded (cols masked -1e30)."""
+    logits = logits.astype(jnp.float32)
+    shifted = logits[:, :-1]
+    targets = labels[:, 1:]
+    lse = jax.nn.logsumexp(shifted, axis=-1)
+    ll = jnp.take_along_axis(shifted, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - ll)
+
+
+def _precast(params, cfg: ArchConfig):
+    """Cast fp32 masters to compute dtype once, outside the layer scan.
+
+    Inside the scan, each layer otherwise re-reads its fp32 slice and
+    converts on every fwd / remat / bwd pass; pre-casting replaces three
+    fp32 streams with one fp32 + three bf16 streams (~45% weight-traffic
+    cut on the memory roofline term).  The cast is differentiable, so
+    gradients flow back to the fp32 masters unchanged.
+    """
+    cd = jnp.dtype(cfg.compute_dtype)
+    return jax.tree_util.tree_map(
+        lambda p: p.astype(cd) if jnp.issubdtype(p.dtype, jnp.floating) else p,
+        params,
+    )
+
+
+def make_loss_fn(cfg: ArchConfig, model: ModelApi, mesh=None, remat: bool = True):
+    extra: Dict[str, Any] = {}
+    if model.family == "moe" and mesh is not None:
+        extra["mesh"] = mesh
+
+    def loss_fn(params, batch):
+        if cfg.precast_params:
+            params = _precast(params, cfg)
+        logits, aux = model.forward(params, batch, cfg, remat=remat, **extra)
+        loss = cross_entropy(logits, batch["labels"])
+        if "router_aux" in aux:
+            loss = loss + ROUTER_AUX_COEF * aux["router_aux"]
+        return loss, aux
+
+    return loss_fn
+
+
+def init_train_state(key: jax.Array, cfg: ArchConfig, model: ModelApi) -> Dict[str, Any]:
+    params = model.init(key, cfg)
+    return {
+        "params": params,
+        "opt": adamw_init(params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def train_state_axes(cfg: ArchConfig, model: ModelApi) -> Dict[str, Any]:
+    """Logical axes pytree matching init_train_state's structure."""
+    p_axes = model.param_axes(cfg)
+    return {
+        "params": p_axes,
+        "opt": {"m": p_axes, "v": p_axes},
+        "step": (),
+    }
+
+
+def train_state_shapes(cfg: ArchConfig, model: ModelApi) -> Dict[str, Any]:
+    """ShapeDtypeStruct pytree (dry-run: no allocation)."""
+    params = model.param_shapes(cfg)
+    opt = jax.eval_shape(adamw_init, params)
+    return {
+        "params": params,
+        "opt": opt,
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def make_train_step(
+    cfg: ArchConfig,
+    model: ModelApi,
+    opt_cfg: Optional[AdamWConfig] = None,
+    mesh=None,
+    remat: bool = True,
+    micro_batches: int = 1,
+) -> Callable:
+    """One optimizer step; with micro_batches > 1 gradients are accumulated
+    over a lax.scan of microbatches (per-device live activations shrink by
+    the same factor — how the train_4k cells fit 16 GB HBM)."""
+    opt_cfg = opt_cfg or AdamWConfig()
+    loss_fn = make_loss_fn(cfg, model, mesh=mesh, remat=remat)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(state, batch):
+        if micro_batches == 1:
+            (loss, aux), grads = grad_fn(state["params"], batch)
+        else:
+            def split(x):
+                b = x.shape[0]
+                assert b % micro_batches == 0, (b, micro_batches)
+                return x.reshape(micro_batches, b // micro_batches, *x.shape[1:])
+
+            micros = jax.tree_util.tree_map(split, batch)
+            zero_g = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state["params"]
+            )
+
+            def acc_body(carry, mb):
+                g_acc, loss_acc = carry
+                (l, _aux), g = grad_fn(state["params"], mb)
+                g_acc = jax.tree_util.tree_map(
+                    lambda a, b_: a + b_.astype(jnp.float32), g_acc, g
+                )
+                return (g_acc, loss_acc + l), None
+
+            (grads, loss), _ = jax.lax.scan(
+                acc_body, (zero_g, jnp.zeros((), jnp.float32)), micros
+            )
+            grads = jax.tree_util.tree_map(lambda g: g / micro_batches, grads)
+            loss = loss / micro_batches
+            aux = {}
+        params, opt = adamw_update(opt_cfg, state["params"], grads, state["opt"],
+                                   state["step"])
+        new_state = {"params": params, "opt": opt, "step": state["step"] + 1}
+        metrics = {"loss": loss}
+        if "router_aux" in aux:
+            metrics["router_aux"] = aux["router_aux"]
+        return new_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig, model: ModelApi, mesh=None) -> Callable:
+    extra: Dict[str, Any] = {}
+    if model.family == "moe" and mesh is not None:
+        extra["mesh"] = mesh
+    if cfg.seq_parallel and mesh is not None:
+        extra["mesh"] = mesh
+
+    def prefill_step(params, batch):
+        if cfg.precast_params:
+            params = _precast(params, cfg)
+        logits, _ = model.forward(params, batch, cfg, remat=False, **extra)
+        return logits[:, -1].argmax(axis=-1).astype(jnp.int32)
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ArchConfig, model: ModelApi) -> Callable:
+    def serve_step(params, cache, tokens, pos):
+        logits, cache = model.decode_step(params, cache, tokens, pos, cfg)
+        nxt = logits.argmax(axis=-1).astype(jnp.int32)
+        return nxt, cache
+
+    return serve_step

@@ -1,0 +1,17 @@
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def tmp_cluster(tmp_path):
+    from repro.cluster.topology import VirtualCluster
+
+    cl = VirtualCluster(n_cluster=4, n_booster=4, root=tmp_path / "run",
+                        xor_group_size=4)
+    yield cl
+    cl.teardown()
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

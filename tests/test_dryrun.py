@@ -1,0 +1,172 @@
+"""Dry-run machinery: collective parsing units + small-mesh compile smoke.
+
+The full 16x16 / 2x16x16 sweeps run via ``python -m repro.launch.dryrun
+--all [--multi-pod]`` (results in benchmarks/results/); here we verify the
+machinery itself on a 2x2(x2) mesh in subprocesses (jax pins the device
+count at first init, so each mesh size needs a fresh interpreter).
+"""
+
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.launch.dryrun import parse_collectives
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def run_sub(code: str, timeout=420):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = str(REPO / "src")
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=timeout, env=env)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+def test_parse_collectives_accounting():
+    hlo = """
+  %ar = f32[128,64]{1,0} all-reduce(%x), replica_groups=[2,4]<=[8], to_apply=%add
+  %ag = bf16[256]{0} all-gather(%y), replica_groups=[4,2]<=[8], dimensions={0}
+  %rs = f32[32]{0} reduce-scatter(%z), replica_groups=[2,4]<=[8], to_apply=%add
+  %cp = s32[16,16]{1,0} collective-permute(%w), source_target_pairs={{0,1}}
+  %tup = (f32[8]{0}, f32[8]{0}) all-reduce(%a, %b), replica_groups=[1,8]<=[8], to_apply=%add
+"""
+    got = parse_collectives(hlo)
+    assert got["all-reduce"]["count"] == 2
+    # f32[128,64]=32768B * 2*(4-1)/4 + tuple 2*32B * 2*(8-1)/8
+    assert abs(got["all-reduce"]["bytes"] - (32768 * 1.5 + 64 * 1.75)) < 1
+    assert got["all-gather"]["count"] == 1
+    assert abs(got["all-gather"]["bytes"] - 512 * 0.5) < 1
+    assert abs(got["reduce-scatter"]["bytes"] - 128 * 3) < 1
+    assert got["collective-permute"]["bytes"] == 16 * 16 * 4
+
+
+def test_parse_collectives_ignores_unrelated():
+    assert parse_collectives("%f = f32[2] add(%a, %b)\n") == {}
+
+
+@pytest.mark.slow
+def test_small_mesh_train_cell_compiles():
+    out = run_sub(
+        "from repro.launch.dryrun import lower_cell\n"
+        "from repro.launch.mesh import make_test_mesh\n"
+        "import json\n"
+        "rec = lower_cell('whisper-tiny', 'train_4k', make_test_mesh(), tp=2)\n"
+        "print(json.dumps({'ok': rec['ok'], 'flops': rec['hlo_flops'],\n"
+        "                  'coll': sum(v['bytes'] for v in rec['collectives'].values())}))\n"
+    )
+    rec = json.loads(out.strip().splitlines()[-1])
+    assert rec["ok"] and rec["flops"] > 0 and rec["coll"] > 0
+
+
+@pytest.mark.slow
+def test_small_mesh_multipod_decode_compiles():
+    out = run_sub(
+        "from repro.launch.dryrun import lower_cell\n"
+        "from repro.launch.mesh import make_test_mesh\n"
+        "import json\n"
+        "mesh = make_test_mesh(multi_pod=True)\n"
+        "rec = lower_cell('whisper-tiny', 'decode_32k', mesh, tp=2, fast=True)\n"
+        "print(json.dumps({'ok': rec['ok'], 'mesh': rec['mesh']}))\n"
+    )
+    rec = json.loads(out.strip().splitlines()[-1])
+    assert rec["ok"] and rec["mesh"] == "2x2x2"
+
+
+@pytest.mark.slow
+def test_small_mesh_long500k_rwkv_compiles():
+    out = run_sub(
+        "from repro.launch.dryrun import lower_cell\n"
+        "from repro.launch.mesh import make_test_mesh\n"
+        "import json\n"
+        "rec = lower_cell('rwkv6-3b', 'long_500k', make_test_mesh(), tp=2, fast=True)\n"
+        "print(json.dumps({'ok': rec['ok']}))\n"
+    )
+    assert json.loads(out.strip().splitlines()[-1])["ok"]
+
+
+@pytest.mark.slow
+def test_offload_engine_on_split_mesh():
+    out = run_sub(
+        "import jax, numpy as np\n"
+        "import jax.numpy as jnp\n"
+        "from jax.sharding import PartitionSpec as P\n"
+        "from repro.core.offload import split_mesh, OffloadEngine\n"
+        "from repro.cluster.topology import Module\n"
+        "mesh = jax.make_mesh((4, 2), ('data', 'model'))\n"
+        "mods = split_mesh(mesh, 2, axis='data')\n"
+        "eng = OffloadEngine(mods)\n"
+        "x = jnp.arange(16.0).reshape(4, 4)\n"
+        "y = eng.offload(lambda a: a * 2, Module.BOOSTER, x,\n"
+        "                in_specs=[P('data', None)], out_specs=P('data', None))\n"
+        "z = eng.gather(y, Module.CLUSTER, P())\n"
+        "assert np.allclose(np.asarray(z), np.asarray(x) * 2)\n"
+        "assert set(y.devices()) == set(mods[Module.BOOSTER].mesh.devices.flat)\n"
+        "print('OK')\n"
+    )
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_seq_parallel_matches_baseline():
+    """Ulysses seq-parallel prefill == baseline forward (MLA + GQA)."""
+    out = run_sub(
+        "import dataclasses, jax, numpy as np\n"
+        "import jax.numpy as jnp\n"
+        "from repro.configs import get_config\n"
+        "from repro.models.registry import get_model\n"
+        "from repro.models import transformer as T\n"
+        "mesh = jax.make_mesh((2, 2), ('data', 'model'))\n"
+        "for arch in ['minicpm3-4b', 'starcoder2-7b']:\n"
+        "    cfg = get_config(arch).reduced()\n"
+        "    cfg = dataclasses.replace(cfg, tp=2, tie_embeddings=False)\n"
+        "    cfg_sp = dataclasses.replace(cfg, seq_parallel=True)\n"
+        "    params = T.init(jax.random.PRNGKey(0), cfg)\n"
+        "    toks = jax.random.randint(jax.random.PRNGKey(1), (4, 16), 0,\n"
+        "                              cfg.vocab_size, jnp.int32)\n"
+        "    base, _ = T.forward(params, {'tokens': toks}, cfg, remat=False)\n"
+        "    with mesh:\n"
+        "        sp, _ = jax.jit(lambda p, b: T.forward(p, b, cfg_sp,\n"
+        "                        remat=False, mesh=mesh))(params, {'tokens': toks})\n"
+        "    a = np.asarray(base[..., :cfg.vocab_size], np.float32)\n"
+        "    b = np.asarray(sp[..., :cfg.vocab_size], np.float32)\n"
+        "    err = np.abs(a - b).max()\n"
+        "    rel = err / max(np.abs(a).max(), 1e-6)\n"
+        "    assert rel < 3e-2, (arch, err, rel)\n"
+        "    print(arch, 'rel_err', rel)\n"
+        "print('OK')\n"
+    )
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_xor_all_reduce_butterfly():
+    """The NAM-equivalent on-device parity: butterfly XOR over a mesh axis."""
+    out = run_sub(
+        "import jax, numpy as np\n"
+        "import jax.numpy as jnp\n"
+        "from jax.sharding import PartitionSpec as P\n"
+        "from jax.experimental.shard_map import shard_map\n"
+        "from repro.distributed.collectives import xor_all_reduce\n"
+        "mesh = jax.make_mesh((8,), ('model',))\n"
+        "rng = np.random.default_rng(0)\n"
+        "blocks = rng.integers(-2**31, 2**31, size=(8, 16, 128), dtype=np.int32)\n"
+        "want = blocks[0].copy()\n"
+        "for b in blocks[1:]:\n"
+        "    want ^= b\n"
+        "x = jnp.asarray(blocks.reshape(8 * 16, 128))\n"
+        "f = shard_map(lambda v: xor_all_reduce(v, 'model'), mesh=mesh,\n"
+        "              in_specs=P('model', None), out_specs=P('model', None),\n"
+        "              check_rep=False)\n"
+        "got = np.asarray(jax.jit(f)(x)).reshape(8, 16, 128)\n"
+        "for i in range(8):\n"
+        "    assert np.array_equal(got[i], want), i\n"
+        "print('OK')\n"
+    )
+    assert "OK" in out

@@ -1,0 +1,155 @@
+"""SION containers, BeeOND cache semantics, tier capacity/perf model."""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.io.beeond import CacheFS
+from repro.io.sion import SionContainer
+from repro.memory.tiers import (
+    CapacityError,
+    DEEPER_TIERS,
+    MemoryTier,
+    TierKind,
+    TierSpec,
+)
+
+
+def mem_tier(capacity=10**9, **kw):
+    spec = TierSpec(TierKind.DRAM, capacity, 1e9, 1e9, 1e-6, **kw)
+    return MemoryTier(spec)
+
+
+# ---------------------------------------------------------------------- #
+# SION
+# ---------------------------------------------------------------------- #
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    chunks=st.lists(
+        st.tuples(st.integers(0, 15), st.binary(min_size=0, max_size=512)),
+        min_size=1, max_size=12,
+    ),
+    align=st.sampled_from([1, 64, 4096]),
+)
+def test_sion_roundtrip(chunks, align):
+    c = SionContainer(align=align)
+    for i, (rank, data) in enumerate(chunks):
+        c.write_chunk(rank, f"chunk{i}", data)
+    blob = c.seal()
+    c2 = SionContainer.from_bytes(blob)
+    for i, (rank, data) in enumerate(chunks):
+        assert c2.read_chunk(rank, f"chunk{i}") == data
+
+
+def test_sion_alignment():
+    c = SionContainer(align=4096)
+    c.write_chunk(0, "a", b"x" * 10)
+    c.write_chunk(1, "b", b"y" * 10)
+    c.seal()
+    offsets = [e["offset"] for e in c._require_index()]
+    assert all(o % 4096 == 0 for o in offsets)
+
+
+def test_sion_store_open(tmp_path):
+    tier = MemoryTier(TierSpec(TierKind.NVM, 10**9, 1e9, 1e9, 1e-6), tmp_path)
+    c = SionContainer()
+    c.write_chunk(3, "data", b"hello world")
+    c.store(tier, "test.sion")
+    c2 = SionContainer.open(tier, "test.sion")
+    assert c2.read_rank(3) == {"data": b"hello world"}
+    assert c2.chunks() == [(3, "data")]
+
+
+def test_sion_rejects_garbage():
+    with pytest.raises(IOError):
+        SionContainer.from_bytes(b"NOTSION" + b"\x00" * 100)
+
+
+def test_sion_seal_freezes():
+    c = SionContainer()
+    c.write_chunk(0, "a", b"x")
+    c.seal()
+    with pytest.raises(RuntimeError):
+        c.write_chunk(1, "b", b"y")
+
+
+# ---------------------------------------------------------------------- #
+# BeeOND cache
+# ---------------------------------------------------------------------- #
+
+
+def test_cache_sync_writes_through():
+    local, glob = mem_tier(), mem_tier()
+    fs = CacheFS(local, glob, mode="sync")
+    fs.put("k", b"data")
+    assert local.get("k") == b"data" and glob.get("k") == b"data"
+
+
+def test_cache_async_drains():
+    local, glob = mem_tier(), mem_tier()
+    fs = CacheFS(local, glob, mode="async")
+    for i in range(20):
+        fs.put(f"k{i}", bytes([i]) * 100)
+    fs.flush()
+    for i in range(20):
+        assert glob.get(f"k{i}") == bytes([i]) * 100
+    fs.close()
+
+
+def test_cache_local_only_never_touches_global():
+    local, glob = mem_tier(), mem_tier()
+    fs = CacheFS(local, glob, mode="local-only")
+    fs.put("k", b"data")
+    assert local.exists("k") and not glob.exists("k")
+
+
+def test_cache_read_through_fills():
+    local, glob = mem_tier(), mem_tier()
+    glob.put("cold", b"from-global")
+    fs = CacheFS(local, glob, mode="sync")
+    assert fs.get("cold") == b"from-global"
+    assert local.exists("cold")  # cache filled
+
+
+def test_cache_async_faster_foreground_than_sync():
+    """The BeeOND argument: async put hides the global-tier latency."""
+    slow_global = MemoryTier(TierSpec(TierKind.GLOBAL, 10**9, 1e6, 1e6, 1e-3,
+                                      shared=True))
+    t_sync = CacheFS(mem_tier(), slow_global, mode="sync").put("a", b"x" * 10000)
+    t_async = CacheFS(mem_tier(), mem_tier(), mode="async").put("a", b"x" * 10000)
+    assert t_async < t_sync
+
+
+# ---------------------------------------------------------------------- #
+# tiers
+# ---------------------------------------------------------------------- #
+
+
+def test_tier_capacity_enforced():
+    tier = mem_tier(capacity=100)
+    with pytest.raises(CapacityError):
+        tier.put("big", b"x" * 200)
+
+
+def test_shared_tier_divides_bandwidth():
+    spec = DEEPER_TIERS[TierKind.GLOBAL]
+    assert spec.write_time(10**9, streams=16) > 10 * spec.write_time(10**9, streams=1)
+
+
+def test_local_tier_constant_bandwidth():
+    spec = DEEPER_TIERS[TierKind.NVM]
+    assert spec.write_time(10**8, streams=16) == spec.write_time(10**8, streams=1)
+
+
+def test_tier_delete_and_keys(tmp_path):
+    tier = MemoryTier(TierSpec(TierKind.NVM, 10**9, 1e9, 1e9, 0), tmp_path)
+    tier.put("a/b.bin", b"1")
+    tier.put("a/c.bin", b"2")
+    assert list(tier.keys()) == ["a/b.bin", "a/c.bin"]
+    tier.delete("a/b.bin")
+    assert list(tier.keys()) == ["a/c.bin"]

@@ -1,0 +1,236 @@
+"""Per-kernel allclose sweeps: Pallas (interpret) + chunked jnp vs oracles."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.mamba2_ssd import mamba2_pallas
+from repro.kernels.rwkv6_scan import wkv6_pallas
+from repro.models.layers import decode_attention, flash_attention
+
+
+def keys(seed, n):
+    return jax.random.split(jax.random.PRNGKey(seed), n)
+
+
+# ---------------------------------------------------------------------- #
+# flash attention
+# ---------------------------------------------------------------------- #
+
+FLASH_CASES = [
+    # b, tq, tk, hq, hkv, d, causal
+    (1, 16, 16, 2, 2, 8, True),
+    (2, 32, 32, 4, 2, 16, True),
+    (1, 24, 40, 4, 1, 8, True),      # GQA + decode-offset
+    (1, 16, 16, 2, 2, 8, False),
+    (2, 33, 33, 3, 3, 8, True),      # non-divisible tiles
+    (1, 7, 29, 2, 1, 8, True),
+]
+
+
+@pytest.mark.parametrize("case", FLASH_CASES)
+def test_pallas_flash_vs_ref(case):
+    b, tq, tk, hq, hkv, d, causal = case
+    ks = keys(sum(case[:-1]), 3)
+    q = jax.random.normal(ks[0], (b, tq, hq, d))
+    k = jax.random.normal(ks[1], (b, tk, hkv, d))
+    v = jax.random.normal(ks[2], (b, tk, hkv, d))
+    got = flash_attention_pallas(q, k, v, causal=causal, block_q=8, block_k=8,
+                                 interpret=True)
+    want = ref.mha_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=3e-6, rtol=1e-5)
+
+
+@pytest.mark.parametrize("case", FLASH_CASES)
+def test_jnp_flash_vs_ref(case):
+    b, tq, tk, hq, hkv, d, causal = case
+    ks = keys(100 + sum(case[:-1]), 3)
+    q = jax.random.normal(ks[0], (b, tq, hq, d))
+    k = jax.random.normal(ks[1], (b, tk, hkv, d))
+    v = jax.random.normal(ks[2], (b, tk, hkv, d))
+    got = flash_attention(q, k, v, causal=causal, q_chunk=8, k_chunk=8)
+    want = ref.mha_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=3e-6, rtol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_dtypes(dtype):
+    ks = keys(7, 3)
+    q = jax.random.normal(ks[0], (2, 16, 4, 8)).astype(dtype)
+    k = jax.random.normal(ks[1], (2, 16, 2, 8)).astype(dtype)
+    v = jax.random.normal(ks[2], (2, 16, 2, 8)).astype(dtype)
+    got = flash_attention_pallas(q, k, v, block_q=8, block_k=8, interpret=True)
+    want = ref.mha_ref(q.astype(jnp.float32), k.astype(jnp.float32),
+                       v.astype(jnp.float32))
+    tol = 3e-6 if dtype == jnp.float32 else 3e-2
+    assert got.dtype == dtype
+    np.testing.assert_allclose(np.asarray(got, np.float32), np.asarray(want),
+                               atol=tol, rtol=tol)
+
+
+def test_decode_attention_vs_ref():
+    ks = keys(3, 3)
+    q = jax.random.normal(ks[0], (2, 6, 8))
+    kc = jax.random.normal(ks[1], (2, 20, 2, 8))
+    vc = jax.random.normal(ks[2], (2, 20, 2, 8))
+    lengths = jnp.array([5, 17])
+    got = decode_attention(q, kc, vc, lengths)
+    want = ref.decode_attention_ref(q, kc, vc, lengths)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-6, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------- #
+# rwkv6
+# ---------------------------------------------------------------------- #
+
+WKV_CASES = [(1, 16, 2, 8), (2, 50, 3, 16), (1, 33, 2, 8), (1, 128, 1, 32)]
+
+
+def wkv_inputs(case, seed=0):
+    b, t, h, d = case
+    ks = keys(seed + sum(case), 5)
+    r = jax.random.normal(ks[0], (b, t, h, d)) * 0.5
+    k = jax.random.normal(ks[1], (b, t, h, d)) * 0.5
+    v = jax.random.normal(ks[2], (b, t, h, d))
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (b, t, h, d))) * 0.5 + 0.45
+    u = jax.random.normal(ks[4], (h, d)) * 0.1
+    return r, k, v, w, u
+
+
+@pytest.mark.parametrize("case", WKV_CASES)
+def test_wkv6_chunked_vs_ref(case):
+    r, k, v, w, u = wkv_inputs(case)
+    got, gs = ops.wkv6_chunked(r, k, v, w, u, chunk=16, d_block=8)
+    want, ws = ref.rwkv6_ref(r, k, v, w, u)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=5e-5,
+                               rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(gs), np.asarray(ws), atol=5e-5,
+                               rtol=1e-4)
+
+
+@pytest.mark.parametrize("case", WKV_CASES)
+def test_wkv6_pallas_vs_ref(case):
+    r, k, v, w, u = wkv_inputs(case, seed=9)
+    got, gs = wkv6_pallas(r, k, v, w, u, chunk=16, interpret=True)
+    want, ws = ref.rwkv6_ref(r, k, v, w, u)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=5e-5,
+                               rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(gs), np.asarray(ws), atol=5e-5,
+                               rtol=1e-4)
+
+
+def test_wkv6_decode_chain_matches_scan():
+    case = (2, 20, 2, 8)
+    r, k, v, w, u = wkv_inputs(case, seed=4)
+    want, _ = ref.rwkv6_ref(r, k, v, w, u)
+    state = jnp.zeros((2, 2, 8, 8))
+    outs = []
+    for i in range(20):
+        y, state = ops.wkv6_decode_step(r[:, i], k[:, i], v[:, i], w[:, i], u, state)
+        outs.append(y)
+    np.testing.assert_allclose(np.asarray(jnp.stack(outs, 1)), np.asarray(want),
+                               atol=5e-5, rtol=1e-4)
+
+
+def test_wkv6_state_chaining():
+    """Splitting a sequence across two chunked calls == one call."""
+    case = (1, 32, 2, 8)
+    r, k, v, w, u = wkv_inputs(case, seed=11)
+    full, fs = ops.wkv6_chunked(r, k, v, w, u, chunk=8, d_block=8)
+    h1, s1 = ops.wkv6_chunked(r[:, :16], k[:, :16], v[:, :16], w[:, :16], u,
+                              chunk=8, d_block=8)
+    h2, s2 = ops.wkv6_chunked(r[:, 16:], k[:, 16:], v[:, 16:], w[:, 16:], u,
+                              state=s1, chunk=8, d_block=8)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([h1, h2], 1)),
+                               np.asarray(full), atol=5e-5, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(s2), np.asarray(fs), atol=5e-5, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------- #
+# mamba2 SSD
+# ---------------------------------------------------------------------- #
+
+SSD_CASES = [(1, 16, 2, 8, 8), (2, 50, 3, 8, 12), (1, 33, 2, 16, 8),
+             (1, 100, 1, 32, 16)]
+
+
+def ssd_inputs(case, seed=0):
+    b, t, h, p, n = case
+    ks = keys(seed + sum(case), 5)
+    x = jax.random.normal(ks[0], (b, t, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, t, h))) * 0.5
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (b, t, n)) * 0.5
+    Cm = jax.random.normal(ks[4], (b, t, n)) * 0.5
+    return x, dt, A, Bm, Cm
+
+
+@pytest.mark.parametrize("case", SSD_CASES)
+def test_mamba2_chunked_vs_ref(case):
+    x, dt, A, Bm, Cm = ssd_inputs(case)
+    got, gs = ops.mamba2_chunked(x, dt, A, Bm, Cm, chunk=16)
+    want, ws = ref.mamba2_ref(x, dt, A, Bm, Cm)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=5e-5,
+                               rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(gs), np.asarray(ws), atol=5e-5,
+                               rtol=1e-4)
+
+
+@pytest.mark.parametrize("case", SSD_CASES)
+def test_mamba2_pallas_vs_ref(case):
+    x, dt, A, Bm, Cm = ssd_inputs(case, seed=5)
+    got, gs = mamba2_pallas(x, dt, A, Bm, Cm, chunk=16, interpret=True)
+    want, ws = ref.mamba2_ref(x, dt, A, Bm, Cm)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=5e-5,
+                               rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(gs), np.asarray(ws), atol=5e-5,
+                               rtol=1e-4)
+
+
+def test_mamba2_decode_chain_matches_scan():
+    case = (2, 20, 2, 8, 8)
+    x, dt, A, Bm, Cm = ssd_inputs(case, seed=2)
+    want, _ = ref.mamba2_ref(x, dt, A, Bm, Cm)
+    state = jnp.zeros((2, 2, 8, 8))
+    outs = []
+    for i in range(20):
+        y, state = ops.mamba2_decode_step(x[:, i], dt[:, i], A, Bm[:, i],
+                                          Cm[:, i], state)
+        outs.append(y)
+    np.testing.assert_allclose(np.asarray(jnp.stack(outs, 1)), np.asarray(want),
+                               atol=5e-5, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------- #
+# gradients flow through the chunked kernels (training path)
+# ---------------------------------------------------------------------- #
+
+
+def test_wkv6_chunked_grads_finite():
+    r, k, v, w, u = wkv_inputs((1, 16, 2, 8), seed=21)
+
+    def loss(r, k, v, w, u):
+        y, _ = ops.wkv6_chunked(r, k, v, w, u, chunk=8, d_block=8)
+        return jnp.sum(y**2)
+
+    grads = jax.grad(loss, argnums=(0, 1, 2, 3, 4))(r, k, v, w, u)
+    for g in grads:
+        assert np.isfinite(np.asarray(g)).all()
+
+
+def test_mamba2_chunked_grads_finite():
+    x, dt, A, Bm, Cm = ssd_inputs((1, 16, 2, 8, 8), seed=22)
+
+    def loss(x, dt, A, Bm, Cm):
+        y, _ = ops.mamba2_chunked(x, dt, A, Bm, Cm, chunk=8)
+        return jnp.sum(y**2)
+
+    grads = jax.grad(loss, argnums=(0, 1, 2, 3, 4))(x, dt, A, Bm, Cm)
+    for g in grads:
+        assert np.isfinite(np.asarray(g)).all()

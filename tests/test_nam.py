@@ -1,0 +1,67 @@
+"""NAM device: pool management, ring-buffer notifications, near-mem parity."""
+
+import pytest
+
+from repro.core import parity
+from repro.core.nam import NAMDevice
+from repro.memory.tiers import MemoryTier, TierKind, TierSpec
+
+
+def make_nam(capacity=2 * 1024**2, ring_slots=4):
+    tier = MemoryTier(TierSpec(TierKind.NAM, capacity, 11.5e9, 11.5e9, 1.8e-6,
+                               shared=True))
+    return NAMDevice(tier, ring_slots=ring_slots)
+
+
+def test_put_get_roundtrip():
+    nam = make_nam()
+    nam.alloc("region", 1024)
+    nam.put("region", b"x" * 1024)
+    assert nam.get("region") == b"x" * 1024
+
+
+def test_notifications_in_order():
+    nam = make_nam()
+    nam.alloc("a", 100)
+    nam.put("a", b"1")
+    nam.get("a")
+    n1, n2 = nam.poll(), nam.poll()
+    assert (n1.op, n2.op) == ("put", "get")
+    assert n1.seq < n2.seq
+    assert nam.poll() is None
+
+
+def test_pool_capacity_enforced():
+    nam = make_nam(capacity=1000)
+    nam.alloc("a", 800)
+    with pytest.raises(MemoryError):
+        nam.alloc("b", 400)
+    nam.free("a")
+    nam.alloc("b", 400)
+
+
+def test_region_bounds_checked():
+    nam = make_nam()
+    nam.alloc("r", 10)
+    with pytest.raises(ValueError):
+        nam.put("r", b"x" * 100)
+    with pytest.raises(KeyError):
+        nam.put("unalloc", b"x")
+
+
+def test_offload_parity_matches_host_xor():
+    nam = make_nam()
+    frags = [bytes([i]) * 4096 for i in range(4)]
+    nam.alloc("parity", 4096)
+    t = nam.offload_parity("parity", [lambda f=f: f for f in frags], 4096)
+    assert t > 0
+    assert nam.get("parity") == parity.encode_nam_parity(frags)
+    kinds = []
+    while (n := nam.poll()) is not None:
+        kinds.append(n.op)
+    assert "parity" in kinds
+
+
+def test_transfer_time_shares_links():
+    nam = make_nam()
+    assert nam.transfer_time(10**6, concurrent=8) > nam.transfer_time(10**6, 1)

@@ -1,0 +1,82 @@
+"""XOR parity codes: RAID-5 rotation + NAM parity, host and device paths."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import parity
+from repro.io.serialization import partition_blob
+from repro.kernels.ref import xor_reduce_ref
+from repro.kernels.xor_parity import xor_reduce_pallas
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    nbytes=st.integers(min_value=4, max_value=4096),
+    group=st.integers(min_value=2, max_value=9),
+    failed=st.integers(min_value=0, max_value=8),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_raid5_reconstructs_any_single_failure(nbytes, group, failed, seed):
+    failed = failed % group
+    data = np.random.default_rng(seed).bytes(nbytes)
+    frags = partition_blob(data, group)
+    blocks = parity.encode_xor_group(frags)
+    surv_f = {i: frags[i] for i in range(group) if i != failed}
+    surv_p = {i: blocks[i] for i in range(group) if i != failed}
+    rec = parity.reconstruct_xor_group(failed, surv_f, surv_p, group, len(frags[0]))
+    assert rec == frags[failed]
+
+
+def test_raid5_storage_overhead():
+    """Parity per rank is |F|/(N-1), not |F| (the paper's XOR argument)."""
+    frags = partition_blob(np.random.default_rng(0).bytes(64_000), 8)
+    blocks = parity.encode_xor_group(frags)
+    assert len(blocks[0]) <= len(frags[0]) // (8 - 1) + 4
+
+
+def test_raid5_requires_all_survivors():
+    frags = partition_blob(b"x" * 1024, 4)
+    blocks = parity.encode_xor_group(frags)
+    with pytest.raises(RuntimeError):
+        parity.reconstruct_xor_group(
+            0, {1: frags[1]}, {1: blocks[1]}, 4, len(frags[0])
+        )
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    group=st.integers(min_value=2, max_value=8),
+    failed=st.integers(min_value=0, max_value=7),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_nam_parity_reconstructs(group, failed, seed):
+    failed = failed % group
+    frags = partition_blob(np.random.default_rng(seed).bytes(2048), group)
+    par = parity.encode_nam_parity(frags)
+    surv = {i: frags[i] for i in range(group) if i != failed}
+    assert parity.reconstruct_from_nam(failed, surv, par, group) == frags[failed]
+
+
+def test_xor_bytes_involution():
+    a = np.random.default_rng(2).bytes(1000)
+    b = np.random.default_rng(3).bytes(1000)
+    assert parity.xor_bytes([parity.xor_bytes([a, b]), b]) == a
+
+
+@pytest.mark.parametrize("r,m", [(2, 1), (3, 7), (4, 64), (8, 300)])
+def test_pallas_xor_matches_ref(r, m):
+    rng = np.random.default_rng(r * 100 + m)
+    x = jnp.asarray(rng.integers(-(2**31), 2**31, size=(r, m, 128), dtype=np.int32))
+    got = xor_reduce_pallas(x, block_rows=64, interpret=True)
+    assert np.array_equal(np.asarray(got), np.asarray(xor_reduce_ref(x)))
+
+
+def test_pack_unpack_words():
+    frags = [np.random.default_rng(i).bytes(1000) for i in range(3)]
+    stacked = parity.pack_words(frags)
+    assert stacked.shape[0] == 3 and stacked.shape[2] == 128
+    out = parity.unpack_words(parity.xor_reduce(stacked, use_pallas=False), 1000)
+    assert out == parity.xor_bytes(frags)

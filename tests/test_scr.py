@@ -1,0 +1,170 @@
+"""SCR multi-level checkpoint/restart: all five strategies x failures."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cluster.topology import NodeState, VirtualCluster
+from repro.core.nam import NAMDevice
+from repro.core.scr import SCRManager, Strategy
+from repro.memory.tiers import MemoryHierarchy
+
+STATE = {
+    "w": jnp.arange(4000, dtype=jnp.float32).reshape(50, 80),
+    "m": jnp.ones((17,), jnp.bfloat16),
+    "step": jnp.int32(7),
+}
+TEMPLATE = {
+    "w": jnp.zeros((50, 80), jnp.float32),
+    "m": jnp.zeros((17,), jnp.bfloat16),
+    "step": jnp.int32(0),
+}
+
+
+def make_scr(tmp_path, strategy, **kw):
+    cl = VirtualCluster(4, 4, root=tmp_path / "run", xor_group_size=4)
+    hier = MemoryHierarchy(cl)
+    nam = NAMDevice(hier.nam_tier) if strategy == Strategy.NAM_XOR else None
+    scr = SCRManager(cl, hier, nam=nam, strategy=strategy, procs_per_node=2, **kw)
+    return cl, hier, scr
+
+
+def assert_state_equal(a, b):
+    assert np.asarray(a["w"]).tobytes() == np.asarray(b["w"]).tobytes()
+    assert np.asarray(a["m"]).tobytes() == np.asarray(b["m"]).tobytes()
+
+
+@pytest.mark.parametrize("strategy", list(Strategy))
+def test_save_restore_healthy(tmp_path, strategy):
+    cl, hier, scr = make_scr(tmp_path, strategy)
+    scr.save(5, STATE)
+    restored, step = scr.restore(TEMPLATE)
+    assert step == 5
+    assert_state_equal(restored, STATE)
+
+
+@pytest.mark.parametrize(
+    "strategy",
+    [Strategy.PARTNER, Strategy.BUDDY, Strategy.XOR, Strategy.NAM_XOR],
+)
+def test_restore_after_node_loss(tmp_path, strategy):
+    cl, hier, scr = make_scr(tmp_path, strategy, flush_every=0)
+    scr.save(3, STATE)
+    cl.fail(2, NodeState.FAILED_NODE)   # NVM content gone
+    cl.recover(2)
+    hier.invalidate(2)
+    restored, step = scr.restore(TEMPLATE)
+    assert step == 3
+    assert_state_equal(restored, STATE)
+
+
+def test_single_survives_transient_only(tmp_path):
+    cl, hier, scr = make_scr(tmp_path, Strategy.SINGLE, flush_every=0)
+    scr.save(1, STATE)
+    cl.fail(2, NodeState.FAILED_TRANSIENT)
+    cl.recover(2)
+    hier.invalidate(2)
+    restored, _ = scr.restore(TEMPLATE)
+    assert_state_equal(restored, STATE)
+    # node loss is NOT survivable without redundancy or a drained copy
+    cl.fail(3, NodeState.FAILED_NODE)
+    cl.recover(3)
+    hier.invalidate(3)
+    with pytest.raises(IOError):
+        scr.restore(TEMPLATE)
+
+
+def test_single_falls_back_to_drained_global(tmp_path):
+    cl, hier, scr = make_scr(tmp_path, Strategy.SINGLE, flush_every=1)
+    scr.save(1, STATE)   # flushed to global storage via BeeOND level
+    cl.fail(3, NodeState.FAILED_NODE)
+    cl.recover(3)
+    hier.invalidate(3)
+    restored, _ = scr.restore(TEMPLATE)
+    assert_state_equal(restored, STATE)
+
+
+def test_xor_double_failure_same_group_unrecoverable(tmp_path):
+    cl, hier, scr = make_scr(tmp_path, Strategy.XOR, flush_every=0)
+    scr.save(1, STATE)
+    for r in (0, 1):  # two members of the same XOR group
+        cl.fail(r, NodeState.FAILED_NODE)
+        cl.recover(r)
+        hier.invalidate(r)
+    with pytest.raises(IOError):
+        scr.restore(TEMPLATE)
+
+
+def test_xor_double_failure_different_groups_ok(tmp_path):
+    cl, hier, scr = make_scr(tmp_path, Strategy.XOR, flush_every=0)
+    scr.save(1, STATE)
+    for r in (0, 4):  # different groups (cluster / booster)
+        cl.fail(r, NodeState.FAILED_NODE)
+        cl.recover(r)
+        hier.invalidate(r)
+    restored, _ = scr.restore(TEMPLATE)
+    assert_state_equal(restored, STATE)
+
+
+def test_restore_picks_newest_recoverable(tmp_path):
+    cl, hier, scr = make_scr(tmp_path, Strategy.BUDDY, keep=3)
+    scr.save(1, STATE)
+    new_state = dict(STATE)
+    new_state["w"] = STATE["w"] + 1
+    scr.save(2, new_state)
+    restored, step = scr.restore(TEMPLATE)
+    assert step == 2
+    assert np.allclose(np.asarray(restored["w"]), np.asarray(STATE["w"]) + 1)
+
+
+def test_prune_keeps_latest_k(tmp_path):
+    cl, hier, scr = make_scr(tmp_path, Strategy.BUDDY, keep=2)
+    for s in range(1, 6):
+        scr.save(s, STATE)
+    assert scr.available_steps() == [4, 5]
+
+
+def test_rebuild_restores_local_copy(tmp_path):
+    cl, hier, scr = make_scr(tmp_path, Strategy.XOR, flush_every=0)
+    scr.save(1, STATE)
+    cl.fail(2, NodeState.FAILED_NODE)
+    cl.recover(2)
+    hier.invalidate(2)
+    scr.restore(TEMPLATE, rebuild=True)
+    # second restore must now read node 2's fragment locally
+    restored, _ = scr.restore(TEMPLATE)
+    assert_state_equal(restored, STATE)
+
+
+def test_async_redundancy_overlaps(tmp_path):
+    cl, hier, scr = make_scr(tmp_path, Strategy.BUDDY, async_redundancy=True)
+    rec = scr.save(1, STATE)
+    scr.wait()
+    cl.fail(1, NodeState.FAILED_NODE)
+    cl.recover(1)
+    hier.invalidate(1)
+    restored, _ = scr.restore(TEMPLATE)
+    assert_state_equal(restored, STATE)
+
+
+def test_elastic_restore_onto_resized_cluster(tmp_path):
+    """Checkpoint taken on 8 nodes restores on a 12-node cluster."""
+    cl, hier, scr = make_scr(tmp_path, Strategy.BUDDY)
+    scr.save(4, STATE)
+    big = cl.resize(8, 4)
+    hier2 = MemoryHierarchy(big)
+    scr2 = SCRManager(big, hier2, strategy=Strategy.BUDDY, procs_per_node=2)
+    restored, step = scr2.restore(TEMPLATE)
+    assert step == 4
+    assert_state_equal(restored, STATE)
+
+
+def test_modelled_strategy_ordering(tmp_path):
+    """Fig 4 ordering: PARTNER > XOR > BUDDY > NAM_XOR foreground cost."""
+    times = {}
+    big_state = {"w": jnp.arange(200_000, dtype=jnp.float32)}
+    for strategy in [Strategy.PARTNER, Strategy.BUDDY, Strategy.XOR, Strategy.NAM_XOR]:
+        cl, hier, scr = make_scr(tmp_path / strategy.value, strategy, flush_every=0)
+        times[strategy] = scr.save(1, big_state).foreground_s
+    assert times[Strategy.BUDDY] < times[Strategy.PARTNER]
+    assert times[Strategy.NAM_XOR] < times[Strategy.XOR]

@@ -1,0 +1,94 @@
+"""Sharding rules: logical-axis mapping, divisibility pruning."""
+
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+import jax
+
+from repro.configs import get_config
+from repro.distributed.sharding import (
+    DECODE_RULES,
+    TRAIN_RULES,
+    ShardingRules,
+    fit_spec,
+    specs_from_axes,
+)
+from repro.models.registry import get_model
+
+
+def fake_mesh(shape=(2, 2), axes=("data", "model")):
+    devs = np.array([jax.devices("cpu")[0]] * int(np.prod(shape))).reshape(shape)
+    return Mesh(devs, axes)
+
+
+def test_rules_map_known_axes():
+    mesh = fake_mesh()
+    spec = specs_from_axes({"x": ("vocab", "d_model")}, TRAIN_RULES, mesh)
+    assert spec == {"x": P("model", None)}
+
+
+def test_unknown_axis_fails_loudly():
+    with pytest.raises(KeyError):
+        TRAIN_RULES.spec_for(("not_an_axis",))
+
+
+def test_pod_axis_stripped_on_single_pod():
+    mesh = fake_mesh()
+    spec = specs_from_axes({"x": ("batch", None)}, TRAIN_RULES, mesh)
+    assert spec == {"x": P(("data",), None)}
+
+
+def test_pod_axis_kept_on_multi_pod():
+    mesh = fake_mesh((2, 2, 2), ("pod", "data", "model"))
+    spec = specs_from_axes({"x": ("batch", None)}, TRAIN_RULES, mesh)
+    assert spec == {"x": P(("pod", "data"), None)}
+
+
+def test_decode_rules_shard_kv_seq():
+    mesh = fake_mesh()
+    spec = specs_from_axes({"x": ("layers", "batch", "kv_seq", None, None)},
+                           DECODE_RULES, mesh)
+    assert spec == {"x": P(None, ("data",), "model", None, None)}
+
+
+def test_fit_spec_prunes_non_divisible():
+    mesh = fake_mesh((4, 2), ("data", "model"))
+    s = fit_spec(P(("data",), "model"), (1, 64), mesh)   # batch=1: replicate
+    assert s == P(None, "model")
+    s2 = fit_spec(P(("data",), "model"), (8, 63), mesh)  # 63 % 2 != 0
+    assert s2 == P(("data",), None)
+
+
+@pytest.mark.parametrize("arch", ["phi3-mini-3.8b", "deepseek-moe-16b",
+                                  "rwkv6-3b", "zamba2-2.7b", "whisper-tiny"])
+def test_param_axes_all_resolvable(arch):
+    """Every logical axis every model emits must have a rule."""
+    cfg = get_config(arch).with_tp(16)
+    model = get_model(cfg)
+    mesh = fake_mesh((16, 16))
+    specs = specs_from_axes(model.param_axes(cfg), TRAIN_RULES, mesh)
+    assert specs is not None
+    cache_specs = specs_from_axes(model.cache_axes(cfg), DECODE_RULES, mesh)
+    assert cache_specs is not None
+
+
+@pytest.mark.parametrize("arch", ["phi3-mini-3.8b", "starcoder2-7b",
+                                  "minicpm3-4b", "qwen2-moe-a2.7b"])
+def test_padded_dims_divisible_at_tp16(arch):
+    """At TP=16 every sharded param dim must divide evenly."""
+    cfg = get_config(arch).with_tp(16)
+    model = get_model(cfg)
+    mesh = fake_mesh((16, 16))
+    shapes = model.param_shapes(cfg)
+    specs = specs_from_axes(model.param_axes(cfg), TRAIN_RULES, mesh)
+    flat_shapes = jax.tree_util.tree_leaves(shapes)
+    flat_specs = jax.tree_util.tree_leaves(
+        specs, is_leaf=lambda x: isinstance(x, P))
+    for shp, spec in zip(flat_shapes, flat_specs):
+        for dim, entry in zip(shp.shape, tuple(spec)):
+            if entry is None:
+                continue
+            names = entry if isinstance(entry, tuple) else (entry,)
+            size = int(np.prod([mesh.shape[n] for n in names]))
+            assert dim % size == 0, (arch, shp.shape, spec)

@@ -1,0 +1,86 @@
+"""VirtualCluster topology: buddy pairing, XOR groups, failure machinery."""
+
+import time
+
+import pytest
+
+from repro.cluster.topology import Module, NodeFailure, NodeState, VirtualCluster
+
+
+def test_modules_and_ranks(tmp_cluster):
+    assert tmp_cluster.size == 8
+    assert tmp_cluster.ranks(Module.CLUSTER) == [0, 1, 2, 3]
+    assert tmp_cluster.ranks(Module.BOOSTER) == [4, 5, 6, 7]
+
+
+def test_buddy_pairing_within_module(tmp_cluster):
+    for rank in range(8):
+        buddy = tmp_cluster.buddy_of(rank)
+        assert buddy != rank
+        assert tmp_cluster.node(buddy).module == tmp_cluster.node(rank).module
+
+
+def test_buddy_is_cyclic_not_self(tmp_path):
+    cl = VirtualCluster(3, 0, root=tmp_path)  # odd module size
+    seen = {cl.buddy_of(r) for r in range(3)}
+    assert len(seen) == 3  # a 3-cycle covers everyone
+
+
+def test_xor_groups_partition_modules(tmp_cluster):
+    all_ranks = sorted(r for g in tmp_cluster.xor_groups for r in g)
+    assert all_ranks == list(range(8))
+    for g in tmp_cluster.xor_groups:
+        modules = {tmp_cluster.node(r).module for r in g}
+        assert len(modules) == 1  # topology-aware: groups stay in-module
+
+
+def test_xor_group_tail_folding(tmp_path):
+    cl = VirtualCluster(5, 0, root=tmp_path, xor_group_size=4)
+    assert cl.xor_groups == [[0, 1, 2, 3, 4]]  # singleton folded in
+
+
+def test_node_failure_wipes_nvm(tmp_cluster):
+    p = tmp_cluster.nvm_path(2)
+    (p / "data.bin").write_bytes(b"x")
+    tmp_cluster.fail(2, NodeState.FAILED_NODE)
+    with pytest.raises(NodeFailure):
+        tmp_cluster.nvm_path(2)
+    tmp_cluster.recover(2)
+    assert not (tmp_cluster.nvm_path(2) / "data.bin").exists()
+
+
+def test_transient_failure_keeps_nvm(tmp_cluster):
+    p = tmp_cluster.nvm_path(2)
+    (p / "data.bin").write_bytes(b"x")
+    tmp_cluster.fail(2, NodeState.FAILED_TRANSIENT)
+    tmp_cluster.recover(2)
+    assert (tmp_cluster.nvm_path(2) / "data.bin").read_bytes() == b"x"
+
+
+def test_armed_failure_fires_once(tmp_cluster):
+    tmp_cluster.arm_failure(1, NodeState.FAILED_TRANSIENT)
+    with pytest.raises(NodeFailure):
+        tmp_cluster.maybe_fail(1)
+    tmp_cluster.recover(1)
+    tmp_cluster.maybe_fail(1)  # disarmed now
+
+
+def test_failure_detector(tmp_cluster):
+    for r in range(8):
+        tmp_cluster.heartbeat(r)
+    tmp_cluster.node(3).last_heartbeat -= 100.0
+    assert tmp_cluster.detect_failures(timeout_s=30.0) == [3]
+
+
+def test_straggler_detector(tmp_cluster):
+    now = time.monotonic()
+    for r in range(8):
+        tmp_cluster.node(r).last_heartbeat = now - 1.0
+    tmp_cluster.node(5).last_heartbeat = now - 60.0
+    assert tmp_cluster.detect_stragglers(factor=3.0) == [5]
+
+
+def test_elastic_resize_preserves_root(tmp_cluster):
+    bigger = tmp_cluster.resize(8, 8)
+    assert bigger.size == 16
+    assert bigger.root == tmp_cluster.root
