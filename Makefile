@@ -1,0 +1,15 @@
+# Local fallback for the CI workflow (.github/workflows/ci.yml).
+PY ?= python
+
+.PHONY: verify test bench-smoke bench
+
+verify: test bench-smoke
+
+test:
+	PYTHONPATH=src $(PY) -m pytest -x -q
+
+bench-smoke:
+	PYTHONPATH=src $(PY) -m benchmarks.fig8_scr_overhead --compare-async
+
+bench:
+	PYTHONPATH=src $(PY) -m benchmarks.run

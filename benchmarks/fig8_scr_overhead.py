@@ -8,9 +8,27 @@ of total time vs re-running from scratch.
 We reproduce both numbers with the modelled PARTNER cost on the paper
 tiers, and validate the *functional* behaviour with a real Trainer run
 (failure -> restore from partner -> bitwise resume; tests/test_trainer).
+
+``--compare-async`` additionally runs the *functional* stack twice on the
+Fig 8 scenario — synchronous drain vs the async drain executor — and
+reports measured wall-clock foreground time per save plus a post-drain
+byte-identical restore check:
+
+  PYTHONPATH=src python -m benchmarks.fig8_scr_overhead --compare-async
 """
 
 from __future__ import annotations
+
+import sys
+import time
+from pathlib import Path
+
+if __package__ in (None, ""):  # `python benchmarks/fig8_scr_overhead.py`
+    _root = Path(__file__).resolve().parent.parent
+    sys.path.insert(0, str(_root / "src"))
+    sys.path.insert(0, str(_root))
+
+import numpy as np
 
 from benchmarks.common import make_scr, paper_cluster, row
 from repro.core.scr import Strategy
@@ -34,6 +52,96 @@ def modelled_partner_cp_s() -> float:
     t += PER_NODE_CP / fabric_bw + fabric_lat    # send to partner
     t += nvm.write_time(int(PER_NODE_CP))        # partner writes copy
     return t
+
+
+# Emulated wall-clock bandwidth of the shared global file system.  The
+# simulated tiers physically write to the page cache (CPU-speed), which
+# erases the very bottleneck the async drain hides; this throttle restores
+# the paper's physics — global-storage writes take wall time during which
+# the drain thread sleeps with the GIL released, so overlap is real.
+PFS_WALL_BW = 100e6  # bytes/s
+
+
+class _ThrottledPFS:
+    """Wrap a MemoryTier, adding wall-clock cost to checkpoint writes."""
+
+    def __init__(self, tier):
+        self._tier = tier
+
+    def __getattr__(self, name):
+        return getattr(self._tier, name)
+
+    def put(self, key, data, streams=1):
+        if key.startswith("ckpt/"):
+            time.sleep(len(data) / PFS_WALL_BW)
+        return self._tier.put(key, data, streams=streams)
+
+    def put_stream(self, key, chunks, streams=1):
+        chunks = [bytes(c) for c in chunks]
+        if key.startswith("ckpt/"):
+            time.sleep(sum(len(c) for c in chunks) / PFS_WALL_BW)
+        return self._tier.put_stream(key, chunks, streams=streams)
+
+
+def _fg_walltimes(async_drain: bool, state, n_saves: int):
+    """Measured wall seconds save() keeps on the caller's thread, per save."""
+    from repro.cluster.topology import NodeState
+
+    cl, hier = paper_cluster(n_cluster=4, n_booster=4)
+    hier.global_tier = _ThrottledPFS(hier.global_tier)
+    # drain_depth >= n_saves: measure the pure foreground phase; the
+    # executor's backpressure (smaller depths) is exercised in tests
+    scr = make_scr(cl, hier, Strategy.BUDDY, procs_per_node=2,
+                   flush_every=1, keep=n_saves + 1,
+                   async_drain=async_drain, drain_depth=n_saves)
+    times = []
+    for s in range(1, n_saves + 1):
+        t0 = time.perf_counter()
+        scr.save(s, state)
+        times.append(time.perf_counter() - t0)
+    scr.wait_drained()   # durability barrier, off the per-save measurement
+
+    # post-drain restore must round-trip byte-identically even with every
+    # NVM copy gone (forces the path through the drained global copies)
+    for r in list(cl.ranks()):
+        cl.fail(r, NodeState.FAILED_NODE)
+        cl.recover(r)
+        hier.invalidate(r)
+    template = {k: np.zeros_like(v) for k, v in state.items()}
+    restored, step = scr.restore(template)
+    ok = step == n_saves and all(
+        np.asarray(restored[k]).tobytes() == np.asarray(v).tobytes()
+        for k, v in state.items()
+    )
+    cl.teardown()
+    return times, ok
+
+
+def run_compare_async(n_saves: int = 5, mbytes: int = 8):
+    """Async-vs-sync drain on the functional stack (measured wall clock)."""
+    rng = np.random.default_rng(0)
+    state = {
+        "w": rng.standard_normal(mbytes * 250_000).astype(np.float32),
+        "step": np.int32(1),
+    }
+    sync_t, sync_ok = _fg_walltimes(False, state, n_saves)
+    async_t, async_ok = _fg_walltimes(True, state, n_saves)
+    # median, not min: with overlap enabled the async foreground contends
+    # with the drain thread, so sync's single luckiest sample can undercut
+    # it — the steady-state (median) save is what the pipeline speeds up
+    med = lambda ts: sorted(ts)[len(ts) // 2]
+    sync_us, async_us = med(sync_t) * 1e6, med(async_t) * 1e6
+    rows = [
+        row("fig8/sync_drain_fg", sync_us, f"median foreground wall per save; n={n_saves}"),
+        row("fig8/async_drain_fg", async_us,
+            f"median foreground wall per save; drain on executor; n={n_saves}"),
+        row("fig8/async_speedup", 0.0,
+            f"fg_sync/fg_async={sync_us / max(async_us, 1e-9):.2f}x"),
+        row("fig8/roundtrip_after_drain", 0.0,
+            "PASS" if (sync_ok and async_ok) else "FAIL"),
+        row("fig8/async_claim", 0.0, "PASS" if async_us < sync_us else "FAIL"),
+    ]
+    return rows
 
 
 def run():
@@ -61,3 +169,28 @@ def run():
     ok = 0.04 < overhead < 0.15 and 0.15 < saving < 0.35
     rows.append(row("fig8/claim", 0.0, "PASS" if ok else "FAIL"))
     return rows
+
+
+def main(argv=None) -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--compare-async", action="store_true",
+                    help="measure functional sync-vs-async drain foreground time")
+    ap.add_argument("--saves", type=int, default=5)
+    ap.add_argument("--mbytes", type=int, default=8,
+                    help="approx checkpoint payload in MB")
+    args = ap.parse_args(argv)
+    if args.saves < 1:
+        ap.error("--saves must be >= 1")
+    if args.mbytes < 1:
+        ap.error("--mbytes must be >= 1")
+    rows = run_compare_async(args.saves, args.mbytes) if args.compare_async else run()
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(f"{r['name']},{r['us_per_call']},{r['derived'].replace(',', ';')}")
+    return 1 if any("FAIL" in r["derived"] for r in rows) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

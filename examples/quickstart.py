@@ -3,6 +3,7 @@
 Runs in ~1 minute on CPU.  Demonstrates:
   * the Cluster-Booster virtual topology (4+4 nodes),
   * BUDDY checkpointing (SIONlib-aggregated containers on the partner),
+  * the asynchronous BeeOND->global drain (training overlaps the flush),
   * a node failure mid-run, fragment reconstruction, and resume.
 
   PYTHONPATH=src python examples/quickstart.py
@@ -28,7 +29,8 @@ def main():
 
     cluster = VirtualCluster(n_cluster=4, n_booster=4, root=root)
     hierarchy = MemoryHierarchy(cluster)
-    scr = SCRManager(cluster, hierarchy, strategy=Strategy.BUDDY, procs_per_node=2)
+    scr = SCRManager(cluster, hierarchy, strategy=Strategy.BUDDY,
+                     procs_per_node=2, async_drain=True)
     pipeline = TokenPipeline(cfg.vocab_size, global_batch=8, seq_len=128)
 
     trainer = Trainer(
@@ -43,7 +45,8 @@ def main():
     print(f"node failures       : {report.failures}")
     print(f"recoveries          : {report.recoveries} "
           f"(restarted from step {report.restarts_from_step})")
-    print(f"checkpoints written : {report.checkpoints}")
+    print(f"checkpoints written : {report.checkpoints} "
+          f"({report.drains_completed} drained in background)")
     print(f"loss first -> last  : {report.losses[0]:.3f} -> {report.losses[-1]:.3f}")
     assert report.recoveries == 1 and report.losses[-1] < report.losses[0]
     print("OK: failure survived, training resumed from the buddy copy.")

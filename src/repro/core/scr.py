@@ -15,9 +15,21 @@ MemoryHierarchy substrate:
              (near-memory FPGA logic) and stored there, off the failure
              domain; nodes only trigger the pull.
 
-Every strategy additionally drains checkpoints asynchronously to global
-storage through the BeeOND cache layer every ``flush_every`` checkpoints
-(the multi-level part: NVM for frequent/fast, PFS for rare/durable).
+Every strategy additionally drains checkpoints to global storage through
+the BeeOND cache level every ``flush_every`` checkpoints (the multi-level
+part: NVM for frequent/fast, PFS for rare/durable).
+
+With ``async_drain=True`` the drain is *genuinely* asynchronous (§III-D1,
+Figs 7-8): ``save()`` returns after the foreground phase (NVM write +
+partner/parity redundancy) and a bounded background executor — one worker
+thread over a ``drain_depth``-slot queue, i.e. double-buffered staging by
+default — moves the BeeOND→global flush, SION container packing, and NAM
+parity pushes off the critical path.  Each save hands back a
+:class:`DrainTicket` future; ``wait_drained()`` is the durability barrier;
+``restore()`` cancels queued drains and absorbs in-flight drain failures
+(failure injection can legitimately kill a drain mid-flush).  A
+checkpoint's descriptor is only marked ``drained`` *after* its global
+copy lands, so restore never trusts a flush that did not complete.
 
 The manager is also a *performance model*: each save returns modelled
 foreground/background seconds derived from the tier and fabric specs, so
@@ -30,8 +42,10 @@ from __future__ import annotations
 import dataclasses
 import enum
 import json
+import queue
 import threading
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.cluster.topology import NodeFailure, NodeState, VirtualCluster
 from repro.core import parity
@@ -41,8 +55,7 @@ from repro.io.serialization import (
     StateBlob,
     deserialize_state,
     join_fragments,
-    partition_blob,
-    serialize_state,
+    serialize_state_stream,
 )
 from repro.io.sion import SionContainer
 from repro.memory.tiers import MemoryHierarchy, TierSpec
@@ -71,6 +84,166 @@ EXTOLL = FabricSpec()
 TPU_ICI = FabricSpec(bandwidth=50e9, latency_s=1e-6)
 
 
+class DrainState(str, enum.Enum):
+    QUEUED = "queued"
+    RUNNING = "running"
+    DONE = "done"
+    FAILED = "failed"
+    CANCELLED = "cancelled"
+
+
+class DrainTicket:
+    """Future for one checkpoint's background work (redundancy + flush)."""
+
+    def __init__(self, step: int):
+        self.step = step
+        self.error: Optional[BaseException] = None
+        self.background_s = 0.0   # modelled seconds of the off-path work
+        self.wall_s = 0.0         # measured wall seconds spent off-path
+        self._state = DrainState.QUEUED
+        self._event = threading.Event()
+        self._lock = threading.Lock()
+        self._error_observed = False
+
+    @property
+    def state(self) -> DrainState:
+        return self._state
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def cancelled(self) -> bool:
+        return self._state == DrainState.CANCELLED
+
+    def wait(self, timeout: Optional[float] = None) -> bool:
+        return self._event.wait(timeout)
+
+    def result(self, timeout: Optional[float] = None) -> float:
+        """Block until the drain lands; return its modelled seconds."""
+        if not self._event.wait(timeout):
+            raise TimeoutError(f"drain of step {self.step} still in flight")
+        if self._state == DrainState.FAILED:
+            # the caller observed this failure; the executor must not
+            # re-raise it at the next save()/wait() barrier
+            self._error_observed = True
+            raise IOError(f"drain of step {self.step} failed") from self.error
+        if self._state == DrainState.CANCELLED:
+            raise RuntimeError(f"drain of step {self.step} was cancelled")
+        return self.background_s
+
+    # -- executor-side transitions (atomic vs. try_cancel) --------------- #
+
+    def try_cancel(self) -> bool:
+        with self._lock:
+            if self._state != DrainState.QUEUED:
+                return False
+            self._state = DrainState.CANCELLED
+        self._event.set()
+        return True
+
+    def _begin(self) -> bool:
+        with self._lock:
+            if self._state != DrainState.QUEUED:
+                return False
+            self._state = DrainState.RUNNING
+            return True
+
+    def _finish(self, state: DrainState) -> None:
+        with self._lock:
+            self._state = state
+        self._event.set()
+
+
+class DrainExecutor:
+    """Bounded single-worker background executor for checkpoint drains.
+
+    ``depth`` is the number of checkpoints that may be in flight (running
+    + staged) before ``submit`` blocks the caller — the backpressure that
+    keeps a fast checkpoint cadence from piling unbounded state in memory.
+    The default depth of 2 is classic double-buffered staging: one drain
+    on the wire, one staged behind it.
+    """
+
+    def __init__(self, depth: int = 2):
+        if depth < 1:
+            raise ValueError("drain depth must be >= 1")
+        self.depth = depth
+        self._q: "queue.Queue[Optional[Tuple[DrainTicket, Callable]]]" = queue.Queue()
+        self._slots = threading.Semaphore(depth)
+        self._cv = threading.Condition()
+        self._outstanding = 0
+        self._live: List[DrainTicket] = []
+        self._errors: List[Tuple[DrainTicket, BaseException]] = []
+        self._thread: Optional[threading.Thread] = None
+
+    def submit(self, ticket: DrainTicket, fn: Callable[[DrainTicket], float]) -> DrainTicket:
+        self._slots.acquire()  # backpressure: blocks when `depth` in flight
+        with self._cv:
+            self._outstanding += 1
+            self._live.append(ticket)
+        self._ensure_worker()
+        self._q.put((ticket, fn))
+        return ticket
+
+    def _ensure_worker(self) -> None:
+        with self._cv:
+            if self._thread is None or not self._thread.is_alive():
+                self._thread = threading.Thread(
+                    target=self._loop, daemon=True, name="scr-drain"
+                )
+                self._thread.start()
+
+    def _loop(self) -> None:
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            ticket, fn = item
+            try:
+                if ticket._begin():
+                    t0 = time.perf_counter()
+                    ticket.background_s = fn(ticket)
+                    ticket.wall_s = time.perf_counter() - t0
+                    ticket._finish(DrainState.DONE)
+            except BaseException as e:
+                ticket.error = e
+                ticket._finish(DrainState.FAILED)
+                with self._cv:
+                    self._errors.append((ticket, e))
+            finally:
+                self._slots.release()
+                with self._cv:
+                    self._outstanding -= 1
+                    if ticket in self._live:
+                        self._live.remove(ticket)
+                    self._cv.notify_all()
+
+    def cancel_queued(self) -> List[DrainTicket]:
+        """Cancel every not-yet-started drain; returns the cancelled tickets."""
+        with self._cv:
+            candidates = list(self._live)
+        return [t for t in candidates if t.try_cancel()]
+
+    def wait_idle(self, timeout: Optional[float] = None) -> bool:
+        with self._cv:
+            return self._cv.wait_for(lambda: self._outstanding == 0, timeout)
+
+    def pop_errors(self) -> List[BaseException]:
+        """Drain unobserved failures (ones no caller saw via a ticket)."""
+        with self._cv:
+            errs, self._errors = self._errors, []
+        return [e for t, e in errs if not t._error_observed]
+
+    def close(self) -> None:
+        self.wait_idle()
+        with self._cv:
+            thread = self._thread
+            self._thread = None
+        if thread is not None and thread.is_alive():
+            self._q.put(None)
+            thread.join(timeout=10)
+
+
 @dataclasses.dataclass
 class CheckpointRecord:
     step: int
@@ -79,7 +252,8 @@ class CheckpointRecord:
     node_frag_bytes: int
     foreground_s: float    # modelled time on the application's critical path
     background_s: float    # modelled time of offloaded/async work
-    drained: bool
+    drained: bool          # True only once the global copy has landed
+    ticket: Optional[DrainTicket] = None   # future for in-flight async work
 
 
 def _desc_key(step: int) -> str:
@@ -126,6 +300,8 @@ class SCRManager:
         flush_every: int = 1,
         fabric: FabricSpec = EXTOLL,
         async_redundancy: bool = False,
+        async_drain: bool = False,
+        drain_depth: int = 2,
     ):
         self.cluster = cluster
         self.hierarchy = hierarchy
@@ -136,9 +312,14 @@ class SCRManager:
         self.flush_every = flush_every
         self.fabric = fabric
         self.async_redundancy = async_redundancy
+        self.async_drain = async_drain
         self._save_count = 0
-        self._bg_thread: Optional[threading.Thread] = None
-        self._bg_error: Optional[BaseException] = None
+        self._executor = DrainExecutor(depth=drain_depth)
+        self._tickets: Dict[int, DrainTicket] = {}
+        self._meta_lock = threading.RLock()
+        self.drain_stats: Dict[str, float] = {
+            "completed": 0, "cancelled": 0, "failed": 0, "modelled_bg_s": 0.0,
+        }
         if self.strategy == Strategy.NAM_XOR and nam is None:
             raise ValueError("NAM_XOR strategy requires a NAMDevice")
 
@@ -154,24 +335,109 @@ class SCRManager:
         return b"".join(frags[node * p : (node + 1) * p])
 
     def wait(self) -> None:
-        """Barrier on the async redundancy/drain worker."""
-        if self._bg_thread is not None:
-            self._bg_thread.join()
-            self._bg_thread = None
-        if self._bg_error is not None:
-            err, self._bg_error = self._bg_error, None
-            raise IOError("async checkpoint redundancy failed") from err
+        """Barrier on all outstanding async redundancy/drain work."""
+        self._executor.wait_idle()
+        self._raise_failed("async checkpoint background work failed")
+        self._reap_tickets()
+
+    def wait_drained(self, step: Optional[int] = None,
+                     timeout: Optional[float] = None) -> None:
+        """Durability barrier: block until checkpoint(s) reached global storage.
+
+        With a `step`, waits on that checkpoint's drain ticket (a no-op if
+        it was drained synchronously or never scheduled for a flush).
+        Without one, waits for every outstanding background job.  Raises
+        IOError if the awaited work failed, TimeoutError on timeout.
+        """
+        if step is not None:
+            with self._meta_lock:
+                ticket = self._tickets.get(step)
+            if ticket is None:
+                return
+            ticket.result(timeout)
+            return
+        if not self._executor.wait_idle(timeout):
+            raise TimeoutError("checkpoint drain still in flight")
+        self._raise_failed("checkpoint drain failed")
+        self._reap_tickets()
+
+    def drain_future(self, step: int) -> Optional[DrainTicket]:
+        """The DrainTicket for `step`'s in-flight background work, if any."""
+        with self._meta_lock:
+            return self._tickets.get(step)
+
+    def cancel_pending_drains(self, wait: bool = True) -> List[int]:
+        """Failure-injection-safe drain shutdown, used by ``restore()``.
+
+        Queued (not yet started) drains are cancelled — their descriptors
+        stay ``drained=False``, so restore never trusts a global copy that
+        did not land.  The running drain, if any, is allowed to finish;
+        its failure is absorbed into ``drain_stats`` rather than raised,
+        because a dead drain is exactly what restore exists to recover
+        from.  Returns the cancelled steps.
+        """
+        cancelled = self._executor.cancel_queued()
+        if wait:
+            self._executor.wait_idle()
+        self._executor.pop_errors()   # absorbed, already counted by the job
+        self.drain_stats["cancelled"] += len(cancelled)
+        with self._meta_lock:
+            for t in cancelled:
+                self._tickets.pop(t.step, None)
+        self._reap_tickets(include_failed=True)
+        return [t.step for t in cancelled]
+
+    def close(self) -> None:
+        """Stop the drain worker after finishing outstanding work."""
+        self._executor.close()
+
+    def _reap_tickets(self, include_failed: bool = False) -> None:
+        """Drop finished tickets.  FAILED tickets are kept by default so a
+        re-issued durability barrier keeps raising until the failure is
+        explicitly absorbed (restore) or the step pruned."""
+        with self._meta_lock:
+            for s in [
+                s for s, t in self._tickets.items()
+                if t.done() and (include_failed or t.state != DrainState.FAILED)
+            ]:
+                del self._tickets[s]
+
+    def _raise_failed(self, msg: str) -> None:
+        """Surface background failures: unobserved executor errors first,
+        then any still-registered FAILED ticket (idempotent barrier)."""
+        errs = self._executor.pop_errors()
+        if errs:
+            raise IOError(msg) from errs[0]
+        with self._meta_lock:
+            failed = [t for t in self._tickets.values()
+                      if t.state == DrainState.FAILED]
+        if failed:
+            raise IOError(msg) from failed[0].error
 
     # ------------------------------------------------------------------ #
     # save
     # ------------------------------------------------------------------ #
 
     def save(self, step: int, state: Any, meta: Optional[Dict] = None) -> CheckpointRecord:
-        """Checkpoint `state` at `step` using the configured strategy."""
-        self.wait()  # previous async redundancy must land first (double-buffer)
-        blob = serialize_state(state, step=step, meta=meta)
+        """Checkpoint `state` at `step` using the configured strategy.
+
+        With ``async_drain`` (and/or ``async_redundancy``) enabled, returns
+        after the foreground phase; the BeeOND→global flush rides the
+        background executor and the returned record carries its
+        :class:`DrainTicket`.  A full executor (``drain_depth`` checkpoints
+        in flight) applies backpressure by blocking here.
+        """
+        # surface unobserved failures from earlier background work without
+        # blocking (failures seen via a ticket don't fail healthy saves)
+        errs = self._executor.pop_errors()
+        if errs:
+            raise IOError("async checkpoint background work failed") from errs[0]
+
+        stream = serialize_state_stream(state, step=step, meta=meta)
         n_nodes = self.cluster.size
-        frags = partition_blob(blob.data, n_nodes * self.procs_per_node)
+        # the fragment list is the only full-size materialization: fragments
+        # are assembled from leaf-buffer slices, never via one joined blob
+        frags = stream.fragments(n_nodes * self.procs_per_node)
         proc_bytes = len(frags[0])
         node_bytes = proc_bytes * self.procs_per_node
 
@@ -194,24 +460,10 @@ class SCRManager:
 
         self._save_count += 1
         drain = self.flush_every > 0 and (self._save_count % self.flush_every == 0)
-        bg = 0.0
-        if self.async_redundancy:
-            def _bg():
-                try:
-                    redundancy()
-                    if drain:
-                        self._drain_to_global(step, frags)
-                except BaseException as e:  # surfaced at wait()
-                    self._bg_error = e
 
-            self._bg_thread = threading.Thread(target=_bg, daemon=True)
-            self._bg_thread.start()
-        else:
-            fg += redundancy()
-            if drain:
-                bg += self._drain_to_global(step, frags)
-
-        # descriptor goes to global storage (tiny, durable, like SCR's index)
+        # descriptor (tiny, durable, like SCR's index).  Async path: written
+        # up front with drained=False, committed True only after the flush
+        # lands.  Sync path: written once below, after the inline drain.
         desc = {
             "step": int(step),
             "strategy": self.strategy.value,
@@ -219,20 +471,65 @@ class SCRManager:
             "procs_per_node": self.procs_per_node,
             "proc_bytes": proc_bytes,
             "node_frag_bytes": node_bytes,
-            "drained": bool(drain),
-            "manifest": blob.manifest,
+            "drained": False,
+            "manifest": stream.manifest,
         }
-        self.hierarchy.global_tier.put(_desc_key(step), json.dumps(desc).encode())
+
+        redundancy_bg = self.async_redundancy and self.strategy != Strategy.SINGLE
+        drain_bg = drain and (self.async_drain or self.async_redundancy)
+        bg = 0.0
+        ticket: Optional[DrainTicket] = None
+        if not redundancy_bg:
+            fg += redundancy()
+        if redundancy_bg or drain_bg:
+            with self._meta_lock:
+                self.hierarchy.global_tier.put(
+                    _desc_key(step), json.dumps(desc).encode())
+            def job(t: DrainTicket) -> float:
+                try:
+                    s = 0.0
+                    if redundancy_bg:
+                        s += redundancy()
+                    flushed = False
+                    if drain:
+                        s += self._drain_to_global(step, frags)
+                        flushed = self._commit_drained(step)
+                    elif not self.hierarchy.global_tier.exists(_desc_key(step)):
+                        # pruned while the redundancy job ran: sweep the
+                        # buddy/partner/parity artifacts it just wrote
+                        self._delete_step(step)
+                except BaseException:
+                    with self._meta_lock:
+                        self.drain_stats["failed"] += 1
+                    raise
+                with self._meta_lock:
+                    if flushed:
+                        self.drain_stats["completed"] += 1
+                    self.drain_stats["modelled_bg_s"] += s
+                return s
+
+            ticket = DrainTicket(step)
+            with self._meta_lock:
+                self._tickets[step] = ticket
+            self._executor.submit(ticket, job)
+        else:
+            if drain:
+                bg += self._drain_to_global(step, frags)
+                desc["drained"] = True
+            with self._meta_lock:
+                self.hierarchy.global_tier.put(
+                    _desc_key(step), json.dumps(desc).encode())
 
         self._prune(step)
         return CheckpointRecord(
             step=step,
             strategy=self.strategy,
-            total_bytes=blob.nbytes,
+            total_bytes=stream.nbytes,
             node_frag_bytes=node_bytes,
             foreground_s=fg,
             background_s=bg,
-            drained=drain,
+            drained=drain and ticket is None,
+            ticket=ticket,
         )
 
     # -- phase 1: local write ------------------------------------------- #
@@ -249,7 +546,7 @@ class SCRManager:
                 c = SionContainer()
                 for j in range(p):
                     c.write_chunk(node * p + j, f"proc{j}", frags[node * p + j])
-                t = c.store(nvm, _container_key(step))
+                t = c.store_stream(nvm, _container_key(step))
             else:
                 t = 0.0
                 for j in range(p):
@@ -298,7 +595,7 @@ class SCRManager:
             for j in range(p):
                 c.write_chunk(node * p + j, f"proc{j}", frags[node * p + j])
             t = self.fabric.time(node_bytes)
-            t += c.store(buddy_nvm, _buddy_container_key(step, node))
+            t += c.store_stream(buddy_nvm, _buddy_container_key(step, node))
             per_node = max(per_node, t)
         return per_node
 
@@ -359,13 +656,40 @@ class SCRManager:
     # -- global drain (BeeOND async level) -------------------------------- #
 
     def _drain_to_global(self, step: int, frags: List[bytes]) -> float:
+        """Flush every node fragment to global storage (streamed writes).
+
+        Drains *all* fragments, not just those of currently-up nodes: the
+        data is staged in memory, so a node failing between save and drain
+        must not lose its fragment's durable copy.  Per-proc pieces stream
+        straight into the global tier — no joined node blob is built.
+        """
         t = 0.0
-        streams = max(1, len(self.cluster.up_ranks()))
-        for node in self.cluster.up_ranks():
-            data = self._node_fragment(frags, node)
-            t = max(t, self.hierarchy.global_tier.put(_global_key(step, node), data,
-                                                      streams=streams))
+        n_nodes = self.cluster.size
+        p = self.procs_per_node
+        streams = max(1, n_nodes)
+        for node in range(n_nodes):
+            pieces = frags[node * p : (node + 1) * p]
+            t = max(t, self.hierarchy.global_tier.put_stream(
+                _global_key(step, node), pieces, streams=streams))
         return t
+
+    def _commit_drained(self, step: int) -> bool:
+        """Mark `step` drained *after* its global copy landed.
+
+        If the step was pruned while its drain was in flight, the commit
+        is dropped and everything the in-flight job wrote after the
+        deletion — global fragments, NVM redundancy copies, NAM parity —
+        is swept instead.
+        """
+        gt = self.hierarchy.global_tier
+        with self._meta_lock:
+            if gt.exists(_desc_key(step)):
+                desc = json.loads(gt.get(_desc_key(step)).decode())
+                desc["drained"] = True
+                gt.put(_desc_key(step), json.dumps(desc).encode())
+                return True
+        self._delete_step(step)
+        return False
 
     # ------------------------------------------------------------------ #
     # restore
@@ -389,8 +713,12 @@ class SCRManager:
         rebuild: bool = True,
     ) -> Tuple[Any, int]:
         """Recover the newest (or given) checkpoint; reconstructs fragments
-        lost to node failures via the strategy's redundancy data."""
-        self.wait()
+        lost to node failures via the strategy's redundancy data.
+
+        Queued drains are cancelled first and in-flight drain failures are
+        absorbed (see ``cancel_pending_drains``): after a failure we only
+        trust descriptors whose ``drained`` flag was committed."""
+        self.cancel_pending_drains()
         candidates = [step] if step is not None else list(reversed(self.available_steps()))
         last_err: Optional[BaseException] = None
         for s in candidates:
@@ -528,7 +856,29 @@ class SCRManager:
         if self.keep <= 0:
             return
         steps = self.available_steps()
+        # durability guard: never delete the newest *drained* checkpoint —
+        # with an async drain in flight for newer steps it may be the only
+        # durable copy until their commit lands.  The next prune after a
+        # newer drain commits removes it.  Only worth the descriptor scan
+        # while async work is actually outstanding.
+        newest_drained: Optional[int] = None
+        with self._meta_lock:
+            scan = bool(self._tickets)
+        if scan:
+            for s in reversed(steps):
+                try:
+                    if self._descriptor(s).get("drained"):
+                        newest_drained = s
+                        break
+                except (KeyError, IOError, ValueError):
+                    continue
         for old in steps[: max(0, len(steps) - self.keep)]:
+            if old == newest_drained:
+                continue
+            with self._meta_lock:
+                ticket = self._tickets.get(old)
+            if ticket is not None and ticket.try_cancel():
+                self.drain_stats["cancelled"] += 1
             self._delete_step(old)
 
     def _delete_step(self, step: int) -> None:
@@ -542,9 +892,11 @@ class SCRManager:
                 if key.startswith(prefix):
                     nvm.delete(key)
         gt = self.hierarchy.global_tier
-        for key in list(gt.keys()):
-            if key.startswith(prefix) or key == _desc_key(step):
-                gt.delete(key)
+        with self._meta_lock:
+            self._tickets.pop(step, None)
+            for key in list(gt.keys()):
+                if key.startswith(prefix) or key == _desc_key(step):
+                    gt.delete(key)
         if self.nam is not None:
             for key in list(self.nam.tier.keys()):
                 if key.startswith(f"nam_parity/step{step:08d}"):

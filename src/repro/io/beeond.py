@@ -61,6 +61,22 @@ class CacheFS:
             self._q.put(key)
         return t
 
+    def put_stream(self, key: str, chunks, streams: int = 1) -> float:
+        """Streamed write into the cache domain (see MemoryTier.put_stream).
+
+        The chunk iterable is consumed exactly once, into the local tier;
+        the write-through (sync) and drain (async) copies re-read from the
+        local tier — the same staging step a real BeeOND performs.
+        """
+        t = self.local.put_stream(key, chunks, streams=streams)
+        if self.mode == "sync":
+            t += self.global_tier.put(key, self.local.get(key), streams=streams)
+        elif self.mode == "async":
+            with self._lock:
+                self._pending.add(key)
+            self._q.put(key)
+        return t
+
     def _drain_loop(self) -> None:
         while True:
             key = self._q.get()

@@ -22,7 +22,7 @@ import dataclasses
 import hashlib
 import json
 import zlib
-from typing import Any, Dict, List, Sequence, Tuple
+from typing import Any, Dict, Iterator, List, Sequence, Tuple
 
 import jax
 import numpy as np
@@ -49,12 +49,79 @@ class StateBlob:
         return json.dumps(self.manifest, sort_keys=True).encode()
 
 
-def serialize_state(state: Any, step: int = 0, meta: Dict[str, Any] | None = None) -> StateBlob:
-    """Flatten a pytree of arrays into a contiguous blob + manifest."""
+@dataclasses.dataclass
+class StateStream:
+    """A serialized state held as its ordered per-leaf buffers.
+
+    The streaming counterpart of :class:`StateBlob`: the same logical byte
+    sequence, but never joined into one contiguous allocation.  Fragments
+    for the SCR strategy lattice are assembled directly from slices of the
+    leaf buffers, so the only full-size materialization on the checkpoint
+    path is the fragment list itself (one copy, not two).
+    """
+
+    parts: List[bytes]
+    manifest: Dict[str, Any]
+
+    @property
+    def nbytes(self) -> int:
+        return self.manifest["total_bytes"]
+
+    def fragment_size(self, n_ranks: int) -> int:
+        return compute_fragment_size(self.nbytes, n_ranks)
+
+    def iter_chunks(self) -> Iterator[bytes]:
+        """Yield the raw leaf buffers in blob order (zero-copy stream)."""
+        yield from self.parts
+
+    def iter_fragments(self, n_ranks: int) -> Iterator[bytes]:
+        """Yield `n_ranks` equal, ALIGN-padded fragments.
+
+        Identical output to ``partition_blob(join(parts), n_ranks)`` but
+        assembled from memoryview slices of the leaf buffers — the full
+        joined blob is never materialized.
+        """
+        frag = self.fragment_size(n_ranks)
+        views = [memoryview(p) for p in self.parts if len(p)]
+        vi, voff = 0, 0  # cursor into the logical byte sequence
+        for _ in range(n_ranks):
+            pieces: List[memoryview] = []
+            need = frag
+            while need and vi < len(views):
+                take = min(need, len(views[vi]) - voff)
+                pieces.append(views[vi][voff : voff + take])
+                voff += take
+                need -= take
+                if voff == len(views[vi]):
+                    vi, voff = vi + 1, 0
+            out = b"".join(pieces)
+            if len(out) < frag:
+                out += b"\x00" * (frag - len(out))
+            yield out
+
+    def fragments(self, n_ranks: int) -> List[bytes]:
+        return list(self.iter_fragments(n_ranks))
+
+    def to_blob(self) -> StateBlob:
+        """Materialize the contiguous blob (compat / small states)."""
+        return StateBlob(data=b"".join(self.parts), manifest=self.manifest)
+
+
+def serialize_state_stream(
+    state: Any, step: int = 0, meta: Dict[str, Any] | None = None
+) -> StateStream:
+    """Flatten a pytree of arrays into a stream of buffers + manifest.
+
+    CRC32/SHA256 are computed incrementally over the buffers, so the
+    manifest is byte-identical to :func:`serialize_state`'s without ever
+    joining the buffers.
+    """
     leaves_with_paths, treedef = jax.tree_util.tree_flatten_with_path(state)
     entries: List[Dict[str, Any]] = []
     parts: List[bytes] = []
     offset = 0
+    crc = 0
+    sha = hashlib.sha256()
     for path, leaf in leaves_with_paths:
         arr = np.asarray(leaf)
         raw = arr.tobytes()
@@ -69,18 +136,24 @@ def serialize_state(state: Any, step: int = 0, meta: Dict[str, Any] | None = Non
         )
         parts.append(raw)
         offset += len(raw)
-    data = b"".join(parts)
+        crc = zlib.crc32(raw, crc)
+        sha.update(raw)
     manifest = {
         "version": 1,
         "step": int(step),
-        "total_bytes": len(data),
-        "crc32": zlib.crc32(data) & 0xFFFFFFFF,
-        "sha256": hashlib.sha256(data).hexdigest(),
+        "total_bytes": offset,
+        "crc32": crc & 0xFFFFFFFF,
+        "sha256": sha.hexdigest(),
         "treedef": str(treedef),
         "leaves": entries,
         "meta": dict(meta or {}),
     }
-    return StateBlob(data=data, manifest=manifest)
+    return StateStream(parts=parts, manifest=manifest)
+
+
+def serialize_state(state: Any, step: int = 0, meta: Dict[str, Any] | None = None) -> StateBlob:
+    """Flatten a pytree of arrays into a contiguous blob + manifest."""
+    return serialize_state_stream(state, step=step, meta=meta).to_blob()
 
 
 def deserialize_state(blob: StateBlob, like: Any) -> Any:
@@ -121,18 +194,34 @@ def fragment_key(tag: str, step: int, rank: int) -> str:
     return f"{tag}/step{step:08d}/frag{rank:05d}.bin"
 
 
+def compute_fragment_size(total_bytes: int, n_ranks: int) -> int:
+    """Equal fragment size: ceil-divided over ranks, rounded up to ALIGN.
+
+    The single source of truth for fragment layout — shared by the
+    streaming path (StateStream.iter_fragments) and the blob path
+    (partition_blob) so the two can never desynchronize.
+    """
+    if n_ranks < 1:
+        raise ValueError("n_ranks must be >= 1")
+    frag = (total_bytes + n_ranks - 1) // n_ranks
+    return (frag + ALIGN - 1) // ALIGN * ALIGN
+
+
 def partition_blob(data: bytes, n_ranks: int) -> List[bytes]:
     """Split into `n_ranks` equal fragments, zero-padded to ALIGN bytes.
 
     All fragments have identical length (required for XOR groups); the
     manifest's total_bytes recovers the original length on join.
     """
-    if n_ranks < 1:
-        raise ValueError("n_ranks must be >= 1")
-    frag = (len(data) + n_ranks - 1) // n_ranks
-    frag = (frag + ALIGN - 1) // ALIGN * ALIGN
-    padded = data + b"\x00" * (frag * n_ranks - len(data))
-    return [padded[i * frag : (i + 1) * frag] for i in range(n_ranks)]
+    frag = compute_fragment_size(len(data), n_ranks)
+    view = memoryview(data)
+    out: List[bytes] = []
+    for i in range(n_ranks):
+        piece = bytes(view[i * frag : (i + 1) * frag])
+        if len(piece) < frag:  # only tail fragments pay the pad copy
+            piece += b"\x00" * (frag - len(piece))
+        out.append(piece)
+    return out
 
 
 def join_fragments(fragments: Sequence[bytes], total_bytes: int) -> bytes:

@@ -36,7 +36,9 @@ class SionContainer:
         if align < 1:
             raise ValueError("align must be positive")
         self.align = align
-        self._chunks: List[Tuple[int, str, bytes]] = []
+        # each entry holds the chunk's pieces un-joined until seal time, so
+        # streamed writers never pay an intermediate per-chunk join
+        self._chunks: List[Tuple[int, str, List[bytes]]] = []
         self._index: Optional[List[Dict]] = None
         self._data: Optional[bytes] = None
 
@@ -45,7 +47,21 @@ class SionContainer:
     def write_chunk(self, rank: int, name: str, data: bytes) -> None:
         if self._data is not None:
             raise RuntimeError("container already sealed")
-        self._chunks.append((rank, name, bytes(data)))
+        data = data if isinstance(data, bytes) else bytes(data)
+        self._chunks.append((rank, name, [data]))
+
+    def write_chunk_stream(self, rank: int, name: str, pieces) -> None:
+        """Accept one logical chunk as an iterable of byte pieces.
+
+        The pieces are laid out contiguously at seal time; readers see one
+        chunk, writers never build the joined buffer (the streaming-
+        serialization path feeds leaf buffers straight through).
+        """
+        if self._data is not None:
+            raise RuntimeError("container already sealed")
+        self._chunks.append(
+            (rank, name, [p if isinstance(p, bytes) else bytes(p) for p in pieces])
+        )
 
     def seal(self) -> bytes:
         """Lay out chunks with alignment, append the index, return the blob."""
@@ -54,23 +70,34 @@ class SionContainer:
         body: List[bytes] = []
         index: List[Dict] = []
         offset = _HEADER.size
-        for rank, name, data in self._chunks:
+        for rank, name, pieces in self._chunks:
             pad = (-offset) % self.align
             if pad:
                 body.append(b"\x00" * pad)
                 offset += pad
-            index.append({"rank": rank, "name": name, "offset": offset, "nbytes": len(data)})
-            body.append(data)
-            offset += len(data)
+            nbytes = sum(len(p) for p in pieces)
+            index.append({"rank": rank, "name": name, "offset": offset, "nbytes": nbytes})
+            body.extend(pieces)
+            offset += nbytes
         index_blob = json.dumps(index, sort_keys=True).encode()
         header = _HEADER.pack(_MAGIC, _VERSION, self.align, len(index), offset)
         self._data = header + b"".join(body) + index_blob
         self._index = index
         return self._data
 
+    def iter_sealed(self, chunk_bytes: int = 1 << 20):
+        """Yield the sealed container in bounded pieces (streamed store)."""
+        blob = memoryview(self.seal())
+        for off in range(0, len(blob), chunk_bytes):
+            yield blob[off : off + chunk_bytes]
+
     def store(self, tier: MemoryTier, key: str, streams: int = 1) -> float:
         """Persist the sealed container; returns modelled write seconds."""
         return tier.put(key, self.seal(), streams=streams)
+
+    def store_stream(self, tier: MemoryTier, key: str, streams: int = 1) -> float:
+        """Persist via the tier's streaming path (no second full copy)."""
+        return tier.put_stream(key, self.iter_sealed(), streams=streams)
 
     # -- read side ------------------------------------------------------ #
 

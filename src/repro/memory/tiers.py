@@ -152,6 +152,51 @@ class MemoryTier:
             self.modelled_write_s += t
             return t
 
+    def put_stream(self, key: str, chunks, streams: int = 1) -> float:
+        """Store an iterable of byte chunks without joining them first.
+
+        Directory-backed tiers append chunk by chunk, so the full value is
+        never held in one allocation (the streaming checkpoint-drain path);
+        dict-backed tiers fall back to a single join.  Capacity is enforced
+        against the running total; the write lands in a temp file renamed
+        into place on success, so overflow never leaves a torn value and
+        never destroys a pre-existing value under the same key.
+        """
+        with self._lock:
+            budget = self.spec.capacity_bytes - self.used_bytes()
+            total = 0
+            if self.backing_dir is not None:
+                path = self._path(key)
+                tmp = path.parent / (path.name + ".inflight")
+                try:
+                    with open(tmp, "wb") as f:
+                        for chunk in chunks:
+                            total += len(chunk)
+                            if total > budget:
+                                raise CapacityError(
+                                    f"{self.spec.kind.value} tier over capacity "
+                                    f"(streamed {total} > budget {budget})"
+                                )
+                            f.write(chunk)
+                    tmp.replace(path)
+                except BaseException:
+                    tmp.unlink(missing_ok=True)
+                    raise
+            else:
+                parts = []
+                for chunk in chunks:
+                    total += len(chunk)
+                    if total > budget:
+                        raise CapacityError(
+                            f"{self.spec.kind.value} tier over capacity "
+                            f"(streamed {total} > budget {budget})"
+                        )
+                    parts.append(bytes(chunk))
+                self._mem[key] = b"".join(parts)
+            t = self.spec.write_time(total, streams)
+            self.modelled_write_s += t
+            return t
+
     def get(self, key: str, streams: int = 1) -> bytes:
         with self._lock:
             if self.backing_dir is not None:

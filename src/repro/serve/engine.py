@@ -69,9 +69,17 @@ class ServeEngine:
             "pos": np.int32(self.pos),
         }
 
-    def save(self) -> None:
+    def save(self):
+        """Checkpoint the serving state; with an async-drain SCRManager the
+        decode loop continues while the flush rides the drain executor.
+        Returns the CheckpointRecord (its ``ticket`` is the drain future)."""
         assert self.scr is not None
-        self.scr.save(self.pos, self.serving_state())
+        return self.scr.save(self.pos, self.serving_state())
+
+    def wait_drained(self, timeout=None) -> None:
+        """Durability barrier over outstanding serving-state drains."""
+        assert self.scr is not None
+        self.scr.wait_drained(timeout=timeout)
 
     def restore(self) -> int:
         assert self.scr is not None

@@ -10,9 +10,10 @@ The trainer composes every layer of the framework:
     rank, a replacement is provisioned, the lost checkpoint fragment is
     reconstructed from buddy/XOR/NAM redundancy, and training resumes
     from the last checkpoint — the SCR_PARTNER experiment of Fig 8,
-  * straggler mitigation: heartbeat-based detection flags late ranks; the
-    async checkpoint worker never blocks the step loop (BeeOND-style
-    write-back),
+  * straggler mitigation: heartbeat-based detection flags late ranks; with
+    ``SCRManager(async_drain=True)`` the BeeOND->global flush runs on the
+    drain executor so training steps overlap with drains end-to-end, and
+    ``run()`` ends with a ``wait_drained()`` durability barrier,
   * elastic restart: a checkpoint taken on R nodes restores onto R'
     (fragments are re-partitioned from the recovered global blob).
 """
@@ -50,6 +51,9 @@ class TrainReport:
     restarts_from_step: Optional[List[int]] = None
     checkpoints: int = 0
     checkpoint_fg_s: float = 0.0   # modelled foreground checkpoint time
+    checkpoint_bg_s: float = 0.0   # modelled background (drained/overlapped)
+    drains_completed: int = 0      # async drains that reached global storage
+    drain_wait_s: float = 0.0      # wall time blocked on the final barrier
     losses: Optional[List[float]] = None
     stragglers_flagged: int = 0
 
@@ -114,6 +118,7 @@ class Trainer:
         rec = self.scr.save(step, host_state, meta={"pipeline": self.pipeline.state()})
         self.report.checkpoints += 1
         self.report.checkpoint_fg_s += rec.foreground_s
+        self.report.checkpoint_bg_s += rec.background_s  # sync drains only
 
     def _heartbeats(self) -> None:
         for rank in self.cluster.up_ranks():
@@ -159,6 +164,13 @@ class Trainer:
         # final checkpoint so the run is resumable at exactly total_steps
         if total_steps % self.ckpt_every != 0:
             self._checkpoint(total_steps, state)
+        # durability barrier: training steps overlap with drains, but the
+        # run only ends once every checkpoint reached global storage
+        t0 = time.perf_counter()
+        self.scr.wait_drained()
+        self.report.drain_wait_s = time.perf_counter() - t0
+        self.report.checkpoint_bg_s += self.scr.drain_stats["modelled_bg_s"]
+        self.report.drains_completed = int(self.scr.drain_stats["completed"])
         return self.report
 
     def _recover(self) -> Tuple[Dict[str, Any], int]:

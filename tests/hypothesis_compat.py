@@ -1,0 +1,43 @@
+"""Degrade property-based tests to skips when `hypothesis` is absent.
+
+The container this repo targets does not guarantee hypothesis; importing
+it unconditionally turns whole test modules into collection errors.  Test
+modules import `given`/`settings`/`st` from here instead: with hypothesis
+installed they are the real thing; without it, `@given(...)` replaces the
+test with a skip and every other test in the module still runs.
+"""
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised only without hypothesis
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            @pytest.mark.skip(reason="hypothesis not installed")
+            def _skipped():
+                pass
+
+            _skipped.__name__ = fn.__name__
+            _skipped.__doc__ = fn.__doc__
+            return _skipped
+
+        return deco
+
+    def settings(*_args, **_kwargs):
+        def deco(fn):
+            return fn
+
+        return deco
+
+    class _StrategyStub:
+        """Accepts any strategy-builder call chain at collection time."""
+
+        def __getattr__(self, _name):
+            return lambda *a, **k: None
+
+    st = _StrategyStub()

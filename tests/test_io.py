@@ -5,7 +5,7 @@ import time
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st  # skips cleanly if absent
 
 from repro.io.beeond import CacheFS
 from repro.io.sion import SionContainer
@@ -76,6 +76,28 @@ def test_sion_seal_freezes():
     c.seal()
     with pytest.raises(RuntimeError):
         c.write_chunk(1, "b", b"y")
+    with pytest.raises(RuntimeError):
+        c.write_chunk_stream(1, "b", [b"y"])
+
+
+def test_sion_write_chunk_stream_matches_write_chunk():
+    c1, c2 = SionContainer(align=64), SionContainer(align=64)
+    c1.write_chunk_stream(0, "a", [b"he", b"llo", b""])
+    c1.write_chunk(1, "b", b"world")
+    c2.write_chunk(0, "a", b"hello")
+    c2.write_chunk(1, "b", b"world")
+    assert c1.seal() == c2.seal()
+    back = SionContainer.from_bytes(c1.seal())
+    assert back.read_chunk(0, "a") == b"hello"
+    assert back.read_chunk(1, "b") == b"world"
+
+
+def test_sion_store_stream_roundtrip(tmp_path):
+    tier = MemoryTier(TierSpec(TierKind.NVM, 10**9, 1e9, 1e9, 1e-6), tmp_path)
+    c = SionContainer()
+    c.write_chunk_stream(2, "data", [b"str", b"eamed"])
+    c.store_stream(tier, "s.sion")
+    assert SionContainer.open(tier, "s.sion").read_chunk(2, "data") == b"streamed"
 
 
 # ---------------------------------------------------------------------- #
@@ -114,6 +136,26 @@ def test_cache_read_through_fills():
     fs = CacheFS(local, glob, mode="sync")
     assert fs.get("cold") == b"from-global"
     assert local.exists("cold")  # cache filled
+
+
+def test_cache_put_stream_sync_and_async():
+    local, glob = mem_tier(), mem_tier()
+    fs = CacheFS(local, glob, mode="sync")
+    fs.put_stream("k", iter([b"ab", b"cd"]))
+    assert local.get("k") == b"abcd" and glob.get("k") == b"abcd"
+
+    fs2 = CacheFS(mem_tier(), mem_tier(), mode="async")
+    fs2.put_stream("k", [b"ab", b"cd"])
+    fs2.flush()
+    assert fs2.global_tier.get("k") == b"abcd"
+    fs2.close()
+
+
+def test_tier_put_stream_capacity_leaves_no_torn_value(tmp_path):
+    tier = MemoryTier(TierSpec(TierKind.NVM, 100, 1e9, 1e9, 0), tmp_path)
+    with pytest.raises(CapacityError):
+        tier.put_stream("big", [b"x" * 60, b"y" * 60])
+    assert not tier.exists("big")
 
 
 def test_cache_async_faster_foreground_than_sync():

@@ -1,0 +1,267 @@
+"""Asynchronous checkpoint drain pipeline: executor, futures, durability.
+
+Drain timing is made deterministic with a gated global tier: fragment
+writes block on an Event the test controls, while descriptor writes (the
+tiny SCR index records) pass through so save() can complete its
+foreground phase.
+"""
+
+import threading
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cluster.topology import NodeState, VirtualCluster
+from repro.core.scr import DrainState, SCRManager, Strategy, _desc_key, _global_key
+from repro.memory.tiers import MemoryHierarchy, MemoryTier
+
+STATE = {
+    "w": jnp.arange(4000, dtype=jnp.float32).reshape(50, 80),
+    "step": jnp.int32(7),
+}
+TEMPLATE = {
+    "w": jnp.zeros((50, 80), jnp.float32),
+    "step": jnp.int32(0),
+}
+
+
+class GatedGlobalTier(MemoryTier):
+    """Global tier whose checkpoint-fragment writes block on a gate.
+
+    Descriptor traffic (``scr/desc/...``) is never gated, mirroring a real
+    system where the tiny index write is cheap but the bulk flush is not.
+    """
+
+    def __init__(self, inner: MemoryTier):
+        super().__init__(inner.spec, inner.backing_dir)
+        self.gate = threading.Event()
+
+    def _maybe_block(self, key: str) -> None:
+        if key.startswith("ckpt/"):
+            assert self.gate.wait(timeout=30), "test gate never opened"
+
+    def put(self, key, data, streams=1):
+        self._maybe_block(key)
+        return super().put(key, data, streams=streams)
+
+    def put_stream(self, key, chunks, streams=1):
+        self._maybe_block(key)
+        return super().put_stream(key, chunks, streams=streams)
+
+
+def make_async_scr(tmp_path, **kw):
+    cl = VirtualCluster(4, 4, root=tmp_path / "run", xor_group_size=4)
+    hier = MemoryHierarchy(cl)
+    hier.global_tier = GatedGlobalTier(hier.global_tier)
+    kw.setdefault("flush_every", 1)
+    scr = SCRManager(cl, hier, strategy=Strategy.BUDDY, procs_per_node=2,
+                     async_drain=True, **kw)
+    return cl, hier, scr
+
+
+def wipe_all_nvm(cl, hier):
+    for r in cl.ranks():
+        cl.fail(r, NodeState.FAILED_NODE)
+        cl.recover(r)
+        hier.invalidate(r)
+
+
+def assert_state_equal(a, b):
+    assert np.asarray(a["w"]).tobytes() == np.asarray(b["w"]).tobytes()
+
+
+def test_drain_completes_after_save_returns(tmp_path):
+    cl, hier, scr = make_async_scr(tmp_path)
+    rec = scr.save(1, STATE)   # returns while the flush is gated out
+    assert rec.ticket is not None and not rec.ticket.done()
+    assert not rec.drained
+    assert not hier.global_tier.exists(_global_key(1, 0))
+    # descriptor is already durable, but not marked drained yet
+    assert hier.global_tier.exists(_desc_key(1))
+
+    hier.global_tier.gate.set()
+    scr.wait_drained(step=1)
+    assert rec.ticket.state == DrainState.DONE
+    assert rec.ticket.background_s > 0.0
+    for node in range(cl.size):
+        assert hier.global_tier.exists(_global_key(1, node))
+
+
+def test_wait_drained_blocks_until_global_holds_checkpoint(tmp_path):
+    cl, hier, scr = make_async_scr(tmp_path)
+    scr.save(2, STATE)
+    opened_at = []
+
+    def open_gate():
+        time.sleep(0.2)
+        opened_at.append(time.perf_counter())
+        hier.global_tier.gate.set()
+
+    threading.Thread(target=open_gate, daemon=True).start()
+    t0 = time.perf_counter()
+    scr.wait_drained()
+    waited = time.perf_counter() - t0
+    assert waited >= 0.15, "wait_drained returned before the flush could land"
+    assert opened_at and time.perf_counter() >= opened_at[0]
+    # drained flag was committed only after the flush
+    import json
+    desc = json.loads(hier.global_tier.get(_desc_key(2)).decode())
+    assert desc["drained"] is True
+    # and the drained copy alone recovers the state (all NVM wiped)
+    wipe_all_nvm(cl, hier)
+    restored, step = scr.restore(TEMPLATE)
+    assert step == 2
+    assert_state_equal(restored, STATE)
+
+
+def test_restore_after_kill_recovers_last_drained(tmp_path):
+    cl, hier, scr = make_async_scr(tmp_path, keep=4)
+    hier.global_tier.gate.set()
+    scr.save(1, STATE)
+    scr.wait_drained(step=1)          # step 1 fully drained
+
+    newer = dict(STATE)
+    newer["w"] = STATE["w"] + 1
+    hier.global_tier.gate.clear()     # step 2's flush never lands
+    rec2 = scr.save(2, newer)
+    assert rec2.ticket is not None and not rec2.ticket.done()
+
+    # "kill": the process dies mid-drain; every NVM copy is lost too
+    wipe_all_nvm(cl, hier)
+    scr2 = SCRManager(cl, MemoryHierarchy(cl), strategy=Strategy.BUDDY,
+                      procs_per_node=2, flush_every=1, keep=4)
+    restored, step = scr2.restore(TEMPLATE)
+    assert step == 1, "must fall back to the last *drained* checkpoint"
+    assert_state_equal(restored, STATE)
+
+
+def test_restore_cancels_queued_drains(tmp_path):
+    cl, hier, scr = make_async_scr(tmp_path, keep=6, drain_depth=2)
+    hier.global_tier.gate.set()
+    scr.save(1, STATE)
+    scr.wait_drained()
+
+    hier.global_tier.gate.clear()
+    r2 = scr.save(2, STATE)           # drain running, blocked on the gate
+    r3 = scr.save(3, STATE)           # drain queued behind it
+
+    done = threading.Event()
+    result = {}
+
+    def do_restore():
+        result["out"] = scr.restore(TEMPLATE)
+        done.set()
+
+    threading.Thread(target=do_restore, daemon=True).start()
+    time.sleep(0.1)
+    hier.global_tier.gate.set()       # running drain may now finish
+    assert done.wait(timeout=30)
+    _, step = result["out"]
+    assert step in (2, 3)             # NVM intact: newest recoverable wins
+    assert r3.ticket.state in (DrainState.CANCELLED, DrainState.DONE)
+    if r3.ticket.state == DrainState.CANCELLED:
+        import json
+        desc = json.loads(hier.global_tier.get(_desc_key(3)).decode())
+        assert desc["drained"] is False, "cancelled drain must not claim durability"
+
+
+def test_backpressure_blocks_when_drains_pile_up(tmp_path):
+    cl, hier, scr = make_async_scr(tmp_path, keep=6, drain_depth=1)
+    scr.save(1, STATE)                # occupies the single drain slot
+
+    entered = threading.Event()
+    finished = threading.Event()
+
+    def second_save():
+        entered.set()
+        scr.save(2, STATE)            # must block until slot frees
+        finished.set()
+
+    threading.Thread(target=second_save, daemon=True).start()
+    assert entered.wait(timeout=5)
+    # foreground (local writes + redundancy) is fast; only the executor's
+    # backpressure can hold this save for this long
+    assert not finished.wait(timeout=0.5)
+    hier.global_tier.gate.set()
+    assert finished.wait(timeout=30)
+    scr.wait_drained()
+
+
+def test_prune_never_deletes_only_drained_copy(tmp_path):
+    """keep=1 with an in-flight drain: the previous step's drained copy is
+    the only durable one and must survive pruning until a newer commit."""
+    cl, hier, scr = make_async_scr(tmp_path, keep=1)
+    hier.global_tier.gate.set()
+    scr.save(1, STATE)
+    scr.wait_drained(step=1)
+
+    newer = dict(STATE)
+    newer["w"] = STATE["w"] + 1
+    hier.global_tier.gate.clear()      # step 2's flush stays in flight
+    scr.save(2, newer)                 # prune must spare step 1
+
+    wipe_all_nvm(cl, hier)             # kill before the drain lands
+    scr2 = SCRManager(cl, MemoryHierarchy(cl), strategy=Strategy.BUDDY,
+                      procs_per_node=2, flush_every=1, keep=1)
+    restored, step = scr2.restore(TEMPLATE)
+    assert step == 1
+    assert_state_equal(restored, STATE)
+
+    # once a newer drain commits, the old copy is finally pruned
+    hier.global_tier.gate.set()
+    scr.wait_drained()
+    scr.save(3, newer)
+    scr.wait_drained()
+    assert 1 not in scr.available_steps()
+
+
+class FailingGlobalTier(MemoryTier):
+    """Global tier whose checkpoint-fragment writes fail while armed."""
+
+    def __init__(self, inner: MemoryTier):
+        super().__init__(inner.spec, inner.backing_dir)
+        self.fail_fragments = True
+
+    def put_stream(self, key, chunks, streams=1):
+        if self.fail_fragments and key.startswith("ckpt/"):
+            raise IOError("injected drain failure")
+        return super().put_stream(key, chunks, streams=streams)
+
+
+def test_failed_drain_barrier_is_idempotent(tmp_path):
+    cl = VirtualCluster(4, 4, root=tmp_path / "run", xor_group_size=4)
+    hier = MemoryHierarchy(cl)
+    hier.global_tier = FailingGlobalTier(hier.global_tier)
+    scr = SCRManager(cl, hier, strategy=Strategy.BUDDY, procs_per_node=2,
+                     flush_every=1, async_drain=True)
+    scr.save(1, STATE)
+    with pytest.raises(IOError):
+        scr.wait_drained()
+    with pytest.raises(IOError):
+        scr.wait_drained()   # barrier must not go clean after one raise
+    assert scr.drain_stats["failed"] == 1
+
+    # an observed failure must not poison the next healthy save
+    hier.global_tier.fail_fragments = False
+    scr.save(2, STATE)
+    scr.wait_drained(step=2)
+
+    # restore absorbs the failure; only then is the barrier clean
+    restored, step = scr.restore(TEMPLATE)
+    assert step == 2
+    assert_state_equal(restored, STATE)
+    scr.wait_drained()
+
+
+def test_drain_future_and_stats(tmp_path):
+    cl, hier, scr = make_async_scr(tmp_path)
+    hier.global_tier.gate.set()
+    rec = scr.save(1, STATE)
+    assert scr.drain_future(1) is rec.ticket
+    assert rec.ticket.result(timeout=30) >= 0.0
+    scr.wait_drained()
+    assert scr.drain_stats["completed"] == 1
+    assert scr.drain_stats["modelled_bg_s"] > 0.0
+    assert scr.drain_future(1) is None  # reaped after the barrier
