@@ -1,12 +1,16 @@
 # Local fallback for the CI workflow (.github/workflows/ci.yml).
 PY ?= python
 
-.PHONY: verify test bench-smoke bench
+.PHONY: verify test test-fast bench-smoke bench
 
-verify: test bench-smoke
+verify: test-fast bench-smoke
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
+
+# the fast lane CI runs: heaviest model/kernel compiles are marked `slow`
+test-fast:
+	PYTHONPATH=src $(PY) -m pytest -x -q -m "not slow"
 
 bench-smoke:
 	PYTHONPATH=src $(PY) -m benchmarks.fig8_scr_overhead --compare-async

@@ -10,7 +10,13 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import paper_cluster, row, timed
-from repro.memory.tiers import DEEPER_HDD, DEEPER_TIERS, MemoryTier, TierKind
+from repro.memory.tiers import (
+    DEEPER_HDD,
+    DEEPER_TIERS,
+    MemoryTier,
+    TierKind,
+    WallClockThrottle,
+)
 
 PER_CP = 8 * 1e9      # paper scale
 N_CP = 11
@@ -28,17 +34,27 @@ def run():
         f"paper=4.5x",
     ))
 
-    # functional: move real bytes through both tier objects
+    # functional: move real bytes through both tier objects, with the
+    # devices' write bandwidths emulated in wall-clock time by the shared
+    # WallClockThrottle mechanism (same opt-in fig6/fig8 use) — so the
+    # measured microseconds themselves carry the NVMe-vs-HDD gap
     cl, hier = paper_cluster()
-    nvm = hier.nvm(0)
-    hdd = MemoryTier(DEEPER_HDD, cl.root / "hdd0")
+    # devices emulated at 1/32 speed so the throttle sleeps dominate the
+    # container's page-cache write cost and the measured ratio reflects
+    # the devices, not the host
+    emu = 1 / 32
+    nvm = MemoryTier(nvm_spec, cl.root / "nvm_throttled",
+                     throttle=WallClockThrottle(write_bw=nvm_spec.write_bw * emu))
+    hdd = MemoryTier(DEEPER_HDD, cl.root / "hdd0",
+                     throttle=WallClockThrottle(write_bw=DEEPER_HDD.write_bw * emu))
     data = np.random.default_rng(0).bytes(FUNC_BYTES)
     us_nvm = timed(lambda: nvm.put("cp.bin", data), repeats=2)
     us_hdd = timed(lambda: hdd.put("cp.bin", data), repeats=2)
+    meas_speedup = us_hdd / max(us_nvm, 1e-9)
     rows.append(row("fig7/functional_nvm_write", us_nvm,
-                    f"bytes={FUNC_BYTES}"))
+                    f"bytes={FUNC_BYTES} emulated_bw={nvm_spec.write_bw:.1e}"))
     rows.append(row("fig7/functional_hdd_write", us_hdd,
-                    f"bytes={FUNC_BYTES} (same backing store; tier model "
-                    f"carries the speed difference)"))
+                    f"bytes={FUNC_BYTES} emulated_bw={DEEPER_HDD.write_bw:.1e} "
+                    f"measured_speedup={meas_speedup:.1f}x paper=4.5x"))
     cl.teardown()
     return rows

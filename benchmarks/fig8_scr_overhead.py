@@ -32,7 +32,12 @@ import numpy as np
 
 from benchmarks.common import make_scr, paper_cluster, row
 from repro.core.scr import Strategy
-from repro.memory.tiers import DEEPER_TIERS, TierKind
+from repro.memory.tiers import (
+    DEEPER_TIERS,
+    MemoryTier,
+    TierKind,
+    WallClockThrottle,
+)
 
 ITERS = 100
 CP_EVERY = 10
@@ -54,33 +59,12 @@ def modelled_partner_cp_s() -> float:
     return t
 
 
-# Emulated wall-clock bandwidth of the shared global file system.  The
-# simulated tiers physically write to the page cache (CPU-speed), which
-# erases the very bottleneck the async drain hides; this throttle restores
-# the paper's physics — global-storage writes take wall time during which
-# the drain thread sleeps with the GIL released, so overlap is real.
+# Emulated wall-clock bandwidth of the shared global file system: the
+# MemoryTier opt-in throttle (WallClockThrottle) restores the paper's
+# physics — global-storage checkpoint writes take wall time during which
+# the drain thread sleeps with the GIL released, so the overlap the async
+# pipeline buys is real.  Fig 6 and Fig 7 use the same mechanism.
 PFS_WALL_BW = 100e6  # bytes/s
-
-
-class _ThrottledPFS:
-    """Wrap a MemoryTier, adding wall-clock cost to checkpoint writes."""
-
-    def __init__(self, tier):
-        self._tier = tier
-
-    def __getattr__(self, name):
-        return getattr(self._tier, name)
-
-    def put(self, key, data, streams=1):
-        if key.startswith("ckpt/"):
-            time.sleep(len(data) / PFS_WALL_BW)
-        return self._tier.put(key, data, streams=streams)
-
-    def put_stream(self, key, chunks, streams=1):
-        chunks = [bytes(c) for c in chunks]
-        if key.startswith("ckpt/"):
-            time.sleep(sum(len(c) for c in chunks) / PFS_WALL_BW)
-        return self._tier.put_stream(key, chunks, streams=streams)
 
 
 def _fg_walltimes(async_drain: bool, state, n_saves: int):
@@ -88,7 +72,9 @@ def _fg_walltimes(async_drain: bool, state, n_saves: int):
     from repro.cluster.topology import NodeState
 
     cl, hier = paper_cluster(n_cluster=4, n_booster=4)
-    hier.global_tier = _ThrottledPFS(hier.global_tier)
+    hier.global_tier = MemoryTier(
+        hier.global_tier.spec, hier.global_tier.backing_dir,
+        throttle=WallClockThrottle(write_bw=PFS_WALL_BW, key_prefix="ckpt/"))
     # drain_depth >= n_saves: measure the pure foreground phase; the
     # executor's backpressure (smaller depths) is exercised in tests
     scr = make_scr(cl, hier, Strategy.BUDDY, procs_per_node=2,

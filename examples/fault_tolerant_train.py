@@ -16,10 +16,9 @@ from pathlib import Path
 
 from repro.cluster.topology import VirtualCluster
 from repro.configs import get_config
-from repro.core.nam import NAMDevice
 from repro.core.scr import SCRManager, Strategy
 from repro.data.pipeline import TokenPipeline
-from repro.memory.tiers import MemoryHierarchy
+from repro.memory.stack import TierStack
 from repro.models.registry import get_model
 from repro.optim.adamw import AdamWConfig
 from repro.train.trainer import FailureEvent, Trainer
@@ -53,9 +52,10 @@ def main():
 
     root = Path(tempfile.mkdtemp(prefix="deeper_ft_"))
     cluster = VirtualCluster(n_cluster=8, n_booster=4, root=root, xor_group_size=4)
-    hierarchy = MemoryHierarchy(cluster)
-    nam = NAMDevice(hierarchy.nam_tier)
-    scr = SCRManager(cluster, hierarchy, nam=nam, strategy=Strategy.NAM_XOR,
+    # TierStack router: BeeOND cache domain + NAM level + global tier,
+    # composed by placement policy (memory/stack.py)
+    stack = TierStack.for_cluster(cluster, with_nam=True)
+    scr = SCRManager(cluster, stack, strategy=Strategy.NAM_XOR,
                      procs_per_node=2, keep=2, async_redundancy=True)
     pipeline = TokenPipeline(cfg.vocab_size, global_batch=8, seq_len=256)
 

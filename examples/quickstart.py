@@ -16,7 +16,7 @@ from repro.cluster.topology import VirtualCluster
 from repro.configs import get_config
 from repro.core.scr import SCRManager, Strategy
 from repro.data.pipeline import TokenPipeline
-from repro.memory.tiers import MemoryHierarchy
+from repro.memory.stack import TierStack
 from repro.models.registry import get_model
 from repro.optim.adamw import AdamWConfig
 from repro.train.trainer import FailureEvent, Trainer
@@ -28,8 +28,10 @@ def main():
     root = Path(tempfile.mkdtemp(prefix="deeper_quickstart_"))
 
     cluster = VirtualCluster(n_cluster=4, n_booster=4, root=root)
-    hierarchy = MemoryHierarchy(cluster)
-    scr = SCRManager(cluster, hierarchy, strategy=Strategy.BUDDY,
+    # BeeOND cache domain + global tier composed by the TierStack router;
+    # SCR drains checkpoints through the cache domain to global storage
+    stack = TierStack.for_cluster(cluster)
+    scr = SCRManager(cluster, stack, strategy=Strategy.BUDDY,
                      procs_per_node=2, async_drain=True)
     pipeline = TokenPipeline(cfg.vocab_size, global_batch=8, seq_len=128)
 

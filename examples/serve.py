@@ -19,7 +19,7 @@ import numpy as np
 from repro.cluster.topology import VirtualCluster
 from repro.configs import get_config
 from repro.core.scr import SCRManager, Strategy
-from repro.memory.tiers import MemoryHierarchy
+from repro.memory.stack import TierStack
 from repro.models.registry import get_model
 from repro.train.step import make_serve_step
 
@@ -56,8 +56,8 @@ def main():
 
     root = Path(tempfile.mkdtemp(prefix="deeper_serve_"))
     cluster = VirtualCluster(4, 4, root=root)
-    hierarchy = MemoryHierarchy(cluster)
-    scr = SCRManager(cluster, hierarchy, strategy=Strategy.XOR, procs_per_node=2)
+    stack = TierStack.for_cluster(cluster)  # BeeOND domain + global, by policy
+    scr = SCRManager(cluster, stack, strategy=Strategy.XOR, procs_per_node=2)
     serving_state = {"cache": jax.device_get(cache), "last": np.asarray(nxt),
                      "pos": np.int32(pos)}
     scr.save(pos, serving_state)
@@ -73,7 +73,7 @@ def main():
     # node dies; restore serving state and replay the remainder
     cluster.fail(1)
     cluster.recover(1)
-    hierarchy.invalidate(1)
+    scr.invalidate_node(1)
     restored, _ = scr.restore(serving_state)
     nxt2 = jnp.asarray(restored["last"])
     cache2 = jax.tree_util.tree_map(jnp.asarray, restored["cache"])

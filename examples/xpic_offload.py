@@ -54,6 +54,7 @@ def main():
     mesh = Mesh(devs, ("data", "model"))
     cluster = VirtualCluster(n_cluster=2, n_booster=2,
                              root=Path(tempfile.mkdtemp(prefix="xpic_")))
+    # task journal only needs the durable global tier, no stack
     hierarchy = MemoryHierarchy(cluster)
     runtime = TaskRuntime(cluster, journal_tier=hierarchy.global_tier,
                           max_retries=3)

@@ -58,6 +58,7 @@ from repro.io.serialization import (
     serialize_state_stream,
 )
 from repro.io.sion import SionContainer
+from repro.memory.stack import TierStack
 from repro.memory.tiers import MemoryHierarchy, TierSpec
 
 
@@ -292,7 +293,7 @@ class SCRManager:
     def __init__(
         self,
         cluster: VirtualCluster,
-        hierarchy: MemoryHierarchy,
+        hierarchy,
         nam: Optional[NAMDevice] = None,
         strategy: Strategy = Strategy.BUDDY,
         procs_per_node: int = 4,
@@ -302,9 +303,35 @@ class SCRManager:
         async_redundancy: bool = False,
         async_drain: bool = False,
         drain_depth: int = 2,
+        beeond_mode: str = "async",
     ):
+        """``hierarchy`` is either a :class:`MemoryHierarchy` (a TierStack
+        is built over it, capturing its current global tier) or a ready
+        :class:`TierStack` from ``TierStack.for_cluster``/``for_hierarchy``
+        — the shared-storage path (descriptors, BeeOND-staged fragments,
+        drained global copies) is routed through the stack either way."""
         self.cluster = cluster
-        self.hierarchy = hierarchy
+        if isinstance(hierarchy, TierStack):
+            self.stack = hierarchy
+            if hierarchy.hierarchy is None:
+                raise ValueError("TierStack must carry a MemoryHierarchy "
+                                 "(build it with for_cluster/for_hierarchy)")
+            self.hierarchy: MemoryHierarchy = hierarchy.hierarchy
+            if nam is None:
+                nam = hierarchy.nam_device
+        else:
+            self.hierarchy = hierarchy
+            self.stack = TierStack.for_hierarchy(
+                hierarchy, nam=nam, beeond_mode=beeond_mode)
+        if self.stack.beeond is None:
+            raise ValueError("the SCR drain path needs a BeeOND cache "
+                             "domain level in the TierStack")
+        if self.stack.beeond.mode not in ("sync", "async"):
+            # a local-only domain never reaches global storage, so
+            # _commit_drained would mark descriptors drained on a lie
+            raise ValueError("the SCR BeeOND domain must drain to global "
+                             f"storage (mode={self.stack.beeond.mode!r})")
+        self.beeond = self.stack.beeond
         self.nam = nam
         self.strategy = Strategy(strategy)
         self.procs_per_node = int(procs_per_node)
@@ -323,12 +350,31 @@ class SCRManager:
         if self.strategy == Strategy.NAM_XOR and nam is None:
             raise ValueError("NAM_XOR strategy requires a NAMDevice")
 
+    @classmethod
+    def for_cluster(cls, cluster: VirtualCluster,
+                    strategy: Strategy = Strategy.BUDDY,
+                    specs=None, **kw) -> "SCRManager":
+        """Compose the storage side via the TierStack router — BeeOND
+        cache domain, a NAM level when the strategy needs one, global
+        tier — and wire an SCRManager over it.  The one construction
+        path the trainer, serving engine, and launcher all share."""
+        strategy = Strategy(strategy)
+        stack = TierStack.for_cluster(
+            cluster, specs=specs, with_nam=(strategy == Strategy.NAM_XOR))
+        return cls(cluster, stack, strategy=strategy, **kw)
+
     # ------------------------------------------------------------------ #
     # helpers
     # ------------------------------------------------------------------ #
 
     def _nvm(self, rank: int):
         return self.hierarchy.nvm(rank)
+
+    def invalidate_node(self, rank: int) -> None:
+        """Drop cached per-node tier handles after a failure/recovery —
+        the layers above (trainer/engine) go through this instead of
+        poking the raw hierarchy."""
+        self.hierarchy.invalidate(rank)
 
     def _node_fragment(self, frags: List[bytes], node: int) -> bytes:
         p = self.procs_per_node
@@ -390,6 +436,7 @@ class SCRManager:
     def close(self) -> None:
         """Stop the drain worker after finishing outstanding work."""
         self._executor.close()
+        self.stack.close()
 
     def _reap_tickets(self, include_failed: bool = False) -> None:
         """Drop finished tickets.  FAILED tickets are kept by default so a
@@ -483,8 +530,7 @@ class SCRManager:
             fg += redundancy()
         if redundancy_bg or drain_bg:
             with self._meta_lock:
-                self.hierarchy.global_tier.put(
-                    _desc_key(step), json.dumps(desc).encode())
+                self.stack.put(_desc_key(step), json.dumps(desc).encode())
             def job(t: DrainTicket) -> float:
                 try:
                     s = 0.0
@@ -494,7 +540,7 @@ class SCRManager:
                     if drain:
                         s += self._drain_to_global(step, frags)
                         flushed = self._commit_drained(step)
-                    elif not self.hierarchy.global_tier.exists(_desc_key(step)):
+                    elif not self.stack.exists(_desc_key(step)):
                         # pruned while the redundancy job ran: sweep the
                         # buddy/partner/parity artifacts it just wrote
                         self._delete_step(step)
@@ -517,8 +563,7 @@ class SCRManager:
                 bg += self._drain_to_global(step, frags)
                 desc["drained"] = True
             with self._meta_lock:
-                self.hierarchy.global_tier.put(
-                    _desc_key(step), json.dumps(desc).encode())
+                self.stack.put(_desc_key(step), json.dumps(desc).encode())
 
         self._prune(step)
         return CheckpointRecord(
@@ -656,22 +701,29 @@ class SCRManager:
     # -- global drain (BeeOND async level) -------------------------------- #
 
     def _drain_to_global(self, step: int, frags: List[bytes]) -> float:
-        """Flush every node fragment to global storage (streamed writes).
+        """Flush every node fragment to global storage *through the BeeOND
+        cache domain* (§III-C): per-proc pieces stream into the cache
+        domain at local speed (no joined node blob), the domain's drain
+        thread moves them to the global tier, and the closing ``flush()``
+        is the durability barrier — only after it may the descriptor
+        commit ``drained=True``.
 
         Drains *all* fragments, not just those of currently-up nodes: the
         data is staged in memory, so a node failing between save and drain
-        must not lose its fragment's durable copy.  Per-proc pieces stream
-        straight into the global tier — no joined node blob is built.
+        must not lose its fragment's durable copy.
         """
-        t = 0.0
         n_nodes = self.cluster.size
         p = self.procs_per_node
         streams = max(1, n_nodes)
+        stage_t = 0.0
+        drained_before = self.beeond.drained_modelled_s
         for node in range(n_nodes):
             pieces = frags[node * p : (node + 1) * p]
-            t = max(t, self.hierarchy.global_tier.put_stream(
+            # routed by the stack: FRAGMENT keys land on the beeond level
+            stage_t = max(stage_t, self.stack.put_stream(
                 _global_key(step, node), pieces, streams=streams))
-        return t
+        self.beeond.flush()
+        return stage_t + (self.beeond.drained_modelled_s - drained_before)
 
     def _commit_drained(self, step: int) -> bool:
         """Mark `step` drained *after* its global copy landed.
@@ -681,12 +733,11 @@ class SCRManager:
         deletion — global fragments, NVM redundancy copies, NAM parity —
         is swept instead.
         """
-        gt = self.hierarchy.global_tier
         with self._meta_lock:
-            if gt.exists(_desc_key(step)):
-                desc = json.loads(gt.get(_desc_key(step)).decode())
+            if self.stack.exists(_desc_key(step)):
+                desc = json.loads(self.stack.get(_desc_key(step)).decode())
                 desc["drained"] = True
-                gt.put(_desc_key(step), json.dumps(desc).encode())
+                self.stack.put(_desc_key(step), json.dumps(desc).encode())
                 return True
         self._delete_step(step)
         return False
@@ -697,13 +748,13 @@ class SCRManager:
 
     def available_steps(self) -> List[int]:
         steps = []
-        for key in self.hierarchy.global_tier.keys():
+        for key in self.stack.keys():
             if key.startswith("scr/desc/"):
                 steps.append(int(key.split("step")[1].split(".")[0]))
         return sorted(steps)
 
     def _descriptor(self, step: int) -> Dict:
-        raw = self.hierarchy.global_tier.get(_desc_key(step))
+        raw = self.stack.get(_desc_key(step))
         return json.loads(raw.decode())
 
     def restore(
@@ -797,9 +848,17 @@ class SCRManager:
             except (KeyError, RuntimeError, NodeFailure):
                 pass
 
-        # 2) last resort: the drained copy on global storage
+        # 2) the BeeOND-staged copy: save() staged every fragment in the
+        #    cache domain, so within this process it is as good as NVM —
+        #    valid even when the global flush has not committed yet
+        key = _global_key(step, node)
+        if self.beeond.cached(key):
+            return self.beeond.get(key)
+        # 3) last resort: the drained global copy, read *through the stack*
+        #    so the hit promotes back into the cache domain (a restore that
+        #    touches one fragment will likely touch its neighbours too)
         if desc.get("drained"):
-            return self.hierarchy.global_tier.get(_global_key(step, node))
+            return self.stack.get(key)
         raise IOError(f"fragment of node {node} unrecoverable for step {step}")
 
     def _recover_via_xor(
@@ -877,6 +936,12 @@ class SCRManager:
                 continue
             with self._meta_lock:
                 ticket = self._tickets.get(old)
+            if (ticket is not None and not ticket.done()
+                    and scan and newest_drained is None):
+                # nothing has drained yet: this step's in-flight drain may
+                # become the ONLY durable copy — keep it until a newer
+                # drain commits (the next prune after that removes it)
+                continue
             if ticket is not None and ticket.try_cancel():
                 self.drain_stats["cancelled"] += 1
             self._delete_step(old)
@@ -891,12 +956,13 @@ class SCRManager:
             for key in list(nvm.keys()):
                 if key.startswith(prefix):
                     nvm.delete(key)
-        gt = self.hierarchy.global_tier
         with self._meta_lock:
             self._tickets.pop(step, None)
-            for key in list(gt.keys()):
+            for key in list(self.stack.keys()):
                 if key.startswith(prefix) or key == _desc_key(step):
-                    gt.delete(key)
+                    # routes through the stack: the beeond level cancels any
+                    # pending drain of the key before deleting both copies
+                    self.stack.delete(key)
         if self.nam is not None:
             for key in list(self.nam.tier.keys()):
                 if key.startswith(f"nam_parity/step{step:08d}"):

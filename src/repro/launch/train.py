@@ -16,10 +16,8 @@ import jax
 
 from repro.cluster.topology import NodeState, VirtualCluster
 from repro.configs import get_config
-from repro.core.nam import NAMDevice
 from repro.core.scr import SCRManager, Strategy
 from repro.data.pipeline import TokenPipeline
-from repro.memory.tiers import MemoryHierarchy
 from repro.models.registry import get_model
 from repro.optim.adamw import AdamWConfig
 from repro.train.trainer import FailureEvent, Trainer
@@ -53,11 +51,10 @@ def main():
     model = get_model(cfg)
 
     cluster = VirtualCluster(args.n_cluster, args.n_booster, root=Path(args.run_dir))
-    hierarchy = MemoryHierarchy(cluster)
-    strategy = Strategy(args.strategy)
-    nam = NAMDevice(hierarchy.nam_tier) if strategy == Strategy.NAM_XOR else None
-    scr = SCRManager(cluster, hierarchy, nam=nam, strategy=strategy,
-                     procs_per_node=2)
+    # storage composed by the TierStack router (BeeOND cache domain +
+    # optional NAM level + global tier) instead of hand-wired tiers
+    scr = SCRManager.for_cluster(cluster, strategy=Strategy(args.strategy),
+                                 procs_per_node=2)
 
     pipeline = TokenPipeline(cfg.vocab_size, args.global_batch, args.seq_len)
     schedule = []

@@ -1,17 +1,34 @@
 from repro.memory.tiers import (
     TierKind,
     TierSpec,
+    CapacityError,
     MemoryTier,
     MemoryHierarchy,
+    WallClockThrottle,
     DEEPER_TIERS,
     TPU_V5E_TIERS,
+)
+from repro.memory.store import BufferStore, NAMStore
+from repro.memory.stack import (
+    KeyClass,
+    PlacementRule,
+    TierStack,
+    classify_key,
 )
 
 __all__ = [
     "TierKind",
     "TierSpec",
+    "CapacityError",
     "MemoryTier",
     "MemoryHierarchy",
+    "WallClockThrottle",
     "DEEPER_TIERS",
     "TPU_V5E_TIERS",
+    "BufferStore",
+    "NAMStore",
+    "KeyClass",
+    "PlacementRule",
+    "TierStack",
+    "classify_key",
 ]

@@ -1,0 +1,438 @@
+"""TierStack: policy-driven router over BufferStore levels (DEEP-ER §II-B).
+
+DEEP-ER's hierarchy only pays off because *placement* is policy, not
+plumbing: the same tiers serve burst-buffer writes, BeeOND cache domains,
+and SCR's multi-level checkpoints, differing only in where each class of
+data lands and when it moves.  ``TierStack`` pins that down:
+
+* an ordered list of named levels, fastest first, each a
+  :class:`~repro.memory.store.BufferStore` (a raw ``MemoryTier``, a
+  ``CacheFS`` cache domain, a ``NAMStore``, ...);
+* a placement policy per *key class* (descriptor / fragment / container /
+  parity — see :func:`classify_key`): which level is home, whether reads
+  promote, whether the key may be evicted or spill downward;
+* capacity pressure handled as policy: a full level evicts least-
+  recently-used *clean* entries (or demotes dirty ones) and retries, then
+  spills to the next level — instead of a hard ``CapacityError`` on the
+  hot path;
+* read-through with promotion: a get walks the levels from the key's
+  home downward and (policy permitting) re-establishes the value at its
+  home level.
+
+The SCR manager (core/scr.py) routes its whole shared-storage path —
+descriptors, BeeOND-staged checkpoint fragments, drained global copies —
+through one ``TierStack``; serving and training construct their
+hierarchies via :meth:`TierStack.for_cluster`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+import threading
+from collections import OrderedDict
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
+
+from repro.memory.store import BufferStore, NAMStore
+from repro.memory.tiers import CapacityError, MemoryHierarchy
+
+
+class KeyClass(enum.Enum):
+    DESCRIPTOR = "descriptor"   # tiny durable index records (SCR descriptors)
+    FRAGMENT = "fragment"       # bulk checkpoint fragments
+    CONTAINER = "container"     # SION aggregated containers
+    PARITY = "parity"           # XOR / NAM parity blocks
+    OTHER = "other"
+
+
+def classify_key(key: str) -> KeyClass:
+    """Map a storage key to its placement class (see core/scr.py key layout)."""
+    if key.startswith("scr/desc/"):
+        return KeyClass.DESCRIPTOR
+    base = key.rsplit("/", 1)[-1]
+    if key.startswith("nam_parity/") or "parity" in base:
+        return KeyClass.PARITY
+    if key.endswith(".sion"):
+        return KeyClass.CONTAINER
+    if key.startswith("ckpt/"):
+        return KeyClass.FRAGMENT
+    return KeyClass.OTHER
+
+
+@dataclasses.dataclass(frozen=True)
+class PlacementRule:
+    """Where one key class lives and how it moves between levels."""
+
+    level: Optional[str] = None   # home level name; None = first (fastest)
+    promote: bool = True          # re-establish at home on a lower-level hit
+    evictable: bool = True        # may be evicted under capacity pressure
+    spill: bool = True            # may land on a lower level when home is full
+
+
+DEFAULT_POLICY: Dict[KeyClass, PlacementRule] = {
+    # descriptors are the durability index: terminal level, never evicted
+    KeyClass.DESCRIPTOR: PlacementRule(
+        level="global", promote=False, evictable=False, spill=False),
+    KeyClass.FRAGMENT: PlacementRule(),
+    KeyClass.CONTAINER: PlacementRule(),
+    # parity is redundancy data: prefers the NAM (off the failure domain)
+    KeyClass.PARITY: PlacementRule(level="nam", promote=False),
+    KeyClass.OTHER: PlacementRule(),
+}
+
+
+class _ReplayableChunks:
+    """Record a chunk iterable as it is consumed so a capacity-failed
+    ``put_stream`` can be replayed after eviction or on the next level.
+
+    Deliberate tradeoff: the recording holds one transient copy of the
+    value for the duration of the write (freed when the call returns) —
+    the price of never losing a stream to a CapacityError mid-consume.
+    The underlying stores still never build a joined blob."""
+
+    def __init__(self, chunks):
+        self._source = iter(chunks)
+        self._seen: List[bytes] = []
+        self.total = 0
+
+    def replay(self):
+        for c in self._seen:
+            yield c
+        for c in self._source:
+            c = bytes(c)
+            self._seen.append(c)
+            self.total += len(c)
+            yield c
+
+
+class TierStack:
+    """Compose BufferStore levels under one placement policy.
+
+    ``levels`` is an ordered ``[(name, store), ...]``, fastest first; the
+    last level is terminal (durable).  ``policy`` overrides entries of
+    :data:`DEFAULT_POLICY` per :class:`KeyClass`.  A rule naming a level
+    absent from this stack falls back to the terminal level for
+    ``"global"`` and to the first level otherwise.
+    """
+
+    def __init__(
+        self,
+        levels: Sequence[Tuple[str, BufferStore]],
+        policy: Optional[Dict[KeyClass, PlacementRule]] = None,
+        hierarchy: Optional[MemoryHierarchy] = None,
+    ):
+        if not levels:
+            raise ValueError("TierStack needs at least one level")
+        names = [n for n, _ in levels]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate level names: {names}")
+        self.levels: List[Tuple[str, BufferStore]] = list(levels)
+        self.policy = dict(DEFAULT_POLICY)
+        self.policy.update(policy or {})
+        self.hierarchy = hierarchy
+        self.beeond = None       # set by for_hierarchy when a cache domain exists
+        self.nam_device = None   # set by for_hierarchy when a NAM level exists
+        self._lock = threading.RLock()
+        self._lru: Dict[str, "OrderedDict[str, int]"] = {n: OrderedDict() for n in names}
+        # keys known identical to a lower-level copy (promoted reads);
+        # a rewrite at this level clears the mark — eviction must never
+        # treat a merely-existing lower copy as backing for newer data
+        self._clean: Dict[str, set] = {n: set() for n in names}
+        self.stats: Dict[str, int] = {
+            "evictions": 0, "promotions": 0, "spills": 0,
+            **{f"hits_{n}": 0 for n in names},
+        }
+
+    # -- construction ---------------------------------------------------- #
+
+    @classmethod
+    def for_hierarchy(
+        cls,
+        hierarchy: MemoryHierarchy,
+        nam=None,
+        beeond_mode: str = "async",
+        drain_streams: Optional[int] = None,
+        max_pending: Optional[int] = None,
+        policy: Optional[Dict[KeyClass, PlacementRule]] = None,
+    ) -> "TierStack":
+        """The canonical DEEP-ER stack over a MemoryHierarchy:
+
+            beeond (CacheFS cache domain over the aggregated node NVMs,
+                    draining to global)  >  [nam]  >  global
+
+        The CacheFS captures ``hierarchy.global_tier`` *now*, so a caller
+        that wrapped/replaced the global tier (throttling, fault
+        injection) is routed through the wrapper.
+        """
+        from repro.io.beeond import CacheFS  # local import: io imports memory
+
+        size = max(1, hierarchy.cluster.size)
+        beeond = CacheFS(
+            hierarchy.beeond_tier,
+            hierarchy.global_tier,
+            mode=beeond_mode,
+            drain_streams=drain_streams or size,
+            max_pending=max_pending if max_pending is not None else 2 * size,
+        )
+        levels: List[Tuple[str, BufferStore]] = [("beeond", beeond)]
+        if nam is not None:
+            levels.append(("nam", NAMStore(nam)))
+        levels.append(("global", hierarchy.global_tier))
+        stack = cls(levels, policy=policy, hierarchy=hierarchy)
+        stack.beeond = beeond
+        stack.nam_device = nam
+        return stack
+
+    @classmethod
+    def for_cluster(cls, cluster, specs=None, with_nam: bool = False, **kw) -> "TierStack":
+        """One-call construction: hierarchy + cache domain (+ NAM device
+        and level when ``with_nam``) composed into the canonical stack."""
+        hierarchy = MemoryHierarchy(cluster, specs)
+        nam = None
+        if with_nam:
+            from repro.core.nam import NAMDevice  # call-time import, no cycle
+            nam = NAMDevice(hierarchy.nam_tier)
+        return cls.for_hierarchy(hierarchy, nam=nam, **kw)
+
+    # -- policy helpers --------------------------------------------------- #
+
+    def rule_for(self, key: str) -> PlacementRule:
+        return self.policy[classify_key(key)]
+
+    def level(self, name: str) -> BufferStore:
+        for n, store in self.levels:
+            if n == name:
+                return store
+        raise KeyError(name)
+
+    def _home_idx(self, rule: PlacementRule) -> int:
+        if rule.level is not None:
+            for i, (n, _) in enumerate(self.levels):
+                if n == rule.level:
+                    return i
+            if rule.level == "global":
+                return len(self.levels) - 1
+        return 0
+
+    def _spill_targets(self, start: int):
+        """Level indices a write may land on: the home level, then lower
+        levels that accept spilled data (a volatile level like the NAM
+        opts out via ``accepts_spill = False``)."""
+        yield start
+        for i in range(start + 1, len(self.levels)):
+            if getattr(self.levels[i][1], "accepts_spill", True):
+                yield i
+
+    # -- LRU bookkeeping -------------------------------------------------- #
+
+    def _touch(self, idx: int, key: str, size: int) -> None:
+        with self._lock:
+            lru = self._lru[self.levels[idx][0]]
+            lru[key] = size
+            lru.move_to_end(key)
+
+    def _forget(self, idx: int, key: str) -> None:
+        with self._lock:
+            name = self.levels[idx][0]
+            self._lru[name].pop(key, None)
+            self._clean[name].discard(key)
+
+    # -- write path -------------------------------------------------------- #
+
+    def put(self, key: str, data: bytes, streams: int = 1) -> float:
+        """Route a write to the key's home level; evict under pressure,
+        spill downward when the policy allows.  Returns modelled seconds."""
+        rule = self.rule_for(key)
+        start = self._home_idx(rule)
+        last_exc: Optional[CapacityError] = None
+        for i in self._spill_targets(start):
+            try:
+                t = self._put_at(i, key, data, streams)
+            except CapacityError as e:
+                last_exc = e
+                if not rule.spill:
+                    break
+                continue
+            if i > start:
+                with self._lock:
+                    self.stats["spills"] += 1
+            return t
+        assert last_exc is not None
+        raise last_exc
+
+    def _put_at(self, idx: int, key: str, data: bytes, streams: int = 1) -> float:
+        name, store = self.levels[idx]
+        while True:
+            try:
+                t = store.put(key, data, streams=streams)
+                self._touch(idx, key, len(data))
+                with self._lock:
+                    self._clean[name].discard(key)   # rewrite: lower copies stale
+                return t
+            except CapacityError:
+                if not self._evict_one(idx, protect=key):
+                    raise
+
+    def put_stream(self, key: str, chunks, streams: int = 1) -> float:
+        """Streamed ``put``: consumed chunks are recorded so eviction-retry
+        and spill can replay them (overflow never loses the stream)."""
+        rule = self.rule_for(key)
+        start = self._home_idx(rule)
+        replay = _ReplayableChunks(chunks)
+        last_exc: Optional[CapacityError] = None
+        for i in self._spill_targets(start):
+            _, store = self.levels[i]
+            while True:
+                try:
+                    t = store.put_stream(key, replay.replay(), streams=streams)
+                    self._touch(i, key, replay.total)
+                    with self._lock:
+                        self._clean[self.levels[i][0]].discard(key)
+                        if i > start:
+                            self.stats["spills"] += 1
+                    return t
+                except CapacityError as e:
+                    last_exc = e
+                    if not self._evict_one(i, protect=key):
+                        break
+            if not rule.spill:
+                break
+        assert last_exc is not None
+        raise last_exc
+
+    # -- eviction ----------------------------------------------------------- #
+
+    def _evict_one(self, idx: int, protect: str) -> bool:
+        """Free space on one level: LRU-first, clean entries dropped, dirty
+        evictable entries demoted a level.  True if anything was freed."""
+        name, store = self.levels[idx]
+        with self._lock:
+            candidates = [k for k in self._lru[name] if k != protect]
+        seen = set(candidates)
+        # keys written around the stack (directly into the store) are
+        # eviction candidates too, after everything the stack tracked
+        candidates.extend(
+            k for k in store.keys() if k != protect and k not in seen)
+        for k in candidates:
+            rule = self.rule_for(k)
+            if not rule.evictable:
+                continue
+            evict = getattr(store, "evict", None)
+            if evict is not None:
+                # the store knows which of its entries are clean (CacheFS:
+                # drained; NAMStore: redundancy data)
+                if evict(k):
+                    self._forget(idx, k)
+                    with self._lock:
+                        self.stats["evictions"] += 1
+                    return True
+                continue
+            demote_to = next((j for j in self._spill_targets(idx) if j > idx), None)
+            with self._lock:
+                known_clean = k in self._clean[name]
+            if known_clean and self._exists_below(idx, k):
+                store.delete(k)        # promoted copy, identical to the lower one
+            elif demote_to is not None and rule.spill:
+                try:
+                    data = store.get(k)
+                    self._put_at(demote_to, k, data)  # demote, then drop
+                except (KeyError, CapacityError):
+                    continue
+                store.delete(k)
+            else:
+                continue
+            self._forget(idx, k)
+            with self._lock:
+                self.stats["evictions"] += 1
+            return True
+        return False
+
+    def _exists_below(self, idx: int, key: str) -> bool:
+        return any(store.exists(key) for _, store in self.levels[idx + 1:])
+
+    # -- read path ---------------------------------------------------------- #
+
+    def get(self, key: str, streams: int = 1, promote: Optional[bool] = None) -> bytes:
+        """Read through the stack from the key's home level downward.
+
+        A hit below home is promoted back to the home level (best-effort:
+        promotion that cannot make room is skipped, never an error) when
+        the policy — or the explicit ``promote`` argument — says so.
+        """
+        rule = self.rule_for(key)
+        start = self._home_idx(rule)
+        do_promote = rule.promote if promote is None else promote
+        for i in range(start, len(self.levels)):
+            name, store = self.levels[i]
+            if not store.exists(key):
+                continue
+            # a read-through level (CacheFS) answers exists() for content it
+            # merely fronts; `cached` tells whether the level itself holds it
+            held = store.cached(key) if hasattr(store, "cached") else True
+            try:
+                if hasattr(store, "cached"):
+                    # its fill IS the promotion for keys homed here
+                    data = store.get(key, streams=streams, fill=do_promote)
+                else:
+                    data = store.get(key, streams=streams)
+            except KeyError:
+                continue
+            with self._lock:
+                if held:
+                    self.stats[f"hits_{name}"] += 1
+                else:
+                    # served through the level from the store it fronts
+                    # (the terminal level in the canonical stack)
+                    self.stats[f"hits_{self.levels[-1][0]}"] += 1
+                    if do_promote and store.cached(key):
+                        self.stats["promotions"] += 1
+            if held or (hasattr(store, "cached") and store.cached(key)):
+                self._touch(i, key, len(data))
+            if do_promote and i > start:
+                try:
+                    self._put_at(start, key, data, streams)
+                    with self._lock:
+                        self.stats["promotions"] += 1
+                        # the promoted copy IS the lower one: evictable clean
+                        self._clean[self.levels[start][0]].add(key)
+                except CapacityError:
+                    pass
+            return data
+        raise KeyError(key)
+
+    def exists(self, key: str) -> bool:
+        return any(store.exists(key) for _, store in self.levels)
+
+    # -- namespace ops ------------------------------------------------------ #
+
+    def delete(self, key: str) -> None:
+        for i, (_, store) in enumerate(self.levels):
+            store.delete(key)
+            self._forget(i, key)
+
+    def keys(self) -> Iterator[str]:
+        seen = set()
+        for _, store in self.levels:
+            seen.update(store.keys())
+        yield from sorted(seen)
+
+    def used_bytes(self) -> int:
+        return sum(store.used_bytes() for _, store in self.levels)
+
+    def capacity_bytes(self) -> int:
+        return sum(store.capacity_bytes() for _, store in self.levels)
+
+    # -- lifecycle ---------------------------------------------------------- #
+
+    def flush(self) -> None:
+        """Barrier on every level that drains asynchronously (CacheFS)."""
+        for _, store in self.levels:
+            flush = getattr(store, "flush", None)
+            if flush is not None:
+                flush()
+
+    def close(self) -> None:
+        for _, store in self.levels:
+            close = getattr(store, "close", None)
+            if close is not None:
+                close()

@@ -24,6 +24,7 @@ import dataclasses
 import enum
 import shutil
 import threading
+import time
 from pathlib import Path
 from typing import Dict, Iterator, Optional
 
@@ -108,6 +109,47 @@ class CapacityError(RuntimeError):
     pass
 
 
+@dataclasses.dataclass(frozen=True)
+class WallClockThrottle:
+    """Opt-in *wall-clock* bandwidth emulation for a MemoryTier.
+
+    The simulated tiers physically write to the page cache (CPU speed),
+    which erases the very bottleneck the async machinery hides.  A
+    throttle restores the physics: matching operations sleep
+    ``nbytes / bw`` with the GIL released, so overlap measured by the
+    benchmarks (fig6 BeeOND scaling, fig7 NVMe-vs-HDD, fig8 sync-vs-async
+    drain) is real.  Modelled-time accounting is unaffected.
+
+    ``key_prefix`` limits the throttle to bulk traffic (e.g. ``"ckpt/"``)
+    so tiny index/descriptor records stay cheap, mirroring a real PFS.
+    With ``shared=True`` the emulated bandwidth is divided across the
+    ``streams`` concurrent writers of one operation — the global-file-
+    system bottleneck of Fig 6 — while a local device gives every stream
+    its full bandwidth.
+    """
+
+    write_bw: float                    # bytes/s of emulated wall bandwidth
+    read_bw: Optional[float] = None    # None: reads are not throttled
+    key_prefix: str = ""               # only throttle matching keys
+    shared: bool = False               # divide bandwidth across streams
+
+    def applies(self, key: str) -> bool:
+        return key.startswith(self.key_prefix)
+
+    def _sleep(self, nbytes: int, bw: float, streams: int) -> None:
+        eff_bw = bw / max(1, streams) if self.shared else bw
+        if nbytes > 0 and eff_bw > 0:
+            time.sleep(nbytes / eff_bw)
+
+    def sleep_write(self, key: str, nbytes: int, streams: int = 1) -> None:
+        if self.applies(key):
+            self._sleep(nbytes, self.write_bw, streams)
+
+    def sleep_read(self, key: str, nbytes: int, streams: int = 1) -> None:
+        if self.read_bw is not None and self.applies(key):
+            self._sleep(nbytes, self.read_bw, streams)
+
+
 class MemoryTier:
     """Functional byte store + the TierSpec performance model.
 
@@ -115,13 +157,23 @@ class MemoryTier:
     must survive process restart), dict-backed otherwise (HBM/DRAM/NAM sim).
     Thread-safe: the BeeOND async drain and the async checkpoint writer
     touch tiers from worker threads.
+
+    ``throttle`` opts into :class:`WallClockThrottle` emulation — sleeps
+    happen *outside* the tier lock so a throttled bulk write never blocks
+    concurrent metadata traffic.
     """
 
-    def __init__(self, spec: TierSpec, backing_dir: Optional[Path] = None):
+    def __init__(
+        self,
+        spec: TierSpec,
+        backing_dir: Optional[Path] = None,
+        throttle: Optional[WallClockThrottle] = None,
+    ):
         self.spec = spec
         self.backing_dir = Path(backing_dir) if backing_dir is not None else None
         if self.backing_dir is not None:
             self.backing_dir.mkdir(parents=True, exist_ok=True)
+        self.throttle = throttle
         self._mem: Dict[str, bytes] = {}
         self._lock = threading.RLock()
         # accumulated modelled time, for the paper-figure benchmarks
@@ -138,6 +190,14 @@ class MemoryTier:
 
     def put(self, key: str, data: bytes, streams: int = 1) -> float:
         """Store bytes; returns *modelled* write time (seconds)."""
+        t = self._put_locked(key, data, streams)
+        # emulated wall cost only for *admitted* writes, outside the lock —
+        # a CapacityError retry/spill must not pay the sleep
+        if self.throttle is not None:
+            self.throttle.sleep_write(key, len(data), streams)
+        return t
+
+    def _put_locked(self, key: str, data: bytes, streams: int = 1) -> float:
         with self._lock:
             if self.used_bytes() + len(data) > self.spec.capacity_bytes:
                 raise CapacityError(
@@ -161,6 +221,9 @@ class MemoryTier:
         against the running total; the write lands in a temp file renamed
         into place on success, so overflow never leaves a torn value and
         never destroys a pre-existing value under the same key.
+
+        The emulated wall-clock sleep (``throttle=``) happens after the
+        write is admitted, outside the lock — overflow never pays it.
         """
         with self._lock:
             budget = self.spec.capacity_bytes - self.used_bytes()
@@ -195,7 +258,9 @@ class MemoryTier:
                 self._mem[key] = b"".join(parts)
             t = self.spec.write_time(total, streams)
             self.modelled_write_s += t
-            return t
+        if self.throttle is not None:
+            self.throttle.sleep_write(key, total, streams)
+        return t
 
     def get(self, key: str, streams: int = 1) -> bytes:
         with self._lock:
@@ -207,7 +272,44 @@ class MemoryTier:
             else:
                 data = self._mem[key]
             self.modelled_read_s += self.spec.read_time(len(data), streams)
-            return data
+        if self.throttle is not None:
+            self.throttle.sleep_read(key, len(data), streams)
+        return data
+
+    def get_stream(self, key: str, streams: int = 1, chunk_bytes: int = 1 << 20):
+        """Yield the value in bounded pieces (the drain path's read side).
+
+        Directory-backed tiers stream from the open file so the full value
+        is never held in one allocation; dict-backed tiers yield slices of
+        the stored bytes.  Modelled read time is accounted once, up front.
+        """
+        with self._lock:
+            if self.backing_dir is not None:
+                p = self.backing_dir / key
+                if not p.exists():
+                    raise KeyError(key)
+                nbytes = p.stat().st_size
+                f = open(p, "rb")
+            else:
+                data = self._mem[key]
+                nbytes = len(data)
+                f = None
+            self.modelled_read_s += self.spec.read_time(nbytes, streams)
+        if self.throttle is not None:
+            self.throttle.sleep_read(key, nbytes, streams)
+        if f is not None:
+            try:
+                while True:
+                    piece = f.read(chunk_bytes)
+                    if not piece:
+                        return
+                    yield piece
+            finally:
+                f.close()
+        else:
+            view = memoryview(data)
+            for off in range(0, nbytes, chunk_bytes):
+                yield bytes(view[off : off + chunk_bytes])
 
     def exists(self, key: str) -> bool:
         with self._lock:
@@ -239,6 +341,9 @@ class MemoryTier:
                 return sum(p.stat().st_size for p in self.backing_dir.rglob("*") if p.is_file())
             return sum(len(v) for v in self._mem.values())
 
+    def capacity_bytes(self) -> int:
+        return self.spec.capacity_bytes
+
     def wipe(self) -> None:
         with self._lock:
             if self.backing_dir is not None:
@@ -259,6 +364,13 @@ class MemoryHierarchy:
         self._nvm: Dict[int, MemoryTier] = {}
         self.global_tier = MemoryTier(self.specs[TierKind.GLOBAL], cluster.global_dir)
         self.nam_tier = MemoryTier(self.specs[TierKind.NAM], cluster.nam_dir)
+        # BeeOND cache domain: the node-local NVMs aggregated into one
+        # shared staging store in front of global storage (§III-C).  Dict-
+        # backed on purpose — cache content does not survive a process
+        # restart; the drained global copy is the durable one.
+        nvm = self.specs[TierKind.NVM]
+        self.beeond_tier = MemoryTier(dataclasses.replace(
+            nvm, capacity_bytes=nvm.capacity_bytes * max(1, cluster.size)))
 
     def nvm(self, rank: int) -> MemoryTier:
         """Node-local NVM tier; raises NodeFailure if that node is down."""

@@ -34,6 +34,29 @@ class ServeEngine:
         self.scr = scr
         self._step = jax.jit(make_serve_step(cfg, model))
 
+    @classmethod
+    def with_checkpointing(
+        cls,
+        cfg: ArchConfig,
+        model: ModelApi,
+        params: Any,
+        batch: int,
+        max_len: int,
+        cluster,
+        strategy=None,
+        procs_per_node: int = 2,
+        **scr_kw,
+    ) -> "ServeEngine":
+        """Serving engine whose checkpoint storage is composed via the
+        TierStack router (BeeOND cache domain + optional NAM + global)
+        instead of hand-wired tiers — see memory/stack.py."""
+        from repro.core.scr import Strategy
+
+        strategy = Strategy(strategy) if strategy is not None else Strategy.XOR
+        scr = SCRManager.for_cluster(cluster, strategy=strategy,
+                                     procs_per_node=procs_per_node, **scr_kw)
+        return cls(cfg, model, params, batch=batch, max_len=max_len, scr=scr)
+
     def prefill(self, prompt: jax.Array) -> jax.Array:
         """Token-by-token prefill (tiny models; batched prefill uses
         launch/dryrun's prefill_step path)."""

@@ -90,6 +90,26 @@ class Trainer:
         )
         self.report = TrainReport()
 
+    @classmethod
+    def for_cluster(
+        cls,
+        cfg: ArchConfig,
+        model: ModelApi,
+        pipeline: TokenPipeline,
+        cluster: VirtualCluster,
+        strategy: Strategy = Strategy.BUDDY,
+        procs_per_node: int = 2,
+        scr_kw: Optional[Dict[str, Any]] = None,
+        **trainer_kw,
+    ) -> "Trainer":
+        """Build the storage side via the TierStack router: the BeeOND
+        cache domain, (optional) NAM level, and global tier are composed
+        by policy instead of hand-wired tiers — see memory/stack.py."""
+        scr = SCRManager.for_cluster(cluster, strategy=strategy,
+                                     procs_per_node=procs_per_node,
+                                     **(scr_kw or {}))
+        return cls(cfg, model, pipeline, scr, **trainer_kw)
+
     # ------------------------------------------------------------------ #
 
     def _initial_state(self) -> Tuple[Dict[str, Any], int]:
@@ -136,7 +156,7 @@ class Trainer:
                 ev = self.failures.pop(step, None)
                 if ev is not None:
                     self.cluster.fail(ev.rank, ev.kind)
-                    self.scr.hierarchy.invalidate(ev.rank)
+                    self.scr.invalidate_node(ev.rank)
                     self.report.failures += 1
                     raise NodeFailure(ev.rank, ev.kind)
 
@@ -158,7 +178,7 @@ class Trainer:
                     raise RuntimeError("recovery budget exhausted") from e
                 # replacement node comes up; redundancy rebuilds its data
                 self.cluster.recover(e.rank)
-                self.scr.hierarchy.invalidate(e.rank)
+                self.scr.invalidate_node(e.rank)
                 state, step = self._recover()
                 self.report.recoveries += 1
         # final checkpoint so the run is resumable at exactly total_steps

@@ -212,6 +212,7 @@ def test_mamba2_decode_chain_matches_scan():
 # ---------------------------------------------------------------------- #
 
 
+@pytest.mark.slow
 def test_wkv6_chunked_grads_finite():
     r, k, v, w, u = wkv_inputs((1, 16, 2, 8), seed=21)
 
@@ -224,6 +225,7 @@ def test_wkv6_chunked_grads_finite():
         assert np.isfinite(np.asarray(g)).all()
 
 
+@pytest.mark.slow
 def test_mamba2_chunked_grads_finite():
     x, dt, A, Bm, Cm = ssd_inputs((1, 16, 2, 8, 8), seed=22)
 

@@ -255,6 +255,29 @@ def test_failed_drain_barrier_is_idempotent(tmp_path):
     scr.wait_drained()
 
 
+def test_prune_spares_inflight_drain_when_nothing_drained_yet(tmp_path):
+    """keep=1 with NO drained checkpoint at all: pruning must not cancel an
+    older step's in-flight drain — it may become the only durable copy."""
+    cl, hier, scr = make_async_scr(tmp_path, keep=1, drain_depth=2)
+    scr.save(1, STATE)                 # drain blocked on the gate
+    scr.save(2, STATE)                 # prune runs with nothing drained yet
+    assert 1 in scr.available_steps(), \
+        "undrained step with a live drain ticket must survive prune"
+    hier.global_tier.gate.set()
+    scr.wait_drained()
+    # once newer drains committed, the next prune finally removes step 1
+    scr.save(3, STATE)
+    scr.wait_drained()
+    assert 1 not in scr.available_steps()
+
+
+def test_scr_rejects_non_draining_beeond_domain(tmp_path):
+    cl = VirtualCluster(2, 0, root=tmp_path / "run", xor_group_size=2)
+    with pytest.raises(ValueError):
+        SCRManager(cl, MemoryHierarchy(cl), strategy=Strategy.SINGLE,
+                   procs_per_node=1, beeond_mode="local-only")
+
+
 def test_drain_future_and_stats(tmp_path):
     cl, hier, scr = make_async_scr(tmp_path)
     hier.global_tier.gate.set()

@@ -1,0 +1,439 @@
+"""Unified tier-stack storage layer: BufferStore protocol, TierStack
+routing/eviction/promotion, CacheFS drain-race + best-effort fill, and
+the wall-clock throttle."""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.nam import NAMDevice
+from repro.io.beeond import CacheFS
+from repro.memory.stack import (
+    KeyClass,
+    PlacementRule,
+    TierStack,
+    classify_key,
+)
+from repro.memory.store import BufferStore, NAMStore
+from repro.memory.tiers import (
+    CapacityError,
+    MemoryTier,
+    TierKind,
+    TierSpec,
+    WallClockThrottle,
+)
+
+
+def mem_tier(capacity=10**9, throttle=None, **kw):
+    spec = TierSpec(TierKind.DRAM, capacity, 1e9, 1e9, 1e-6, **kw)
+    return MemoryTier(spec, throttle=throttle)
+
+
+def two_level(cache_capacity=200, global_capacity=10**9, policy=None):
+    cache, glob = mem_tier(cache_capacity), mem_tier(global_capacity)
+    stack = TierStack([("cache", cache), ("global", glob)], policy=policy)
+    return stack, cache, glob
+
+
+# ---------------------------------------------------------------------- #
+# BufferStore protocol
+# ---------------------------------------------------------------------- #
+
+
+def test_protocol_implementations():
+    assert isinstance(mem_tier(), BufferStore)
+    assert isinstance(CacheFS(mem_tier(), mem_tier(), mode="local-only"), BufferStore)
+    assert isinstance(NAMStore(NAMDevice(mem_tier())), BufferStore)
+
+
+def test_nam_store_roundtrip_and_capacity():
+    store = NAMStore(NAMDevice(mem_tier(capacity=100)))
+    store.put("a", b"x" * 40)
+    assert store.get("a") == b"x" * 40
+    assert store.exists("a") and list(store.keys()) == ["a"]
+    assert store.used_bytes() == 40
+    # rewrite with a different size reallocates the region
+    store.put_stream("a", [b"y" * 10, b"z" * 10])
+    assert store.get("a") == b"y" * 10 + b"z" * 10
+    with pytest.raises(CapacityError):
+        store.put("b", b"w" * 90)
+    with pytest.raises(KeyError):
+        store.get("missing")
+    store.delete("a")
+    assert not store.exists("a")
+
+
+def test_classify_key():
+    assert classify_key("scr/desc/step00000001.json") is KeyClass.DESCRIPTOR
+    assert classify_key("ckpt/step00000001/node00000.bin") is KeyClass.FRAGMENT
+    assert classify_key("ckpt/step00000001/node.sion") is KeyClass.CONTAINER
+    assert classify_key("ckpt/step00000001/xor_parity.bin") is KeyClass.PARITY
+    assert classify_key("nam_parity/step00000001/group000") is KeyClass.PARITY
+    assert classify_key("journal/task1") is KeyClass.OTHER
+
+
+# ---------------------------------------------------------------------- #
+# TierStack routing, eviction, promotion
+# ---------------------------------------------------------------------- #
+
+
+def test_descriptor_routes_to_terminal_level():
+    stack, cache, glob = two_level()
+    stack.put("scr/desc/step00000001.json", b"{}")
+    assert glob.exists("scr/desc/step00000001.json")
+    assert not cache.exists("scr/desc/step00000001.json")
+    # and reads do not promote it into the cache level
+    assert stack.get("scr/desc/step00000001.json") == b"{}"
+    assert not cache.exists("scr/desc/step00000001.json")
+
+
+def test_lru_eviction_order_under_capacity_pressure():
+    stack, cache, glob = two_level(cache_capacity=100)
+    stack.put("a", b"1" * 40)
+    stack.put("b", b"2" * 40)
+    stack.get("a")                  # a is now more recently used than b
+    stack.put("c", b"3" * 40)       # pressure: must evict exactly b (LRU)
+    assert cache.exists("a") and cache.exists("c")
+    assert not cache.exists("b")
+    assert glob.exists("b"), "dirty LRU victim must be demoted, not lost"
+    assert stack.get("b") == b"2" * 40
+    assert stack.stats["evictions"] >= 1
+
+
+def test_eviction_prefers_clean_copies():
+    stack, cache, glob = two_level(cache_capacity=100)
+    stack.put("a", b"1" * 40)
+    glob.put("a", b"1" * 40)        # a now also lives below: clean
+    stack.put("b", b"2" * 40)
+    stack.get("a")                  # a most-recent — but b is dirty
+    stack.put("c", b"3" * 40)
+    # LRU order would pick b; both work, but nothing may be lost
+    assert stack.get("a") == b"1" * 40
+    assert stack.get("b") == b"2" * 40
+    assert stack.get("c") == b"3" * 40
+
+
+def test_rewrite_never_resurrects_stale_demoted_copy():
+    """v1 demoted to global, then v2 written at home: capacity pressure
+    must not treat the stale global v1 as backing for v2."""
+    stack, cache, glob = two_level(cache_capacity=100)
+    stack.put("k", b"v1" * 20)
+    stack.put("fill", b"f" * 70)     # pressure: demotes LRU (k -> global)
+    assert glob.get("k") == b"v1" * 20
+    stack.put("k", b"v2" * 20)       # rewrite at home; global copy now stale
+    stack.put("fill2", b"g" * 70)    # pressure again: must not drop v2
+    assert stack.get("k") == b"v2" * 20
+
+
+def test_promoted_copy_is_evicted_clean_without_demotion():
+    stack, cache, glob = two_level(cache_capacity=100)
+    glob.put("cold", b"c" * 60)
+    assert stack.get("cold") == b"c" * 60      # promoted: clean at home
+    stack.put("hot", b"h" * 60)                # pressure: drop clean 'cold'
+    assert not cache.exists("cold")
+    assert glob.get("cold") == b"c" * 60       # single lower copy, untouched
+    assert cache.exists("hot")
+
+
+def test_promotion_on_read():
+    stack, cache, glob = two_level()
+    glob.put("k", b"cold-data")
+    assert not cache.exists("k")
+    assert stack.get("k") == b"cold-data"
+    assert cache.exists("k"), "lower-level hit must promote to home level"
+    assert stack.stats["promotions"] == 1
+    assert stack.stats["hits_global"] == 1
+    assert stack.get("k") == b"cold-data"
+    assert stack.stats["hits_cache"] == 1
+
+
+def test_promotion_is_best_effort_under_pressure():
+    policy = {KeyClass.OTHER: PlacementRule(evictable=False)}
+    stack, cache, glob = two_level(cache_capacity=50, policy=policy)
+    stack.put("pin", b"p" * 45)      # fills the cache; not evictable
+    glob.put("cold", b"c" * 40)
+    assert stack.get("cold") == b"c" * 40   # served despite failed promotion
+    assert not cache.exists("cold")
+
+
+def test_put_spills_to_next_level_when_home_cannot_fit():
+    policy = {KeyClass.OTHER: PlacementRule(evictable=False)}
+    stack, cache, glob = two_level(cache_capacity=50, policy=policy)
+    stack.put("pin", b"p" * 45)
+    stack.put("big", b"B" * 400)     # cannot fit or evict: spills to global
+    assert glob.exists("big") and not cache.exists("big")
+    assert stack.stats["spills"] == 1
+    assert stack.get("big", promote=False) == b"B" * 400
+
+
+def test_put_stream_replays_after_eviction_and_spill():
+    stack, cache, glob = two_level(cache_capacity=100)
+    stack.put("old", b"o" * 80)
+    # streamed write that only fits after evicting `old`
+    chunks = iter([b"x" * 30, b"y" * 30, b"z" * 30])
+    stack.put_stream("new", chunks)
+    assert stack.get("new") == b"x" * 30 + b"y" * 30 + b"z" * 30
+    assert glob.exists("old"), "evicted dirty key demoted to global"
+    # a stream larger than the whole cache spills level, replayed intact
+    stack.put_stream("huge", iter([b"h" * 90, b"h" * 90]))
+    assert glob.get("huge") == b"h" * 180
+
+
+def test_spill_skips_volatile_nam_level():
+    """A fragment spilling past a full cache must land on the durable
+    global tier, never be parked on the volatile NAM level — otherwise a
+    descriptor could commit drained=True with no byte in global storage."""
+    policy = {KeyClass.FRAGMENT: PlacementRule(evictable=False)}
+    cache = mem_tier(capacity=10)
+    nam_store = NAMStore(NAMDevice(mem_tier()))
+    glob = mem_tier()
+    stack = TierStack([("cache", cache), ("nam", nam_store), ("global", glob)],
+                      policy=policy)
+    stack.put("ckpt/step00000001/node00000.bin", b"f" * 50)
+    assert glob.exists("ckpt/step00000001/node00000.bin")
+    assert not nam_store.exists("ckpt/step00000001/node00000.bin")
+    stack.put_stream("ckpt/step00000001/node00001.bin", [b"g" * 25, b"g" * 25])
+    assert glob.exists("ckpt/step00000001/node00001.bin")
+    assert not nam_store.exists("ckpt/step00000001/node00001.bin")
+
+
+def test_capacity_error_only_when_no_level_fits():
+    stack, cache, glob = two_level(cache_capacity=50, global_capacity=60)
+    with pytest.raises(CapacityError):
+        stack.put("big", b"B" * 500)
+    assert not stack.exists("big")
+
+
+def test_stack_delete_and_keys_and_used_bytes():
+    stack, cache, glob = two_level()
+    stack.put("a", b"12")
+    glob.put("b", b"3456")
+    assert list(stack.keys()) == ["a", "b"]
+    assert stack.used_bytes() == 6
+    stack.delete("a")
+    assert not stack.exists("a") and list(stack.keys()) == ["b"]
+
+
+# ---------------------------------------------------------------------- #
+# CacheFS as a stack level: drain durability through the BeeOND domain
+# ---------------------------------------------------------------------- #
+
+
+def test_drain_through_cachefs_byte_identical_after_flush(tmp_path):
+    glob = MemoryTier(TierSpec(TierKind.GLOBAL, 10**9, 1e9, 1e9, 1e-4), tmp_path)
+    fs = CacheFS(mem_tier(), glob, mode="async")
+    stack = TierStack([("beeond", fs), ("global", glob)])
+    payload = np.random.default_rng(0).bytes(1 << 16)
+    view = memoryview(payload)
+    stack.put_stream("ckpt/step00000001/node00000.bin",
+                     (view[o:o + 4096] for o in range(0, len(payload), 4096)))
+    fs.flush()
+    # wipe the cache domain: only the drained global copy remains
+    fs.local.wipe()
+    assert stack.get("ckpt/step00000001/node00000.bin") == payload
+    # ... and that read promoted (filled) the cache domain again
+    assert fs.cached("ckpt/step00000001/node00000.bin")
+    fs.close()
+
+
+def test_scr_restore_reads_through_stack_after_full_wipe(tmp_path):
+    """End-to-end: SCR drains through the BeeOND domain; with every NVM
+    and cache copy gone, restore comes back byte-identical via the stack."""
+    from repro.cluster.topology import NodeState, VirtualCluster
+    from repro.core.scr import SCRManager, Strategy
+
+    state = {"w": np.arange(5000, dtype=np.float32), "step": np.int32(3)}
+    template = {"w": np.zeros(5000, np.float32), "step": np.int32(0)}
+    cl = VirtualCluster(4, 0, root=tmp_path / "run", xor_group_size=4)
+    stack = TierStack.for_cluster(cl)
+    scr = SCRManager(cl, stack, strategy=Strategy.BUDDY, procs_per_node=2,
+                     flush_every=1)
+    scr.save(3, state)
+    assert stack.beeond.pending() == 0, "sync save must have flushed"
+    for r in cl.ranks():
+        cl.fail(r, NodeState.FAILED_NODE)
+        cl.recover(r)
+        scr.invalidate_node(r)
+    stack.hierarchy.beeond_tier.wipe()
+    restored, step = scr.restore(template)
+    assert step == 3
+    assert np.asarray(restored["w"]).tobytes() == state["w"].tobytes()
+    cl.teardown()
+
+
+# ---------------------------------------------------------------------- #
+# CacheFS: delete-vs-drain race, best-effort fill, backpressure
+# ---------------------------------------------------------------------- #
+
+
+class _GatedTier(MemoryTier):
+    """Tier whose writes block on an event until the test releases them."""
+
+    def __init__(self, capacity=10**9):
+        super().__init__(TierSpec(TierKind.GLOBAL, capacity, 1e9, 1e9, 1e-6))
+        self.gate = threading.Event()
+
+    def put(self, key, data, streams=1):
+        assert self.gate.wait(timeout=30)
+        return super().put(key, data, streams=streams)
+
+    def put_stream(self, key, chunks, streams=1):
+        assert self.gate.wait(timeout=30)
+        return super().put_stream(key, chunks, streams=streams)
+
+
+def test_delete_cancels_pending_drain_no_resurrection():
+    glob = _GatedTier()
+    fs = CacheFS(mem_tier(), glob, mode="async")
+    fs.put("k", b"doomed")          # drain blocked on the gate
+    fs.delete("k")                  # must cancel the queued/in-flight drain
+    glob.gate.set()
+    fs.flush()                      # regression: used to raise via KeyError,
+    assert not glob.exists("k")     # or resurrect k in global storage
+    assert not fs.exists("k")
+    fs.close()
+
+
+def test_delete_waits_out_inflight_drain():
+    glob = _GatedTier()
+    fs = CacheFS(mem_tier(), glob, mode="async")
+    fs.put("k", b"v1")
+    time.sleep(0.05)                # let the drain thread pick k up
+    t = threading.Thread(target=lambda: (time.sleep(0.1), glob.gate.set()))
+    t.start()
+    fs.delete("k")                  # blocks until the in-flight drain lands
+    t.join()
+    assert not glob.exists("k") and not fs.exists("k")
+    fs.flush()
+    fs.close()
+
+
+def test_get_fill_best_effort_on_full_local():
+    local = mem_tier(capacity=10)
+    glob = mem_tier()
+    glob.put("big", b"g" * 100)
+    fs = CacheFS(local, glob, mode="sync")
+    # regression: a full local tier must serve the global copy, not raise
+    assert fs.get("big") == b"g" * 100
+    assert not local.exists("big")
+
+
+def test_cachefs_put_backpressure_max_pending():
+    glob = _GatedTier()
+    fs = CacheFS(mem_tier(), glob, mode="async", max_pending=2)
+    fs.put("a", b"1")
+    fs.put("b", b"2")
+    done = threading.Event()
+
+    def third():
+        fs.put("c", b"3")           # must block: 2 drains already pending
+        done.set()
+
+    threading.Thread(target=third, daemon=True).start()
+    assert not done.wait(timeout=0.3), "put must block at max_pending"
+    glob.gate.set()
+    assert done.wait(timeout=30)
+    fs.flush()
+    assert glob.get("c") == b"3"
+    fs.close()
+
+
+class _FailingTier(MemoryTier):
+    def __init__(self):
+        super().__init__(TierSpec(TierKind.GLOBAL, 10**9, 1e9, 1e9, 1e-6))
+        self.fail = True
+
+    def put_stream(self, key, chunks, streams=1):
+        if self.fail:
+            raise IOError("injected drain failure")
+        return super().put_stream(key, chunks, streams=streams)
+
+
+def test_cachefs_evict_refuses_keys_whose_drain_failed():
+    glob = _FailingTier()
+    fs = CacheFS(mem_tier(), glob, mode="async")
+    fs.put("k", b"only-copy")
+    with pytest.raises(IOError):
+        fs.flush()
+    # drain never landed: the staged copy is the only one — must not evict
+    assert fs.evict("k") is False
+    assert fs.cached("k")
+    glob.fail = False
+    fs.put("k", b"only-copy")       # rewrite re-drains successfully
+    fs.flush()
+    assert fs.evict("k") is True
+    fs.close()
+
+
+class _GatedFailOnceTier(MemoryTier):
+    """Blocks writes on a gate; the first write after opening fails."""
+
+    def __init__(self):
+        super().__init__(TierSpec(TierKind.GLOBAL, 10**9, 1e9, 1e9, 1e-6))
+        self.gate = threading.Event()
+        self.fails_left = 1
+
+    def put_stream(self, key, chunks, streams=1):
+        assert self.gate.wait(timeout=30)
+        if self.fails_left > 0:
+            self.fails_left -= 1
+            raise IOError("transient drain failure")
+        return super().put_stream(key, chunks, streams=streams)
+
+
+def test_cachefs_successful_redrain_unpins_failed_key():
+    """A transient failure then a successful drain of the same key must
+    clear the dirty mark, or the key is pinned against eviction forever."""
+    glob = _GatedFailOnceTier()
+    fs = CacheFS(mem_tier(), glob, mode="async")
+    fs.put("k", b"v")               # queued drain #1: will fail
+    fs.put("k", b"v")               # queued drain #2: will land
+    glob.gate.set()
+    with pytest.raises(IOError):
+        fs.flush()                  # surfaces the transient failure
+    assert glob.get("k") == b"v"
+    assert fs.evict("k") is True, "drained key must be evictable again"
+    fs.close()
+
+
+def test_cachefs_evict_refuses_dirty_keys():
+    glob = _GatedTier()
+    fs = CacheFS(mem_tier(), glob, mode="async")
+    fs.put("k", b"dirty")
+    assert fs.evict("k") is False, "undrained key must not be evicted"
+    glob.gate.set()
+    fs.flush()
+    assert fs.evict("k") is True
+    assert not fs.cached("k") and glob.exists("k")
+    fs.close()
+
+
+# ---------------------------------------------------------------------- #
+# wall-clock throttle
+# ---------------------------------------------------------------------- #
+
+
+def test_throttle_sleeps_matching_keys_only():
+    tier = mem_tier(throttle=WallClockThrottle(write_bw=1e6, key_prefix="ckpt/"))
+    t0 = time.perf_counter()
+    tier.put("scr/desc/x.json", b"d" * 50_000)
+    fast = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    tier.put("ckpt/frag.bin", b"d" * 50_000)   # 50 ms emulated
+    slow = time.perf_counter() - t0
+    assert slow >= 0.045 and fast < 0.045
+
+
+def test_throttle_shared_divides_bandwidth_across_streams():
+    shared = WallClockThrottle(write_bw=1e6, shared=True)
+    tier = mem_tier(throttle=shared)
+    t0 = time.perf_counter()
+    tier.put_stream("k", [b"x" * 10_000], streams=5)   # 50 ms emulated
+    elapsed = time.perf_counter() - t0
+    assert elapsed >= 0.045
+    local = mem_tier(throttle=WallClockThrottle(write_bw=1e6))
+    t0 = time.perf_counter()
+    local.put("k", b"x" * 10_000, streams=5)           # 10 ms: not shared
+    assert time.perf_counter() - t0 < 0.045
