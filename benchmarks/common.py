@@ -19,6 +19,7 @@ import time
 from pathlib import Path
 from typing import Callable, Dict, List
 
+from repro.api.session import ResilienceSession
 from repro.cluster.topology import VirtualCluster
 from repro.core.nam import NAMDevice
 from repro.core.scr import SCRManager, Strategy
@@ -49,6 +50,12 @@ def paper_cluster(n_cluster=16, n_booster=8, xor_group_size=4, tmp=None):
 def make_scr(cl, hier, strategy: Strategy, **kw):
     nam = NAMDevice(hier.nam_tier) if strategy == Strategy.NAM_XOR else None
     return SCRManager(cl, hier, nam=nam, strategy=strategy, **kw)
+
+
+def make_session(cl, hier, strategy: Strategy, policy=None, **kw) -> ResilienceSession:
+    """The user-facing surface over :func:`make_scr`: the benchmarks
+    drive checkpoints through session transactions, like applications."""
+    return ResilienceSession(make_scr(cl, hier, strategy, **kw), policy=policy)
 
 
 def row(name: str, us: float, derived: str) -> Dict[str, str]:

@@ -12,7 +12,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import make_scr, paper_cluster, row, timed
+from benchmarks.common import make_session, paper_cluster, row, timed
 from repro.core.scr import Strategy
 
 NODES = [4, 8, 16]
@@ -37,9 +37,10 @@ def run():
         modelled = {}
         for strat in order:
             cl, hier = paper_cluster(n_cluster=n, n_booster=0)
-            scr = make_scr(cl, hier, strat, procs_per_node=4, flush_every=0)
-            rec = scr.save(1, state)
-            us = timed(lambda: scr.save(2, state), repeats=1)
+            session = make_session(cl, hier, strat, procs_per_node=4, flush_every=0)
+            rec = session.save(1, state)
+            us = timed(lambda: session.save(2, state), repeats=1)
+            session.close()
             # paper-scale: scale modelled time by the data-size ratio
             scale = MODEL_PARTICLES_PER_NODE / PARTICLES_PER_NODE
             modelled[strat] = rec.foreground_s * scale

@@ -30,7 +30,7 @@ if __package__ in (None, ""):  # `python benchmarks/fig8_scr_overhead.py`
 
 import numpy as np
 
-from benchmarks.common import make_scr, paper_cluster, row
+from benchmarks.common import make_session, paper_cluster, row
 from repro.core.scr import Strategy
 from repro.memory.tiers import (
     DEEPER_TIERS,
@@ -76,29 +76,30 @@ def _fg_walltimes(async_drain: bool, state, n_saves: int):
         hier.global_tier.spec, hier.global_tier.backing_dir,
         throttle=WallClockThrottle(write_bw=PFS_WALL_BW, key_prefix="ckpt/"))
     # drain_depth >= n_saves: measure the pure foreground phase; the
-    # executor's backpressure (smaller depths) is exercised in tests
-    scr = make_scr(cl, hier, Strategy.BUDDY, procs_per_node=2,
-                   flush_every=1, keep=n_saves + 1,
-                   async_drain=async_drain, drain_depth=n_saves)
-    times = []
-    for s in range(1, n_saves + 1):
-        t0 = time.perf_counter()
-        scr.save(s, state)
-        times.append(time.perf_counter() - t0)
-    scr.wait_drained()   # durability barrier, off the per-save measurement
+    # executor's backpressure (smaller depths) is exercised in tests.
+    # Driven through the session API end-to-end, like an application.
+    with make_session(cl, hier, Strategy.BUDDY, procs_per_node=2,
+                      flush_every=1, keep=n_saves + 1,
+                      async_drain=async_drain, drain_depth=n_saves) as session:
+        times = []
+        for s in range(1, n_saves + 1):
+            t0 = time.perf_counter()
+            session.save(s, state)
+            times.append(time.perf_counter() - t0)
+        session.wait_drained()  # durability barrier, off the per-save measurement
 
-    # post-drain restore must round-trip byte-identically even with every
-    # NVM copy gone (forces the path through the drained global copies)
-    for r in list(cl.ranks()):
-        cl.fail(r, NodeState.FAILED_NODE)
-        cl.recover(r)
-        hier.invalidate(r)
-    template = {k: np.zeros_like(v) for k, v in state.items()}
-    restored, step = scr.restore(template)
-    ok = step == n_saves and all(
-        np.asarray(restored[k]).tobytes() == np.asarray(v).tobytes()
-        for k, v in state.items()
-    )
+        # post-drain restore must round-trip byte-identically even with
+        # every NVM copy gone (forces the drained-global-copy path)
+        for r in list(cl.ranks()):
+            cl.fail(r, NodeState.FAILED_NODE)
+            cl.recover(r)
+            hier.invalidate(r)
+        template = {k: np.zeros_like(v) for k, v in state.items()}
+        restored, step = session.restore_latest(template)
+        ok = step == n_saves and all(
+            np.asarray(restored[k]).tobytes() == np.asarray(v).tobytes()
+            for k, v in state.items()
+        )
     cl.teardown()
     return times, ok
 

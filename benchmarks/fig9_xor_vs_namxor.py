@@ -14,7 +14,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import make_scr, paper_cluster, row, timed
+from benchmarks.common import make_session, paper_cluster, row, timed
 from repro.core.scr import Strategy
 
 PER_NODE_CP_MODEL = 2 * 1e9          # paper: 2 GB per node, 10 CPs
@@ -48,9 +48,10 @@ def run():
     # functional: both strategies through the real SCR stack
     for strat in (Strategy.XOR, Strategy.NAM_XOR):
         cl, hier = paper_cluster(n_cluster=8, n_booster=0, xor_group_size=4)
-        scr = make_scr(cl, hier, strat, procs_per_node=4, flush_every=0)
-        rec = scr.save(1, state)
-        us = timed(lambda: scr.save(2, state), repeats=1)
+        session = make_session(cl, hier, strat, procs_per_node=4, flush_every=0)
+        rec = session.save(1, state)
+        us = timed(lambda: session.save(2, state), repeats=1)
+        session.close()
         rows.append(row(
             f"fig9/{strat.value}_functional", us,
             f"fg_modelled_s={rec.foreground_s:.5f} (incl. base local write)",

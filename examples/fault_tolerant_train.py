@@ -14,6 +14,7 @@ import tempfile
 import time
 from pathlib import Path
 
+from repro.api import IntervalPolicy, ResilienceSession
 from repro.cluster.topology import VirtualCluster
 from repro.configs import get_config
 from repro.core.scr import SCRManager, Strategy
@@ -53,23 +54,24 @@ def main():
     root = Path(tempfile.mkdtemp(prefix="deeper_ft_"))
     cluster = VirtualCluster(n_cluster=8, n_booster=4, root=root, xor_group_size=4)
     # TierStack router: BeeOND cache domain + NAM level + global tier,
-    # composed by placement policy (memory/stack.py)
+    # composed by placement policy (memory/stack.py); NAM-XOR parity is
+    # routed to the nam level via TierStack.offload
     stack = TierStack.for_cluster(cluster, with_nam=True)
     scr = SCRManager(cluster, stack, strategy=Strategy.NAM_XOR,
                      procs_per_node=2, keep=2, async_redundancy=True)
     pipeline = TokenPipeline(cfg.vocab_size, global_batch=8, seq_len=256)
 
-    trainer = Trainer(
-        cfg, model, pipeline, scr,
-        opt_cfg=AdamWConfig(lr=6e-4, warmup_steps=20),
-        ckpt_every=20,
-        failure_schedule=[
-            FailureEvent(step=steps // 3, rank=5),
-            FailureEvent(step=2 * steps // 3, rank=9),
-        ],
-    )
     t0 = time.monotonic()
-    report = trainer.run(total_steps=steps)
+    with ResilienceSession(scr, policy=IntervalPolicy(20)) as session:
+        trainer = Trainer(
+            cfg, model, pipeline, session,
+            opt_cfg=AdamWConfig(lr=6e-4, warmup_steps=20),
+            failure_schedule=[
+                FailureEvent(step=steps // 3, rank=5),
+                FailureEvent(step=2 * steps // 3, rank=9),
+            ],
+        )
+        report = trainer.run(total_steps=steps)
     wall = time.monotonic() - t0
 
     print(f"steps run            : {report.steps_run} in {wall:.0f}s")

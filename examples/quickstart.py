@@ -2,6 +2,8 @@
 
 Runs in ~1 minute on CPU.  Demonstrates:
   * the Cluster-Booster virtual topology (4+4 nodes),
+  * the SCR-style session API (ResilienceSession: need/start/route/
+    complete checkpoint transactions over a pluggable policy),
   * BUDDY checkpointing (SIONlib-aggregated containers on the partner),
   * the asynchronous BeeOND->global drain (training overlaps the flush),
   * a node failure mid-run, fragment reconstruction, and resume.
@@ -12,6 +14,7 @@ Runs in ~1 minute on CPU.  Demonstrates:
 import tempfile
 from pathlib import Path
 
+from repro.api import IntervalPolicy, ResilienceSession
 from repro.cluster.topology import VirtualCluster
 from repro.configs import get_config
 from repro.core.scr import SCRManager, Strategy
@@ -29,19 +32,21 @@ def main():
 
     cluster = VirtualCluster(n_cluster=4, n_booster=4, root=root)
     # BeeOND cache domain + global tier composed by the TierStack router;
-    # SCR drains checkpoints through the cache domain to global storage
+    # SCR drains checkpoints through the cache domain to global storage.
+    # The session is the user surface: transactional checkpoints, policy-
+    # driven cadence, context-managed shutdown (no leaked drain threads).
     stack = TierStack.for_cluster(cluster)
     scr = SCRManager(cluster, stack, strategy=Strategy.BUDDY,
                      procs_per_node=2, async_drain=True)
     pipeline = TokenPipeline(cfg.vocab_size, global_batch=8, seq_len=128)
 
-    trainer = Trainer(
-        cfg, model, pipeline, scr,
-        opt_cfg=AdamWConfig(lr=1e-3, warmup_steps=10),
-        ckpt_every=10,
-        failure_schedule=[FailureEvent(step=17, rank=3)],  # kill node 3
-    )
-    report = trainer.run(total_steps=30)
+    with ResilienceSession(scr, policy=IntervalPolicy(10)) as session:
+        trainer = Trainer(
+            cfg, model, pipeline, session,
+            opt_cfg=AdamWConfig(lr=1e-3, warmup_steps=10),
+            failure_schedule=[FailureEvent(step=17, rank=3)],  # kill node 3
+        )
+        report = trainer.run(total_steps=30)
 
     print(f"steps run           : {report.steps_run}")
     print(f"node failures       : {report.failures}")

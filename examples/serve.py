@@ -16,10 +16,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import ResilienceSession
 from repro.cluster.topology import VirtualCluster
 from repro.configs import get_config
-from repro.core.scr import SCRManager, Strategy
-from repro.memory.stack import TierStack
+from repro.core.scr import Strategy
 from repro.models.registry import get_model
 from repro.train.step import make_serve_step
 
@@ -56,33 +56,38 @@ def main():
 
     root = Path(tempfile.mkdtemp(prefix="deeper_serve_"))
     cluster = VirtualCluster(4, 4, root=root)
-    stack = TierStack.for_cluster(cluster)  # BeeOND domain + global, by policy
-    scr = SCRManager(cluster, stack, strategy=Strategy.XOR, procs_per_node=2)
-    serving_state = {"cache": jax.device_get(cache), "last": np.asarray(nxt),
-                     "pos": np.int32(pos)}
-    scr.save(pos, serving_state)
+    # the SCR-style session API: one transaction per checkpoint — start,
+    # route each named part of the serving state, complete (commit)
+    with ResilienceSession.for_cluster(cluster, strategy=Strategy.XOR,
+                                       procs_per_node=2) as session:
+        serving_state = {"cache": jax.device_get(cache), "last": np.asarray(nxt),
+                         "pos": np.int32(pos)}
+        session.start_checkpoint(pos)
+        for name, part in serving_state.items():
+            session.route(name, part)
+        session.complete_checkpoint()
 
-    # continue to the end (reference stream)
-    ref = []
-    nxt_ref, cache_ref, p = nxt, cache, pos
-    for _ in range(args.tokens - half):
-        nxt_ref, cache_ref = serve_step(params, cache_ref, nxt_ref, jnp.int32(p))
-        ref.append(np.asarray(nxt_ref))
-        p += 1
+        # continue to the end (reference stream)
+        ref = []
+        nxt_ref, cache_ref, p = nxt, cache, pos
+        for _ in range(args.tokens - half):
+            nxt_ref, cache_ref = serve_step(params, cache_ref, nxt_ref, jnp.int32(p))
+            ref.append(np.asarray(nxt_ref))
+            p += 1
 
-    # node dies; restore serving state and replay the remainder
-    cluster.fail(1)
-    cluster.recover(1)
-    scr.invalidate_node(1)
-    restored, _ = scr.restore(serving_state)
-    nxt2 = jnp.asarray(restored["last"])
-    cache2 = jax.tree_util.tree_map(jnp.asarray, restored["cache"])
-    p2 = int(restored["pos"])
-    out = []
-    for _ in range(args.tokens - half):
-        nxt2, cache2 = serve_step(params, cache2, nxt2, jnp.int32(p2))
-        out.append(np.asarray(nxt2))
-        p2 += 1
+        # node dies; restore serving state and replay the remainder
+        cluster.fail(1)
+        cluster.recover(1)
+        session.invalidate_node(1)
+        restored, _ = session.restore_latest(serving_state)
+        nxt2 = jnp.asarray(restored["last"])
+        cache2 = jax.tree_util.tree_map(jnp.asarray, restored["cache"])
+        p2 = int(restored["pos"])
+        out = []
+        for _ in range(args.tokens - half):
+            nxt2, cache2 = serve_step(params, cache2, nxt2, jnp.int32(p2))
+            out.append(np.asarray(nxt2))
+            p2 += 1
 
     assert all(np.array_equal(a, b) for a, b in zip(ref, out)), \
         "post-restore decode diverged"

@@ -1,0 +1,19 @@
+"""User-facing resiliency API: transactional sessions + checkpoint policies."""
+
+from repro.api.policy import (
+    CheckpointPolicy,
+    DalyPolicy,
+    DrainAwarePolicy,
+    IntervalPolicy,
+    PolicyContext,
+)
+from repro.api.session import ResilienceSession
+
+__all__ = [
+    "CheckpointPolicy",
+    "DalyPolicy",
+    "DrainAwarePolicy",
+    "IntervalPolicy",
+    "PolicyContext",
+    "ResilienceSession",
+]

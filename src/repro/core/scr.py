@@ -35,6 +35,12 @@ The manager is also a *performance model*: each save returns modelled
 foreground/background seconds derived from the tier and fabric specs, so
 the benchmark harness can reproduce the paper's Figs 4, 8, 9 at paper
 scale without the paper's hardware.
+
+This class is the *engine*.  The user-facing surface is the SCR-style
+transactional session API (``repro/api/session.py``: need / start /
+route / complete a checkpoint, ``restore_latest``) — application code
+goes through a :class:`~repro.api.session.ResilienceSession`; ``save``/
+``restore`` here remain for tests and internal plumbing.
 """
 
 from __future__ import annotations
@@ -59,6 +65,7 @@ from repro.io.serialization import (
 )
 from repro.io.sion import SionContainer
 from repro.memory.stack import TierStack
+from repro.memory.store import OffloadOp
 from repro.memory.tiers import MemoryHierarchy, TierSpec
 
 
@@ -341,6 +348,7 @@ class SCRManager:
         self.async_redundancy = async_redundancy
         self.async_drain = async_drain
         self._save_count = 0
+        self._closed = False
         self._executor = DrainExecutor(depth=drain_depth)
         self._tickets: Dict[int, DrainTicket] = {}
         self._meta_lock = threading.RLock()
@@ -433,8 +441,42 @@ class SCRManager:
         self._reap_tickets(include_failed=True)
         return [t.step for t in cancelled]
 
+    def outstanding_drains(self) -> int:
+        """Number of checkpoints whose background work has not landed."""
+        with self._meta_lock:
+            return sum(1 for t in self._tickets.values() if not t.done())
+
+    @property
+    def drain_depth(self) -> int:
+        """The executor's in-flight bound (backpressure threshold)."""
+        return self._executor.depth
+
+    def discard(self, step: int) -> None:
+        """Remove every artifact of ``step`` from every tier: descriptor,
+        NVM copies, BeeOND-staged and drained fragments, NAM parity.  Any
+        queued drain of the step is cancelled first.  Idempotent, and the
+        abort path of the session API (repro/api/session.py) — a failed
+        or abandoned checkpoint transaction must leave no partial
+        fragments behind."""
+        with self._meta_lock:
+            ticket = self._tickets.get(step)
+        if ticket is not None and ticket.try_cancel():
+            self.drain_stats["cancelled"] += 1
+        self._delete_step(step)
+
+    def __enter__(self) -> "SCRManager":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.close()
+        return False
+
     def close(self) -> None:
-        """Stop the drain worker after finishing outstanding work."""
+        """Stop the drain worker after finishing outstanding work, then
+        shut down the storage stack's threads.  Idempotent."""
+        if self._closed:
+            return
+        self._closed = True
         self._executor.close()
         self.stack.close()
 
@@ -665,38 +707,31 @@ class SCRManager:
         return per_node
 
     def _nam_xor_redundancy(self, step: int, frags: List[bytes], node_bytes: int) -> float:
-        """DEEP-ER NAM-XOR: the NAM pulls fragments and computes parity."""
-        assert self.nam is not None
+        """DEEP-ER NAM-XOR: the NAM pulls fragments and computes parity.
+
+        Routed through :meth:`TierStack.offload`: parity keys are homed
+        on the stack's ``nam`` level by placement policy, pool pressure
+        is handled by the stack's LRU eviction (oldest steps' regions
+        go first), and a stack without a NAM level falls back to the
+        byte-identical host computation."""
         busy = 0.0
         for gid, group in enumerate(self.cluster.xor_groups):
             region = _nam_region(step, gid)
-            if not self.nam.exists(region):
-                try:
-                    self.nam.alloc(region, node_bytes)
-                except MemoryError:
-                    # pool full: evict oldest step's regions, then retry
-                    self._evict_nam_regions(keep_step=step)
-                    self.nam.alloc(region, node_bytes)
             node_frags = [self._node_fragment(frags, n) for n in group]
-            busy = max(
-                busy,
-                self.nam.offload_parity(
-                    region, [lambda f=f: f for f in node_frags], node_bytes
-                ),
+            op = OffloadOp(
+                kind="xor_parity",
+                sources=[lambda f=f: f for f in node_frags],
+                nbytes=node_bytes,
             )
+            # protect this step's other regions: pool pressure must evict
+            # older steps' parity, never degrade the checkpoint being taken
+            busy = max(busy, self.stack.offload(
+                region, op, protect_prefix=f"nam_parity/step{step:08d}"))
         # foreground cost on the nodes: just the trigger (the NAM pulls);
         # when synchronous, the caller waits for the NAM to finish.
         if self.async_redundancy:
             return self.fabric.latency_s
         return self.fabric.latency_s + busy
-
-    def _evict_nam_regions(self, keep_step: int) -> None:
-        for key in list(self.nam.tier.keys()):
-            if key.startswith("nam_parity/") and f"step{keep_step:08d}" not in key:
-                self.nam.tier.delete(key)
-        for name in list(self.nam._regions):
-            if name.startswith("nam_parity/") and f"step{keep_step:08d}" not in name:
-                self.nam.free(name)
 
     # -- global drain (BeeOND async level) -------------------------------- #
 
@@ -719,9 +754,12 @@ class SCRManager:
         drained_before = self.beeond.drained_modelled_s
         for node in range(n_nodes):
             pieces = frags[node * p : (node + 1) * p]
-            # routed by the stack: FRAGMENT keys land on the beeond level
+            # routed by the stack: FRAGMENT keys land on the beeond level;
+            # the size hint lets admission control reroute an oversized
+            # fragment without consuming the stream first
             stage_t = max(stage_t, self.stack.put_stream(
-                _global_key(step, node), pieces, streams=streams))
+                _global_key(step, node), pieces, streams=streams,
+                size_hint=len(pieces[0]) * len(pieces)))
         self.beeond.flush()
         return stage_t + (self.beeond.drained_modelled_s - drained_before)
 
@@ -890,7 +928,9 @@ class SCRManager:
             if member == node:
                 continue
             frag_map[i] = have.get(member) or self._read_own_for(desc, step, member)
-        nam_parity = self.nam.get(_nam_region(step, gid))
+        # read through the stack: the parity key's home is the nam level,
+        # but a host-fallback copy that spilled lower is found too
+        nam_parity = self.stack.get(_nam_region(step, gid))
         return parity.reconstruct_from_nam(local_idx, frag_map, nam_parity, len(group))
 
     def _rebuild_local(self, desc: Dict, step: int, node: int, fragment: bytes) -> None:
@@ -956,14 +996,19 @@ class SCRManager:
             for key in list(nvm.keys()):
                 if key.startswith(prefix):
                     nvm.delete(key)
+        nam_prefix = f"nam_parity/step{step:08d}"
         with self._meta_lock:
             self._tickets.pop(step, None)
             for key in list(self.stack.keys()):
-                if key.startswith(prefix) or key == _desc_key(step):
+                if (key.startswith(prefix) or key == _desc_key(step)
+                        or key.startswith(nam_prefix)):
                     # routes through the stack: the beeond level cancels any
-                    # pending drain of the key before deleting both copies
+                    # pending drain of the key before deleting both copies,
+                    # and a nam level frees the region (pool capacity back).
+                    # The nam_prefix match also sweeps host-fallback parity
+                    # copies that landed on lower levels.
                     self.stack.delete(key)
         if self.nam is not None:
             for key in list(self.nam.tier.keys()):
-                if key.startswith(f"nam_parity/step{step:08d}"):
-                    self.nam.tier.delete(key)
+                if key.startswith(nam_prefix):
+                    self.nam.free(key)   # NAM device not fronted by a level

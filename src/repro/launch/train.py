@@ -14,9 +14,11 @@ from pathlib import Path
 
 import jax
 
+from repro.api.policy import DalyPolicy, DrainAwarePolicy, IntervalPolicy
+from repro.api.session import ResilienceSession
 from repro.cluster.topology import NodeState, VirtualCluster
 from repro.configs import get_config
-from repro.core.scr import SCRManager, Strategy
+from repro.core.scr import Strategy
 from repro.data.pipeline import TokenPipeline
 from repro.models.registry import get_model
 from repro.optim.adamw import AdamWConfig
@@ -35,6 +37,10 @@ def main():
     ap.add_argument("--strategy", default="buddy",
                     choices=[s.value for s in Strategy])
     ap.add_argument("--ckpt-every", type=int, default=10)
+    ap.add_argument("--mtbf-s", type=float, default=None,
+                    help="use the Daly-optimal checkpoint policy for this "
+                         "MTBF (wrapped drain-aware) instead of a fixed "
+                         "--ckpt-every interval")
     ap.add_argument("--n-cluster", type=int, default=4)
     ap.add_argument("--n-booster", type=int, default=4)
     ap.add_argument("--fail-at", type=int, default=None,
@@ -51,24 +57,32 @@ def main():
     model = get_model(cfg)
 
     cluster = VirtualCluster(args.n_cluster, args.n_booster, root=Path(args.run_dir))
-    # storage composed by the TierStack router (BeeOND cache domain +
-    # optional NAM level + global tier) instead of hand-wired tiers
-    scr = SCRManager.for_cluster(cluster, strategy=Strategy(args.strategy),
-                                 procs_per_node=2)
+    # the user-facing resiliency surface: a transactional checkpoint
+    # session whose storage side is composed by the TierStack router
+    # (BeeOND cache domain + optional NAM level + global tier) and whose
+    # cadence is a pluggable policy instead of a hard-coded modulo
+    if args.mtbf_s is not None:
+        policy = DrainAwarePolicy(DalyPolicy(args.mtbf_s))
+    else:
+        policy = IntervalPolicy(args.ckpt_every)
+    session = ResilienceSession.for_cluster(
+        cluster, strategy=Strategy(args.strategy), policy=policy,
+        procs_per_node=2)
 
     pipeline = TokenPipeline(cfg.vocab_size, args.global_batch, args.seq_len)
     schedule = []
     if args.fail_at is not None:
         schedule.append(FailureEvent(step=args.fail_at, rank=args.fail_rank))
 
-    trainer = Trainer(
-        cfg, model, pipeline, scr,
-        opt_cfg=AdamWConfig(lr=args.lr),
-        ckpt_every=args.ckpt_every,
-        micro_batches=args.micro_batches,
-        failure_schedule=schedule,
-    )
-    report = trainer.run(args.steps)
+    with session:
+        trainer = Trainer(
+            cfg, model, pipeline, session,
+            opt_cfg=AdamWConfig(lr=args.lr),
+            ckpt_every=args.ckpt_every,
+            micro_batches=args.micro_batches,
+            failure_schedule=schedule,
+        )
+        report = trainer.run(args.steps)
     print(json.dumps({
         "arch": cfg.name,
         "steps_run": report.steps_run,

@@ -17,7 +17,16 @@ data lands and when it moves.  ``TierStack`` pins that down:
   hot path;
 * read-through with promotion: a get walks the levels from the key's
   home downward and (policy permitting) re-establishes the value at its
-  home level.
+  home level;
+* admission control (``admission_fraction``): a value larger than that
+  fraction of a level's capacity is never cached there — it routes
+  straight to the next level of its chain, so one oversized stream
+  cannot wipe a level's working set;
+* near-memory offload: :meth:`TierStack.offload` routes an
+  :class:`~repro.memory.store.OffloadOp` to the first capable level of
+  the key's chain (the NAM level for parity keys — DEEP-ER's FPGA
+  parity path), with a byte-identical host fallback for stacks without
+  one.
 
 The SCR manager (core/scr.py) routes its whole shared-storage path —
 descriptors, BeeOND-staged checkpoint fragments, drained global copies —
@@ -33,7 +42,7 @@ import threading
 from collections import OrderedDict
 from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
-from repro.memory.store import BufferStore, NAMStore
+from repro.memory.store import BufferStore, NAMStore, OffloadOp
 from repro.memory.tiers import CapacityError, MemoryHierarchy
 
 
@@ -120,19 +129,28 @@ class TierStack:
         levels: Sequence[Tuple[str, BufferStore]],
         policy: Optional[Dict[KeyClass, PlacementRule]] = None,
         hierarchy: Optional[MemoryHierarchy] = None,
+        admission_fraction: Optional[float] = None,
     ):
         if not levels:
             raise ValueError("TierStack needs at least one level")
         names = [n for n, _ in levels]
         if len(set(names)) != len(names):
             raise ValueError(f"duplicate level names: {names}")
+        if admission_fraction is not None and not 0.0 < admission_fraction <= 1.0:
+            raise ValueError("admission_fraction must be in (0, 1]")
         self.levels: List[Tuple[str, BufferStore]] = list(levels)
         self.policy = dict(DEFAULT_POLICY)
         self.policy.update(policy or {})
         self.hierarchy = hierarchy
+        # admission control: a value larger than this fraction of a
+        # level's capacity is not cached there — it routes straight to
+        # the next level of its placement chain (the terminal level
+        # always admits).  None disables the check.
+        self.admission_fraction = admission_fraction
         self.beeond = None       # set by for_hierarchy when a cache domain exists
         self.nam_device = None   # set by for_hierarchy when a NAM level exists
         self._lock = threading.RLock()
+        self._closed = False
         self._lru: Dict[str, "OrderedDict[str, int]"] = {n: OrderedDict() for n in names}
         # keys known identical to a lower-level copy (promoted reads);
         # a rewrite at this level clears the mark — eviction must never
@@ -140,6 +158,7 @@ class TierStack:
         self._clean: Dict[str, set] = {n: set() for n in names}
         self.stats: Dict[str, int] = {
             "evictions": 0, "promotions": 0, "spills": 0,
+            "admission_routed": 0, "offloads": 0,
             **{f"hits_{n}": 0 for n in names},
         }
 
@@ -154,6 +173,7 @@ class TierStack:
         drain_streams: Optional[int] = None,
         max_pending: Optional[int] = None,
         policy: Optional[Dict[KeyClass, PlacementRule]] = None,
+        admission_fraction: Optional[float] = None,
     ) -> "TierStack":
         """The canonical DEEP-ER stack over a MemoryHierarchy:
 
@@ -178,7 +198,8 @@ class TierStack:
         if nam is not None:
             levels.append(("nam", NAMStore(nam)))
         levels.append(("global", hierarchy.global_tier))
-        stack = cls(levels, policy=policy, hierarchy=hierarchy)
+        stack = cls(levels, policy=policy, hierarchy=hierarchy,
+                    admission_fraction=admission_fraction)
         stack.beeond = beeond
         stack.nam_device = nam
         return stack
@@ -223,6 +244,17 @@ class TierStack:
             if getattr(self.levels[i][1], "accepts_spill", True):
                 yield i
 
+    def _admits(self, idx: int, nbytes: Optional[int]) -> bool:
+        """Admission control: may a value of ``nbytes`` be cached at this
+        level?  A value larger than ``admission_fraction`` of the level's
+        capacity is refused — one oversized stream must not wipe a whole
+        level's working set to make room (the terminal level is exempted
+        by the callers: durable storage admits everything)."""
+        if self.admission_fraction is None or nbytes is None:
+            return True
+        cap = self.levels[idx][1].capacity_bytes()
+        return nbytes <= self.admission_fraction * cap
+
     # -- LRU bookkeeping -------------------------------------------------- #
 
     def _touch(self, idx: int, key: str, size: int) -> None:
@@ -240,12 +272,20 @@ class TierStack:
     # -- write path -------------------------------------------------------- #
 
     def put(self, key: str, data: bytes, streams: int = 1) -> float:
-        """Route a write to the key's home level; evict under pressure,
-        spill downward when the policy allows.  Returns modelled seconds."""
+        """Route a write to the key's home level; refuse (admission
+        control) or evict (capacity pressure) per policy, spilling
+        downward when the rule allows.  Returns modelled seconds."""
         rule = self.rule_for(key)
         start = self._home_idx(rule)
+        targets = list(self._spill_targets(start))
         last_exc: Optional[CapacityError] = None
-        for i in self._spill_targets(start):
+        for i in targets:
+            # admission control: route an oversized value straight to the
+            # next level (the last candidate always admits)
+            if i != targets[-1] and rule.spill and not self._admits(i, len(data)):
+                with self._lock:
+                    self.stats["admission_routed"] += 1
+                continue
             try:
                 t = self._put_at(i, key, data, streams)
             except CapacityError as e:
@@ -273,14 +313,25 @@ class TierStack:
                 if not self._evict_one(idx, protect=key):
                     raise
 
-    def put_stream(self, key: str, chunks, streams: int = 1) -> float:
+    def put_stream(self, key: str, chunks, streams: int = 1,
+                   size_hint: Optional[int] = None) -> float:
         """Streamed ``put``: consumed chunks are recorded so eviction-retry
-        and spill can replay them (overflow never loses the stream)."""
+        and spill can replay them (overflow never loses the stream).
+
+        ``size_hint`` (total bytes, when the caller knows it) lets
+        admission control route an oversized stream past a level without
+        consuming it first."""
         rule = self.rule_for(key)
         start = self._home_idx(rule)
+        targets = list(self._spill_targets(start))
         replay = _ReplayableChunks(chunks)
         last_exc: Optional[CapacityError] = None
-        for i in self._spill_targets(start):
+        for i in targets:
+            if (i != targets[-1] and rule.spill
+                    and not self._admits(i, size_hint)):
+                with self._lock:
+                    self.stats["admission_routed"] += 1
+                continue
             _, store = self.levels[i]
             while True:
                 try:
@@ -302,9 +353,12 @@ class TierStack:
 
     # -- eviction ----------------------------------------------------------- #
 
-    def _evict_one(self, idx: int, protect: str) -> bool:
+    def _evict_one(self, idx: int, protect: str,
+                   protect_prefix: Optional[str] = None) -> bool:
         """Free space on one level: LRU-first, clean entries dropped, dirty
-        evictable entries demoted a level.  True if anything was freed."""
+        evictable entries demoted a level.  ``protect`` (and every key
+        under ``protect_prefix``) is never a candidate.  True if anything
+        was freed."""
         name, store = self.levels[idx]
         with self._lock:
             candidates = [k for k in self._lru[name] if k != protect]
@@ -314,6 +368,8 @@ class TierStack:
         candidates.extend(
             k for k in store.keys() if k != protect and k not in seen)
         for k in candidates:
+            if protect_prefix is not None and k.startswith(protect_prefix):
+                continue
             rule = self.rule_for(k)
             if not rule.evictable:
                 continue
@@ -388,7 +444,7 @@ class TierStack:
                         self.stats["promotions"] += 1
             if held or (hasattr(store, "cached") and store.cached(key)):
                 self._touch(i, key, len(data))
-            if do_promote and i > start:
+            if do_promote and i > start and self._admits(start, len(data)):
                 try:
                     self._put_at(start, key, data, streams)
                     with self._lock:
@@ -402,6 +458,44 @@ class TierStack:
 
     def exists(self, key: str) -> bool:
         return any(store.exists(key) for _, store in self.levels)
+
+    # -- near-memory offload ------------------------------------------------ #
+
+    def offload(self, key: str, op: OffloadOp,
+                protect_prefix: Optional[str] = None) -> float:
+        """Run an :class:`OffloadOp` at the first capable level of the
+        key's placement chain (for parity keys: the ``nam`` level — the
+        DEEP-ER near-memory compute path), evicting under capacity
+        pressure like any write.  ``protect_prefix`` shields a key group
+        from that eviction — a checkpoint's earlier parity regions must
+        not be sacrificed to place its later ones; if the level cannot
+        make room without touching protected keys the ``CapacityError``
+        propagates (a loud failure beats committing a silently degraded
+        checkpoint).  Stacks without a capable level fall back to
+        computing the op on the host and routing the result through
+        :meth:`put` — byte-identical, just without the offload's
+        bandwidth advantage.  Returns modelled seconds."""
+        rule = self.rule_for(key)
+        start = self._home_idx(rule)
+        for i in range(start, len(self.levels)):
+            name, store = self.levels[i]
+            run = getattr(store, "offload", None)
+            if run is None:
+                continue
+            while True:
+                try:
+                    t = run(key, op)
+                except CapacityError:
+                    if self._evict_one(i, protect=key,
+                                       protect_prefix=protect_prefix):
+                        continue
+                    raise
+                self._touch(i, key, op.nbytes)
+                with self._lock:
+                    self._clean[name].discard(key)
+                    self.stats["offloads"] += 1
+                return t
+        return self.put(key, op.compute())
 
     # -- namespace ops ------------------------------------------------------ #
 
@@ -432,6 +526,11 @@ class TierStack:
                 flush()
 
     def close(self) -> None:
+        """Idempotent: stop every level that owns background threads."""
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
         for _, store in self.levels:
             close = getattr(store, "close", None)
             if close is not None:

@@ -23,9 +23,17 @@ The contract:
 Stores raise ``CapacityError`` (memory/tiers.py) when a write does not
 fit; the router turns that into policy (LRU eviction, spill to the next
 level) instead of a hot-path crash.  A store may additionally offer
-``evict(key) -> bool`` — drop a *clean* cached copy without touching
-durable state — which the router prefers over ``delete`` under capacity
-pressure.
+
+* ``evict(key) -> bool`` — drop a *clean* cached copy without touching
+  durable state — which the router prefers over ``delete`` under
+  capacity pressure;
+* ``offload(key, op) -> float`` — execute an :class:`OffloadOp` *at the
+  level* (near-memory compute): the store pulls the op's sources and
+  materializes the result under ``key`` without the data crossing the
+  caller's storage path.  ``TierStack.offload`` routes an op to the
+  first capable level of the key's placement chain and falls back to
+  computing on the host for stacks without one — so the NAM-XOR parity
+  path is placement policy, not special-cased plumbing.
 
 ``NAMStore`` adapts a :class:`~repro.core.nam.NAMDevice` to the protocol:
 one region per key, allocated on demand, ring-buffer transfers underneath
@@ -35,9 +43,34 @@ failure domain.
 
 from __future__ import annotations
 
-from typing import Iterator, Protocol, runtime_checkable
+import dataclasses
+from typing import Callable, Iterator, Protocol, Sequence, runtime_checkable
 
 from repro.memory.tiers import CapacityError
+
+
+@dataclasses.dataclass(frozen=True)
+class OffloadOp:
+    """A near-memory operation a capable store can run at its level.
+
+    ``sources`` are zero-argument callables producing the input byte
+    fragments (the "pull" side: the level fetches them itself, so the
+    result never crosses the caller's storage path); ``nbytes`` is the
+    size of each fragment and of the result region.  ``compute()`` is
+    the host-side oracle — byte-identical to what a capable level
+    produces — used by the router's fallback when no level can offload.
+    """
+
+    kind: str                                    # "xor_parity"
+    sources: Sequence[Callable[[], bytes]]
+    nbytes: int
+
+    def compute(self) -> bytes:
+        if self.kind == "xor_parity":
+            from repro.core import parity  # call-time import: core imports memory
+
+            return parity.encode_nam_parity([src() for src in self.sources])
+        raise ValueError(f"unknown offload op {self.kind!r}")
 
 
 @runtime_checkable
@@ -101,6 +134,22 @@ class NAMStore:
     def put_stream(self, key: str, chunks, streams: int = 1) -> float:
         # RMA puts are single transfers on the wire; join at the ring buffer
         return self.put(key, b"".join(bytes(c) for c in chunks), streams=streams)
+
+    def offload(self, key: str, op: OffloadOp) -> float:
+        """Run an offload op on the NAM's near-memory logic (the FPGA
+        path of ``NAMDevice.offload_parity``): the NAM pulls the op's
+        sources over the fabric and stores the result under ``key``.
+        Pool exhaustion surfaces as :class:`CapacityError` so the router
+        can evict and retry like any other write."""
+        if op.kind != "xor_parity":
+            raise ValueError(f"NAM cannot offload op {op.kind!r}")
+        self._ensure_region(key, op.nbytes)
+        try:
+            return self.nam.offload_parity(key, op.sources, op.nbytes)
+        except CapacityError:
+            raise
+        except MemoryError as e:
+            raise CapacityError(f"NAM pool full for {key!r}") from e
 
     # -- read ------------------------------------------------------------ #
 

@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api.session import ResilienceSession
 from repro.configs.base import ArchConfig
 from repro.core.scr import SCRManager
 from repro.models.registry import ModelApi
@@ -23,7 +24,10 @@ from repro.train.step import make_serve_step
 
 class ServeEngine:
     def __init__(self, cfg: ArchConfig, model: ModelApi, params: Any,
-                 batch: int, max_len: int, scr: Optional[SCRManager] = None):
+                 batch: int, max_len: int, scr=None):
+        """``scr`` is a :class:`ResilienceSession` (the user API) or —
+        compatibility shim — a raw :class:`SCRManager`, wrapped in an
+        engine-owned session; ``None`` disables checkpointing."""
         self.cfg = cfg
         self.model = model
         self.params = params
@@ -31,7 +35,14 @@ class ServeEngine:
         self.cache = model.init_cache(cfg, batch, max_len)
         self.pos = 0
         self.last: Optional[jax.Array] = None
-        self.scr = scr
+        if isinstance(scr, ResilienceSession):
+            self.session: Optional[ResilienceSession] = scr
+        elif scr is not None:
+            self.session = ResilienceSession(scr, own_engine=False)
+        else:
+            self.session = None
+        self.scr: Optional[SCRManager] = (
+            self.session.scr if self.session is not None else None)
         self._step = jax.jit(make_serve_step(cfg, model))
 
     @classmethod
@@ -49,13 +60,14 @@ class ServeEngine:
     ) -> "ServeEngine":
         """Serving engine whose checkpoint storage is composed via the
         TierStack router (BeeOND cache domain + optional NAM + global)
-        instead of hand-wired tiers — see memory/stack.py."""
+        instead of hand-wired tiers — see memory/stack.py.  The engine
+        owns the resulting :class:`ResilienceSession`."""
         from repro.core.scr import Strategy
 
         strategy = Strategy(strategy) if strategy is not None else Strategy.XOR
-        scr = SCRManager.for_cluster(cluster, strategy=strategy,
-                                     procs_per_node=procs_per_node, **scr_kw)
-        return cls(cfg, model, params, batch=batch, max_len=max_len, scr=scr)
+        session = ResilienceSession.for_cluster(
+            cluster, strategy=strategy, procs_per_node=procs_per_node, **scr_kw)
+        return cls(cfg, model, params, batch=batch, max_len=max_len, scr=session)
 
     def prefill(self, prompt: jax.Array) -> jax.Array:
         """Token-by-token prefill (tiny models; batched prefill uses
@@ -93,21 +105,28 @@ class ServeEngine:
         }
 
     def save(self):
-        """Checkpoint the serving state; with an async-drain SCRManager the
-        decode loop continues while the flush rides the drain executor.
-        Returns the CheckpointRecord (its ``ticket`` is the drain future)."""
-        assert self.scr is not None
-        return self.scr.save(self.pos, self.serving_state())
+        """Checkpoint the serving state through one session transaction;
+        with an async-drain engine the decode loop continues while the
+        flush rides the drain executor.  Returns the CheckpointRecord
+        (its ``ticket`` is the drain future)."""
+        assert self.session is not None
+        return self.session.save(self.pos, self.serving_state())
 
     def wait_drained(self, timeout=None) -> None:
         """Durability barrier over outstanding serving-state drains."""
-        assert self.scr is not None
-        self.scr.wait_drained(timeout=timeout)
+        assert self.session is not None
+        self.session.wait_drained(timeout=timeout)
 
     def restore(self) -> int:
-        assert self.scr is not None
-        state, step = self.scr.restore(self.serving_state())
+        assert self.session is not None
+        state, step = self.session.restore_latest(self.serving_state())
         self.cache = jax.tree_util.tree_map(jnp.asarray, state["cache"])
         self.last = jnp.asarray(state["last"])
         self.pos = int(state["pos"])
         return step
+
+    def close(self) -> None:
+        """Idempotent: close the engine-owned session (and its drain
+        threads); a caller-provided engine is left running."""
+        if self.session is not None:
+            self.session.close()

@@ -27,6 +27,8 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 import jax
 import numpy as np
 
+from repro.api.policy import CheckpointPolicy, IntervalPolicy
+from repro.api.session import ResilienceSession
 from repro.cluster.topology import NodeFailure, NodeState, VirtualCluster
 from repro.configs.base import ArchConfig
 from repro.core.scr import SCRManager, Strategy
@@ -68,21 +70,42 @@ class Trainer:
         cfg: ArchConfig,
         model: ModelApi,
         pipeline: TokenPipeline,
-        scr: SCRManager,
+        scr,
         opt_cfg: Optional[AdamWConfig] = None,
         mesh=None,
         ckpt_every: int = 10,
         micro_batches: int = 1,
         failure_schedule: Optional[List[FailureEvent]] = None,
         seed: int = 0,
+        policy: Optional[CheckpointPolicy] = None,
     ):
+        """``scr`` is a :class:`ResilienceSession` (the user API) or —
+        compatibility shim — a raw :class:`SCRManager`, which is wrapped
+        in a caller-owned session whose policy defaults to
+        ``IntervalPolicy(ckpt_every)`` (or ``policy`` when given).  A
+        session that carries an explicit policy keeps it — pass the
+        policy on the session, not here."""
         self.cfg = cfg
         self.model = model
         self.pipeline = pipeline
-        self.scr = scr
-        self.cluster: VirtualCluster = scr.cluster
+        if isinstance(scr, ResilienceSession):
+            if policy is not None:
+                raise ValueError("pass the checkpoint policy on the "
+                                 "ResilienceSession, not to the Trainer")
+            self.session = scr
+            if self.session.policy_is_default:
+                # a bare session would make every step checkpoint-eligible;
+                # in the trainer the session IS the gate, so install the
+                # trainer's cadence
+                self.session.policy = IntervalPolicy(ckpt_every)
+                self.session.policy_is_default = False
+        else:
+            self.session = ResilienceSession(
+                scr, policy=policy or IntervalPolicy(ckpt_every),
+                own_engine=False)
+        self.scr: SCRManager = self.session.scr   # the engine, for tests/ops
+        self.cluster: VirtualCluster = self.scr.cluster
         self.mesh = mesh
-        self.ckpt_every = ckpt_every
         self.seed = seed
         self.failures = {(e.step): e for e in (failure_schedule or [])}
         self.train_step = jax.jit(
@@ -100,24 +123,42 @@ class Trainer:
         strategy: Strategy = Strategy.BUDDY,
         procs_per_node: int = 2,
         scr_kw: Optional[Dict[str, Any]] = None,
+        policy: Optional[CheckpointPolicy] = None,
         **trainer_kw,
     ) -> "Trainer":
         """Build the storage side via the TierStack router: the BeeOND
         cache domain, (optional) NAM level, and global tier are composed
-        by policy instead of hand-wired tiers — see memory/stack.py."""
-        scr = SCRManager.for_cluster(cluster, strategy=strategy,
-                                     procs_per_node=procs_per_node,
-                                     **(scr_kw or {}))
-        return cls(cfg, model, pipeline, scr, **trainer_kw)
+        by policy instead of hand-wired tiers — see memory/stack.py.  The
+        resulting engine is wrapped in a trainer-owned
+        :class:`ResilienceSession` driven by ``policy`` (default:
+        ``IntervalPolicy(ckpt_every)``)."""
+        session = ResilienceSession.for_cluster(
+            cluster, strategy=strategy,
+            policy=policy or IntervalPolicy(trainer_kw.get("ckpt_every", 10)),
+            procs_per_node=procs_per_node, **(scr_kw or {}))
+        return cls(cfg, model, pipeline, session, **trainer_kw)
 
     # ------------------------------------------------------------------ #
+
+    def __enter__(self) -> "Trainer":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.close()
+        return False
+
+    def close(self) -> None:
+        """Idempotent: close the trainer's session — and, when the session
+        owns its engine (`for_cluster`), the drain-executor and
+        cache-domain threads with it."""
+        self.session.close()
 
     def _initial_state(self) -> Tuple[Dict[str, Any], int]:
         """Restore from the newest checkpoint if one exists, else init."""
         template = init_train_state(jax.random.PRNGKey(self.seed), self.cfg, self.model)
         try:
-            state, step = self.scr.restore(template)
-            meta = self._restore_meta(step)
+            state, step = self.session.restore_latest(template)
+            meta = self.session.checkpoint_meta(step)
             if meta and "pipeline" in meta:
                 self.pipeline.load_state(meta["pipeline"])
             else:
@@ -127,15 +168,13 @@ class Trainer:
         except IOError:
             return template, 0
 
-    def _restore_meta(self, step: int) -> Dict:
-        try:
-            return self.scr._descriptor(step)["manifest"].get("meta", {})
-        except Exception:
-            return {}
-
     def _checkpoint(self, step: int, state: Dict[str, Any]) -> None:
+        """One checkpoint transaction: every top-level entry of the train
+        state is routed under its own key, so the on-tier layout matches
+        checkpointing the state dict directly."""
         host_state = jax.device_get(state)
-        rec = self.scr.save(step, host_state, meta={"pipeline": self.pipeline.state()})
+        rec = self.session.save(step, host_state,
+                                meta={"pipeline": self.pipeline.state()})
         self.report.checkpoints += 1
         self.report.checkpoint_fg_s += rec.foreground_s
         self.report.checkpoint_bg_s += rec.background_s  # sync drains only
@@ -156,7 +195,7 @@ class Trainer:
                 ev = self.failures.pop(step, None)
                 if ev is not None:
                     self.cluster.fail(ev.rank, ev.kind)
-                    self.scr.invalidate_node(ev.rank)
+                    self.session.invalidate_node(ev.rank)
                     self.report.failures += 1
                     raise NodeFailure(ev.rank, ev.kind)
 
@@ -170,7 +209,7 @@ class Trainer:
                 step += 1
                 self.report.steps_run += 1
 
-                if step % self.ckpt_every == 0:
+                if self.session.need_checkpoint(step):
                     self._checkpoint(step, state)
             except NodeFailure as e:
                 recoveries += 1
@@ -178,16 +217,16 @@ class Trainer:
                     raise RuntimeError("recovery budget exhausted") from e
                 # replacement node comes up; redundancy rebuilds its data
                 self.cluster.recover(e.rank)
-                self.scr.invalidate_node(e.rank)
+                self.session.invalidate_node(e.rank)
                 state, step = self._recover()
                 self.report.recoveries += 1
         # final checkpoint so the run is resumable at exactly total_steps
-        if total_steps % self.ckpt_every != 0:
+        if self.session.last_checkpoint_step != total_steps:
             self._checkpoint(total_steps, state)
         # durability barrier: training steps overlap with drains, but the
         # run only ends once every checkpoint reached global storage
         t0 = time.perf_counter()
-        self.scr.wait_drained()
+        self.session.wait_drained()
         self.report.drain_wait_s = time.perf_counter() - t0
         self.report.checkpoint_bg_s += self.scr.drain_stats["modelled_bg_s"]
         self.report.drains_completed = int(self.scr.drain_stats["completed"])
@@ -196,13 +235,13 @@ class Trainer:
     def _recover(self) -> Tuple[Dict[str, Any], int]:
         template = init_train_state(jax.random.PRNGKey(self.seed), self.cfg, self.model)
         try:
-            state, step = self.scr.restore(template)
+            state, step = self.session.restore_latest(template)
         except IOError:
             # failed before the first checkpoint: restart from scratch
             self.pipeline.step = 0
             self.report.restarts_from_step.append(0)
             return template, 0
-        meta = self._restore_meta(step)
+        meta = self.session.checkpoint_meta(step)
         if meta and "pipeline" in meta:
             self.pipeline.load_state(meta["pipeline"])
         else:

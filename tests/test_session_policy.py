@@ -1,0 +1,439 @@
+"""ResilienceSession transactions + checkpoint policies (repro/api)."""
+
+import math
+import threading
+
+import numpy as np
+import pytest
+
+from repro.api.policy import (
+    DalyPolicy,
+    DrainAwarePolicy,
+    IntervalPolicy,
+    PolicyContext,
+)
+from repro.api.session import ResilienceSession
+from repro.cluster.topology import NodeState, VirtualCluster
+from repro.core import parity
+from repro.core.nam import NAMDevice
+from repro.core.scr import SCRManager, Strategy
+from repro.memory.stack import TierStack
+from repro.memory.store import NAMStore, OffloadOp
+from repro.memory.tiers import (
+    CapacityError,
+    MemoryHierarchy,
+    MemoryTier,
+    TierKind,
+    TierSpec,
+)
+
+STATE = {
+    "w": np.arange(4000, dtype=np.float32),
+    "step": np.int32(7),
+}
+TEMPLATE = {
+    "w": np.zeros(4000, np.float32),
+    "step": np.int32(0),
+}
+
+
+def make_session(tmp_path, strategy=Strategy.BUDDY, policy=None, **kw):
+    cl = VirtualCluster(4, 4, root=tmp_path / "run", xor_group_size=4)
+    hier = MemoryHierarchy(cl)
+    nam = NAMDevice(hier.nam_tier) if strategy == Strategy.NAM_XOR else None
+    scr = SCRManager(cl, hier, nam=nam, strategy=strategy, procs_per_node=2, **kw)
+    return cl, hier, ResilienceSession(scr, policy=policy)
+
+
+def step_artifacts(scr, step):
+    """Every key mentioning `step` across the stack and all node NVMs."""
+    tag = f"step{step:08d}"
+    found = [k for k in scr.stack.keys() if tag in k]
+    for rank in scr.cluster.up_ranks():
+        found += [k for k in scr.hierarchy.nvm(rank).keys() if tag in k]
+    if scr.nam is not None:
+        found += [k for k in scr.nam.tier.keys() if tag in k]
+    return found
+
+
+# --------------------------------------------------------------------- #
+# policy math
+# --------------------------------------------------------------------- #
+
+
+def test_interval_policy_modulo():
+    p = IntervalPolicy(3)
+    decisions = [p.should_checkpoint(PolicyContext(step=s)) for s in range(1, 7)]
+    assert decisions == [False, False, True, False, False, True]
+    assert not IntervalPolicy(0).should_checkpoint(PolicyContext(step=5))
+
+
+def test_daly_interval_matches_first_order_for_small_cost():
+    # delta << M: tau ~= sqrt(2*delta*M) - delta
+    delta, mtbf = 1.0, 10_000.0
+    tau = DalyPolicy(mtbf, checkpoint_cost_s=delta).optimal_interval_s()
+    first_order = math.sqrt(2 * delta * mtbf) - delta
+    assert abs(tau - first_order) / first_order < 0.05
+
+
+def test_daly_interval_scaling_and_saturation():
+    delta = 1.0
+    tau1 = DalyPolicy(10_000.0, checkpoint_cost_s=delta).optimal_interval_s()
+    tau4 = DalyPolicy(40_000.0, checkpoint_cost_s=delta).optimal_interval_s()
+    # sqrt scaling in MTBF (4x MTBF -> ~2x interval)
+    assert 1.85 < tau4 / tau1 < 2.15
+    # more expensive checkpoints -> longer interval
+    assert (DalyPolicy(10_000.0, checkpoint_cost_s=4.0).optimal_interval_s()
+            > tau1)
+    # degenerate regime: cost >= 2*MTBF -> checkpoint once per MTBF
+    assert DalyPolicy(10.0, checkpoint_cost_s=100.0).optimal_interval_s() == 10.0
+
+
+def test_daly_learns_measured_cost():
+    p = DalyPolicy(10_000.0, ema=1.0)   # no seed: bootstrap
+    assert p.should_checkpoint(PolicyContext(step=1, now_s=0.0))
+    p.observe_save(None, 4.0)
+    assert p.checkpoint_cost_s == 4.0
+    tau = p.optimal_interval_s()
+    assert abs(tau - DalyPolicy(10_000.0, checkpoint_cost_s=4.0)
+               .optimal_interval_s()) < 1e-9
+    # clock-driven decision: not yet due, then due
+    ctx = PolicyContext(step=2, now_s=100.0, last_checkpoint_wall_s=100.0 - tau / 2)
+    assert not p.should_checkpoint(ctx)
+    ctx = PolicyContext(step=3, now_s=100.0, last_checkpoint_wall_s=100.0 - 2 * tau)
+    assert p.should_checkpoint(ctx)
+
+
+def test_drain_aware_policy_defers_under_backlog():
+    inner = IntervalPolicy(1)
+    p = DrainAwarePolicy(inner, max_backlog=2)
+    busy = PolicyContext(step=5, drain_backlog=2, drain_depth=2)
+    idle = PolicyContext(step=5, drain_backlog=0, drain_depth=2)
+    assert not p.should_checkpoint(busy)
+    assert p.deferred == 1
+    assert p.should_checkpoint(idle)
+    # default threshold is the executor depth (backpressure point)
+    q = DrainAwarePolicy(inner)
+    assert not q.should_checkpoint(PolicyContext(step=5, drain_backlog=2, drain_depth=2))
+    assert q.should_checkpoint(PolicyContext(step=5, drain_backlog=1, drain_depth=2))
+
+
+# --------------------------------------------------------------------- #
+# session transactions
+# --------------------------------------------------------------------- #
+
+
+def test_session_commit_roundtrip(tmp_path):
+    cl, hier, session = make_session(tmp_path, policy=IntervalPolicy(2))
+    with session:
+        assert not session.need_checkpoint(1)
+        assert session.need_checkpoint(2)
+        session.start_checkpoint(2)
+        for k, v in STATE.items():
+            session.route(k, v)
+        rec = session.complete_checkpoint(meta={"tag": "x"})
+        assert rec.step == 2 and session.last_checkpoint_step == 2
+        restored, step = session.restore_latest(dict(TEMPLATE))
+        assert step == 2
+        assert np.asarray(restored["w"]).tobytes() == STATE["w"].tobytes()
+        assert session.checkpoint_meta(2) == {"tag": "x"}
+    assert session.closed
+
+
+def test_session_abort_leaves_no_fragments(tmp_path):
+    cl, hier, session = make_session(tmp_path, strategy=Strategy.NAM_XOR)
+    with session:
+        session.save(1, STATE)
+        session.start_checkpoint(2)
+        session.route("w", STATE["w"] + 1)
+        assert session.complete_checkpoint(valid=False) is None
+        assert session.stats["aborted"] == 1
+        # the aborted transaction is invisible in every tier
+        assert step_artifacts(session.scr, 2) == []
+        restored, step = session.restore_latest(dict(TEMPLATE))
+        assert step == 1
+        assert np.asarray(restored["w"]).tobytes() == STATE["w"].tobytes()
+
+
+def test_session_failed_commit_sweeps_partials(tmp_path, monkeypatch):
+    cl, hier, session = make_session(tmp_path, flush_every=1)
+    with session:
+        # the sync drain fails mid-commit, after the NVM foreground writes
+        monkeypatch.setattr(
+            session.scr, "_drain_to_global",
+            lambda *a, **kw: (_ for _ in ()).throw(IOError("pfs died")))
+        with pytest.raises(IOError):
+            session.save(3, STATE)
+        assert session.stats["aborted"] == 1
+        # no partial fragments in any tier, and nothing restorable
+        assert step_artifacts(session.scr, 3) == []
+        with pytest.raises(IOError):
+            session.restore_latest(dict(TEMPLATE))
+
+
+def test_session_checkpoint_scope_aborts_on_exception(tmp_path):
+    cl, hier, session = make_session(tmp_path)
+    with session:
+        with pytest.raises(ValueError):
+            with session.checkpoint(5):
+                session.route("w", STATE["w"])
+                raise ValueError("app blew up mid-transaction")
+        assert session.stats["aborted"] == 1
+        assert step_artifacts(session.scr, 5) == []
+        # the session is reusable after the abort
+        session.save(6, STATE)
+        assert session.available_steps() == [6]
+
+
+def test_checkpoint_scope_tolerates_manual_resolution(tmp_path):
+    cl, hier, session = make_session(tmp_path)
+    with session:
+        with session.checkpoint(4):
+            session.route("w", STATE["w"])
+            session.abort_checkpoint()      # body resolves the txn itself
+        assert session.stats["aborted"] == 1
+        assert session.available_steps() == []
+        with session.checkpoint(5):
+            session.route("w", STATE["w"])
+            session.complete_checkpoint()   # explicit commit inside the scope
+        assert session.stats["committed"] == 1
+        assert session.available_steps() == [5]
+
+
+def test_session_transaction_protocol_errors(tmp_path):
+    cl, hier, session = make_session(tmp_path)
+    with session:
+        with pytest.raises(RuntimeError):
+            session.route("w", STATE["w"])          # no open transaction
+        with pytest.raises(RuntimeError):
+            session.complete_checkpoint()           # no open transaction
+        session.start_checkpoint(1)
+        with pytest.raises(RuntimeError):
+            session.start_checkpoint(2)             # nested transaction
+        session.route("w", STATE["w"])
+        with pytest.raises(ValueError):
+            session.route("w", STATE["w"])          # duplicate key
+        session.complete_checkpoint()
+    with pytest.raises(RuntimeError):
+        session.start_checkpoint(9)                 # closed session
+
+
+def test_session_close_is_idempotent_and_stops_threads(tmp_path):
+    cl, hier, session = make_session(tmp_path, async_drain=True)
+    session.save(1, STATE)
+    session.wait_drained()
+    session.close()
+    session.close()     # idempotent
+    scr = session.scr
+    assert scr._executor._thread is None or not scr._executor._thread.is_alive()
+    assert scr.beeond._drainer is None
+    # the engine close is idempotent too (and usable as a context manager)
+    scr.close()
+    with pytest.raises(RuntimeError):
+        session.save(2, STATE)
+
+
+# --------------------------------------------------------------------- #
+# trainer-level policy wiring
+# --------------------------------------------------------------------- #
+
+
+def test_trainer_drives_checkpoints_through_policy(tmp_path):
+    from repro.configs import get_config
+    from repro.data.pipeline import TokenPipeline
+    from repro.models.registry import get_model
+    from repro.optim.adamw import AdamWConfig
+    from repro.train.trainer import Trainer
+
+    cfg = get_config("phi3-mini-3.8b").reduced()
+    model = get_model(cfg)
+    cluster = VirtualCluster(4, 0, root=tmp_path / "run")
+    pipeline = TokenPipeline(cfg.vocab_size, global_batch=4, seq_len=32)
+    trainer = Trainer.for_cluster(
+        cfg, model, pipeline, cluster,
+        opt_cfg=AdamWConfig(lr=1e-3, warmup_steps=2),
+        ckpt_every=3, policy=IntervalPolicy(3))
+    report = trainer.run(7)
+    # steps 3 and 6 by policy, 7 as the final resumability checkpoint
+    assert report.checkpoints == 3
+    assert trainer.session.stats["committed"] == 3
+    assert trainer.scr.available_steps()[-1] == 7
+    trainer.close()
+    trainer.close()   # idempotent
+
+
+def test_trainer_installs_cadence_on_bare_session(tmp_path):
+    """A session without an explicit policy must not checkpoint every
+    step: the trainer installs IntervalPolicy(ckpt_every) on it, while a
+    session carrying its own policy keeps it (and a conflicting trainer
+    policy= is rejected)."""
+    from repro.configs import get_config
+    from repro.data.pipeline import TokenPipeline
+    from repro.models.registry import get_model
+    from repro.train.trainer import Trainer
+
+    cfg = get_config("phi3-mini-3.8b").reduced()
+    model = get_model(cfg)
+    cl, hier, bare = make_session(tmp_path)
+    pipeline = TokenPipeline(cfg.vocab_size, global_batch=4, seq_len=32)
+    trainer = Trainer(cfg, model, pipeline, bare, ckpt_every=50)
+    assert isinstance(trainer.session.policy, IntervalPolicy)
+    assert trainer.session.policy.every == 50
+    cl2, hier2, owned = make_session(tmp_path / "b", policy=IntervalPolicy(7))
+    trainer2 = Trainer(cfg, model, pipeline, owned, ckpt_every=50)
+    assert trainer2.session.policy.every == 7
+    with pytest.raises(ValueError):
+        Trainer(cfg, model, pipeline, owned, policy=IntervalPolicy(3))
+    bare.close()
+    owned.close()
+
+
+# --------------------------------------------------------------------- #
+# TierStack.offload (NAM parity path)
+# --------------------------------------------------------------------- #
+
+
+def _two_level_stack(nam=None, cap=1 << 20, admission_fraction=None):
+    fast = MemoryTier(TierSpec(TierKind.DRAM, cap, 80e9, 80e9, 1e-7))
+    slow = MemoryTier(TierSpec(TierKind.GLOBAL, 1 << 30, 5e9, 5e9, 5e-4))
+    levels = [("cache", fast)]
+    if nam is not None:
+        levels.append(("nam", NAMStore(nam)))
+    levels.append(("global", slow))
+    return TierStack(levels, admission_fraction=admission_fraction), fast, slow
+
+
+def test_offload_routes_parity_to_nam_byte_identical(tmp_path):
+    rng = np.random.default_rng(0)
+    frags = [rng.integers(0, 256, 4096, dtype=np.uint8).tobytes() for _ in range(4)]
+    spec = TierSpec(TierKind.NAM, 1 << 20, 11.5e9, 11.5e9, 1.8e-6, shared=True)
+    nam = NAMDevice(MemoryTier(spec))
+    stack, fast, slow = _two_level_stack(nam=nam)
+    op = OffloadOp("xor_parity", sources=[lambda f=f: f for f in frags],
+                   nbytes=len(frags[0]))
+    t = stack.offload("nam_parity/step00000001/group000", op)
+    assert t > 0 and stack.stats["offloads"] == 1
+    got = stack.get("nam_parity/step00000001/group000")
+    # byte-identical with the old direct NAMDevice path
+    direct_nam = NAMDevice(MemoryTier(spec))
+    direct_nam.alloc("p", len(frags[0]))
+    direct_nam.offload_parity("p", [lambda f=f: f for f in frags], len(frags[0]))
+    assert got == direct_nam.get("p") == parity.encode_nam_parity(frags)
+    # it landed on the NAM level, not the cache or global level
+    assert nam.exists("nam_parity/step00000001/group000")
+    assert not fast.exists("nam_parity/step00000001/group000")
+    assert not slow.exists("nam_parity/step00000001/group000")
+
+
+def test_offload_host_fallback_without_capable_level():
+    rng = np.random.default_rng(1)
+    frags = [rng.integers(0, 256, 1024, dtype=np.uint8).tobytes() for _ in range(3)]
+    stack, fast, slow = _two_level_stack(nam=None)
+    op = OffloadOp("xor_parity", sources=[lambda f=f: f for f in frags],
+                   nbytes=len(frags[0]))
+    stack.offload("nam_parity/x", op)
+    assert stack.stats["offloads"] == 0    # host fallback, not an offload
+    assert stack.get("nam_parity/x") == parity.encode_nam_parity(frags)
+
+
+def test_offload_protects_current_step_parity():
+    """Pool pressure may evict an older step's parity but must never
+    sacrifice a region of the step being checkpointed — that would
+    silently degrade a save that reports success."""
+    spec = TierSpec(TierKind.NAM, 4096, 11.5e9, 11.5e9, 1.8e-6, shared=True)
+    nam = NAMDevice(MemoryTier(spec))     # pool fits exactly one region
+    stack, fast, slow = _two_level_stack(nam=nam)
+    frags = [bytes([i]) * 4096 for i in range(2)]
+    op = OffloadOp("xor_parity", sources=[lambda f=f: f for f in frags],
+                   nbytes=4096)
+    stack.offload("nam_parity/step00000001/group000", op,
+                  protect_prefix="nam_parity/step00000001")
+    with pytest.raises(CapacityError):
+        stack.offload("nam_parity/step00000001/group001", op,
+                      protect_prefix="nam_parity/step00000001")
+    assert nam.exists("nam_parity/step00000001/group000")   # survived
+    # a NEWER step's offload may evict the old step's parity
+    stack.offload("nam_parity/step00000002/group000", op,
+                  protect_prefix="nam_parity/step00000002")
+    assert nam.exists("nam_parity/step00000002/group000")
+    assert not nam.exists("nam_parity/step00000001/group000")
+
+
+def test_discard_sweeps_host_fallback_parity(tmp_path):
+    """Parity that fell back to the host path (stack without a nam level)
+    lands on lower stack levels — prune/discard must sweep it too."""
+    cl = VirtualCluster(4, 4, root=tmp_path / "run", xor_group_size=4)
+    hier = MemoryHierarchy(cl)
+    nam = NAMDevice(hier.nam_tier)
+    stack = TierStack.for_hierarchy(hier)   # deliberately no nam level
+    scr = SCRManager(cl, stack, nam=nam, strategy=Strategy.NAM_XOR,
+                     procs_per_node=2, flush_every=0, keep=1)
+    with ResilienceSession(scr) as session:
+        session.save(1, STATE)
+        assert any(k.startswith("nam_parity/step00000001")
+                   for k in scr.stack.keys())
+        session.save(2, STATE)   # keep=1: step 1 pruned, parity swept too
+        assert not any(k.startswith("nam_parity/step00000001")
+                       for k in scr.stack.keys())
+        scr.discard(2)
+        assert not any(k.startswith("nam_parity/") for k in scr.stack.keys())
+        assert step_artifacts(scr, 2) == []
+
+
+def test_nam_xor_save_restore_via_stack_offload(tmp_path):
+    """End-to-end: NAM_XOR redundancy reaches the NAM via TierStack.offload
+    and reconstruction after a node loss still round-trips."""
+    cl, hier, session = make_session(tmp_path, strategy=Strategy.NAM_XOR,
+                                     flush_every=0)
+    with session:
+        session.save(3, STATE)
+        scr = session.scr
+        assert scr.stack.stats["offloads"] == len(cl.xor_groups)
+        # parity bytes on the NAM match the host oracle for each group
+        for gid in range(len(cl.xor_groups)):
+            region = f"nam_parity/step{3:08d}/group{gid:03d}"
+            assert scr.nam.exists(region)
+        cl.fail(2, NodeState.FAILED_NODE)
+        cl.recover(2)
+        session.invalidate_node(2)
+        restored, step = session.restore_latest(dict(TEMPLATE))
+        assert step == 3
+        assert np.asarray(restored["w"]).tobytes() == STATE["w"].tobytes()
+
+
+# --------------------------------------------------------------------- #
+# TierStack admission control
+# --------------------------------------------------------------------- #
+
+
+def test_admission_control_routes_oversized_values():
+    stack, fast, slow = _two_level_stack(cap=1 << 20, admission_fraction=0.25)
+    small = b"s" * 1024
+    big = b"b" * (1 << 19)     # 50% of the fast level: refused there
+    stack.put("ckpt/step00000001/small.bin", small)
+    stack.put("ckpt/step00000001/big.bin", big)
+    assert fast.exists("ckpt/step00000001/small.bin")
+    assert not fast.exists("ckpt/step00000001/big.bin")
+    assert slow.exists("ckpt/step00000001/big.bin")
+    assert stack.stats["admission_routed"] == 1
+    # both readable through the stack; the oversized value is NOT
+    # promoted back into the cache level on read
+    assert stack.get("ckpt/step00000001/big.bin") == big
+    assert not fast.exists("ckpt/step00000001/big.bin")
+
+
+def test_admission_control_stream_size_hint():
+    stack, fast, slow = _two_level_stack(cap=1 << 20, admission_fraction=0.25)
+    chunks = [b"x" * 1024] * 512    # 512 KiB total
+    stack.put_stream("ckpt/step00000002/frag.bin", iter(chunks),
+                     size_hint=512 * 1024)
+    assert not fast.exists("ckpt/step00000002/frag.bin")
+    assert slow.exists("ckpt/step00000002/frag.bin")
+    assert stack.stats["admission_routed"] == 1
+
+
+def test_admission_fraction_validation():
+    with pytest.raises(ValueError):
+        _two_level_stack(admission_fraction=0.0)
+    with pytest.raises(ValueError):
+        _two_level_stack(admission_fraction=1.5)
