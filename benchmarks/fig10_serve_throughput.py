@@ -1,0 +1,233 @@
+"""Fig 10 (serving): multi-request decode throughput with tiered KV paging.
+
+The serving-side counterpart of the checkpoint benchmarks: many decode
+streams share a fixed set of lanes, and the KV working set is placed by
+the TierStack instead of a flat resident buffer (see serve/kvpage.py).
+Two configurations at EQUAL fast-tier capacity:
+
+  * unpaged — flat single-tier KV: a stream can only be made resident if
+    its whole lane cache fits in the fast tier, so oversubscription
+    degrades to head-of-line blocking (park failures, streams queue
+    un-resident until a slot drains);
+  * paged   — hbm > dram > global: parked lanes page down the hierarchy
+    under admission control, cold pages demote, reused pages earn
+    promotion back — every submitted stream is resident and round-robin
+    scheduling bounds tail latency.
+
+Reported: tokens/s, p50/p99 stream completion latency (in scheduler
+steps — deterministic), max resident-stream count, pager tier counters.
+The run also kills the paged scheduler mid-decode and restores it into a
+fresh instance via ``ResilienceSession.restore_latest``, asserting every
+stream's continuation is byte-identical — the end-to-end resiliency
+claim for the serving path.
+
+  PYTHONPATH=src python -m benchmarks.fig10_serve_throughput [--smoke]
+
+Emits ``BENCH_fig10_serve_throughput.json`` (uploaded as a CI artifact
+per PR, so the serving perf trajectory is tracked over time).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import tempfile
+import time
+from pathlib import Path
+from typing import Dict, List
+
+import jax
+import numpy as np
+
+from benchmarks.common import row
+from repro.api import ResilienceSession
+from repro.cluster.topology import VirtualCluster
+from repro.configs import get_config
+from repro.core.scr import Strategy
+from repro.io.serialization import serialize_state
+from repro.models.registry import get_model
+from repro.serve.kvpage import KVPager
+from repro.serve.scheduler import ServeScheduler
+
+OUT_JSON = Path("BENCH_fig10_serve_throughput.json")
+
+
+def _percentile(xs: List[int], q: float) -> float:
+    return float(np.percentile(np.asarray(xs, np.float64), q)) if xs else 0.0
+
+
+def _prompts(n_streams: int, vocab: int, max_len: int) -> List[List[int]]:
+    rng = np.random.default_rng(1234)
+    lo, hi = 3, max(4, min(10, max_len // 3))
+    return [rng.integers(0, vocab, size=int(rng.integers(lo, hi))).tolist()
+            for _ in range(n_streams)]
+
+
+def _run_config(cfg, model, params, prompts, *, slots, max_len, max_new,
+                quantum, fast_bytes, paged: bool, session=None) -> Dict:
+    pager = KVPager.for_capacity(fast_bytes=fast_bytes, paged=paged,
+                                 page_bytes=16 * 1024)
+    sched = ServeScheduler(cfg, model, params, slots=slots, max_len=max_len,
+                           pager=pager, session=session, quantum=quantum)
+    for p in prompts:
+        sched.submit(p, max_new=max_new)
+    t0 = time.perf_counter()
+    sched.run()
+    wall_s = time.perf_counter() - t0
+    lat = [sched.latency_steps(sid) for sid in sched.streams]
+    toks = sum(len(sched.output(sid)) for sid in sched.streams)
+    out = {
+        "paged": paged,
+        "streams": len(prompts),
+        "slots": slots,
+        "tokens": toks,
+        "wall_s": wall_s,
+        "tokens_per_s": toks / max(wall_s, 1e-9),
+        "steps": sched.stats["steps"],
+        "max_resident": sched.stats["max_resident"],
+        "park_failures": sched.stats["park_failures"],
+        "parked": sched.stats["parked"],
+        "p50_latency_steps": _percentile(lat, 50),
+        "p99_latency_steps": _percentile(lat, 99),
+        "tier_stats": {k: v for k, v in pager.stats().items() if v},
+        "outputs": {int(sid): sched.output(sid) for sid in sched.streams},
+    }
+    sched.close()
+    return out
+
+
+def _kill_restore_check(cfg, model, params, prompts, *, slots, max_len,
+                        max_new, quantum, fast_bytes,
+                        reference: Dict[int, List[int]]) -> int:
+    """Run the paged config under a ResilienceSession, kill it mid-decode,
+    restore into a FRESH scheduler, and require every stream's final
+    output to match the uninterrupted reference byte for byte."""
+    root = Path(tempfile.mkdtemp(prefix="deeper_fig10serve_"))
+    cluster = VirtualCluster(4, 0, root=root)
+    with ResilienceSession.for_cluster(cluster, strategy=Strategy.XOR,
+                                       procs_per_node=2) as session:
+        def make():
+            pager = KVPager.for_capacity(fast_bytes=fast_bytes, paged=True,
+                                         page_bytes=16 * 1024)
+            return ServeScheduler(cfg, model, params, slots=slots,
+                                  max_len=max_len, pager=pager,
+                                  session=session, quantum=quantum)
+
+        s1 = make()
+        for p in prompts:
+            s1.submit(p, max_new=max_new)
+        # decode partway — far enough that streams are parked mid-flight
+        s1.run(max_steps=max(4, (len(prompts) * max_new) // (2 * slots)))
+        s1.save()
+        restored_parked = len(s1.pager.parked_sids())
+        s1.close()     # the "kill": every lane cache and page is gone
+
+        s2 = make()
+        s2.restore()
+        s2.run()
+        for sid, want in reference.items():
+            got = s2.output(sid)
+            assert got == want, (
+                f"stream {sid} diverged after kill/restore: {got} != {want}")
+        s2.close()
+    cluster.teardown()
+    return restored_parked
+
+
+def bench(arch: str, n_streams: int, slots: int, max_len: int, max_new: int,
+          quantum: int, smoke: bool) -> Dict:
+    cfg = get_config(arch).reduced()
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0), cfg)
+    lane_bytes = serialize_state(
+        jax.device_get(model.init_cache(cfg, 1, max_len))).nbytes
+    # equal fast-tier budget for both configs: room for the active lanes
+    # plus two parked lanes — far below n_streams full caches
+    fast_bytes = (slots + 2) * lane_bytes
+    prompts = _prompts(n_streams, cfg.vocab_size, max_len)
+    kw = dict(slots=slots, max_len=max_len, max_new=max_new, quantum=quantum,
+              fast_bytes=fast_bytes)
+
+    unpaged = _run_config(cfg, model, params, prompts, paged=False, **kw)
+    paged = _run_config(cfg, model, params, prompts, paged=True, **kw)
+    restored_parked = _kill_restore_check(
+        cfg, model, params, prompts, reference=paged["outputs"], **kw)
+
+    assert paged["max_resident"] > unpaged["max_resident"], (
+        "paged KV must hold more resident streams than the flat fast tier: "
+        f"{paged['max_resident']} vs {unpaged['max_resident']}")
+    result = {
+        "bench": "fig10_serve_throughput",
+        "arch": cfg.name,
+        "smoke": smoke,
+        "streams": n_streams,
+        "slots": slots,
+        "max_len": max_len,
+        "max_new": max_new,
+        "quantum": quantum,
+        "lane_bytes": lane_bytes,
+        "fast_tier_bytes": fast_bytes,
+        "kill_restore_byte_identical": True,
+        "restored_parked_streams": restored_parked,
+        "unpaged": {k: v for k, v in unpaged.items() if k != "outputs"},
+        "paged": {k: v for k, v in paged.items() if k != "outputs"},
+    }
+    return result
+
+
+def run(smoke: bool = True):
+    """Harness entry (benchmarks/run.py CSV contract)."""
+    res = bench(arch="rwkv6-3b", n_streams=16 if smoke else 24, slots=4,
+                max_len=48, max_new=8 if smoke else 16, quantum=4, smoke=smoke)
+    OUT_JSON.write_text(json.dumps(res, indent=1))
+    up, pg = res["unpaged"], res["paged"]
+    return [
+        row("serve_unpaged",
+            up["wall_s"] * 1e6,
+            f"{up['tokens_per_s']:.0f} tok/s; max_resident={up['max_resident']}"
+            f"; p99={up['p99_latency_steps']:.0f} steps"
+            f"; park_failures={up['park_failures']}"),
+        row("serve_paged",
+            pg["wall_s"] * 1e6,
+            f"{pg['tokens_per_s']:.0f} tok/s; max_resident={pg['max_resident']}"
+            f"; p99={pg['p99_latency_steps']:.0f} steps"
+            f"; CLAIM paged resident {pg['max_resident']} > unpaged "
+            f"{up['max_resident']}: OK; kill/restore byte-identical: OK"),
+    ]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="rwkv6-3b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run (fewer/shorter streams)")
+    ap.add_argument("--streams", type=int, default=None)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=48)
+    ap.add_argument("--max-new", type=int, default=None)
+    ap.add_argument("--quantum", type=int, default=4)
+    args = ap.parse_args()
+    n_streams = args.streams or (16 if args.smoke else 24)
+    max_new = args.max_new or (8 if args.smoke else 16)
+    res = bench(arch=args.arch, n_streams=n_streams, slots=args.slots,
+                max_len=args.max_len, max_new=max_new, quantum=args.quantum,
+                smoke=args.smoke)
+    OUT_JSON.write_text(json.dumps(res, indent=1))
+    up, pg = res["unpaged"], res["paged"]
+    print(json.dumps({k: v for k, v in res.items()
+                      if k not in ("unpaged", "paged")}, indent=1))
+    for name, r in (("unpaged", up), ("paged", pg)):
+        print(f"{name:8s} {r['tokens_per_s']:8.0f} tok/s  "
+              f"max_resident={r['max_resident']:3d}  "
+              f"p50={r['p50_latency_steps']:.0f}  "
+              f"p99={r['p99_latency_steps']:.0f} steps  "
+              f"park_failures={r['park_failures']}")
+    print(f"OK: paged resident {pg['max_resident']} > unpaged "
+          f"{up['max_resident']} at equal fast tier "
+          f"({res['fast_tier_bytes']} B); mid-decode kill restored "
+          f"{res['restored_parked_streams']} parked streams byte-identically.")
+    print(f"wrote {OUT_JSON}")
+
+
+if __name__ == "__main__":
+    main()

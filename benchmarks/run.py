@@ -22,6 +22,7 @@ def modules():
         fig8_scr_overhead,
         fig9_xor_vs_namxor,
         fig10_task_resilience,
+        fig10_serve_throughput,
         roofline,
     )
 
@@ -34,6 +35,7 @@ def modules():
         "fig8": fig8_scr_overhead,
         "fig9": fig9_xor_vs_namxor,
         "fig10": fig10_task_resilience,
+        "fig10serve": fig10_serve_throughput,
         "roofline": roofline,
     }
 

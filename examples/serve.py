@@ -1,11 +1,14 @@
-"""Batched serving example: decode with a KV cache + serving-state CP.
+"""Multi-request serving example: continuous batching + tiered KV paging.
 
-Loads a (reduced) model, prefills a batch of prompts, decodes tokens with
-the jitted serve_step, checkpoints the serving state (params + KV cache +
-positions) through SCR mid-stream, kills a node, and resumes decoding
-from the checkpoint — byte-identical continuation tokens.
+Submits more decode streams than there are decode slots, lets the
+ServeScheduler round-robin them — parked streams page their KV caches
+through the TierStack (admission control + hit-rate promotion decide the
+tier) — checkpoints the full multi-stream state through an SCR-style
+session mid-decode, kills the scheduler AND a node, restores everything
+into a fresh scheduler, and verifies every stream's continuation is
+byte-identical to an uninterrupted run.
 
-  PYTHONPATH=src python examples/serve.py [--arch minicpm3-4b]
+  PYTHONPATH=src python examples/serve.py [--arch minicpm3-4b] [--steps 8]
 """
 
 import argparse
@@ -13,87 +16,88 @@ import tempfile
 from pathlib import Path
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.api import ResilienceSession
 from repro.cluster.topology import VirtualCluster
 from repro.configs import get_config
 from repro.core.scr import Strategy
+from repro.io.serialization import serialize_state
 from repro.models.registry import get_model
-from repro.train.step import make_serve_step
+from repro.serve import KVPager, ServeScheduler
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="minicpm3-4b")
-    ap.add_argument("--tokens", type=int, default=24)
+    ap.add_argument("--steps", type=int, default=8,
+                    help="decode steps before the mid-stream checkpoint/kill")
+    ap.add_argument("--streams", type=int, default=6)
+    ap.add_argument("--slots", type=int, default=2)
+    ap.add_argument("--max-new", type=int, default=6)
     args = ap.parse_args()
 
     cfg = get_config(args.arch).reduced()
     model = get_model(cfg)
-    batch, max_len = 4, 64
-
     params = model.init(jax.random.PRNGKey(0), cfg)
-    cache = model.init_cache(cfg, batch, max_len)
-    serve_step = jax.jit(make_serve_step(cfg, model))
+    max_len = 32
 
-    # prefill a short prompt token-by-token (tiny model: keep it simple)
-    prompt = jax.random.randint(jax.random.PRNGKey(1), (batch, 8), 0,
-                                cfg.vocab_size, jnp.int32)
-    toks = prompt[:, 0]
-    for pos in range(8):
-        nxt, cache = serve_step(params, cache, prompt[:, pos], jnp.int32(pos))
-    generated = [np.asarray(nxt)]
+    # the KV stack: a fast tier that holds only a few lane caches, so
+    # oversubscription forces parked streams down the hierarchy
+    lane_bytes = serialize_state(
+        jax.device_get(model.init_cache(cfg, 1, max_len))).nbytes
 
-    # decode half the stream, checkpoint the serving state, decode the rest
-    half = args.tokens // 2
-    pos = 8
-    for _ in range(half):
-        nxt, cache = serve_step(params, cache, nxt, jnp.int32(pos))
-        generated.append(np.asarray(nxt))
-        pos += 1
+    def make_scheduler(session):
+        pager = KVPager.for_capacity(fast_bytes=(args.slots + 1) * lane_bytes,
+                                     page_bytes=8 * 1024)
+        return ServeScheduler(cfg, model, params, slots=args.slots,
+                              max_len=max_len, pager=pager, session=session,
+                              quantum=3)
+
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(0, cfg.vocab_size, size=int(rng.integers(3, 8)))
+               for _ in range(args.streams)]
+
+    # reference: the same workload decoded with no interruption
+    ref_sched = make_scheduler(session=None)
+    for p in prompts:
+        ref_sched.submit(p, max_new=args.max_new)
+    ref_sched.run()
+    ref = {sid: ref_sched.output(sid) for sid in ref_sched.streams}
+    ref_stats = dict(ref_sched.stats)
+    ref_sched.close()
 
     root = Path(tempfile.mkdtemp(prefix="deeper_serve_"))
     cluster = VirtualCluster(4, 4, root=root)
-    # the SCR-style session API: one transaction per checkpoint — start,
-    # route each named part of the serving state, complete (commit)
     with ResilienceSession.for_cluster(cluster, strategy=Strategy.XOR,
                                        procs_per_node=2) as session:
-        serving_state = {"cache": jax.device_get(cache), "last": np.asarray(nxt),
-                         "pos": np.int32(pos)}
-        session.start_checkpoint(pos)
-        for name, part in serving_state.items():
-            session.route(name, part)
-        session.complete_checkpoint()
+        sched = make_scheduler(session)
+        for p in prompts:
+            sched.submit(p, max_new=args.max_new)
+        sched.run(max_steps=args.steps)     # decode partway...
+        sched.save()                        # ...one transaction saves it all
+        parked = len(sched.pager.parked_sids())
+        sched.close()                       # the "kill": all state gone
 
-        # continue to the end (reference stream)
-        ref = []
-        nxt_ref, cache_ref, p = nxt, cache, pos
-        for _ in range(args.tokens - half):
-            nxt_ref, cache_ref = serve_step(params, cache_ref, nxt_ref, jnp.int32(p))
-            ref.append(np.asarray(nxt_ref))
-            p += 1
-
-        # node dies; restore serving state and replay the remainder
+        # a node dies too; XOR reconstruction covers the lost fragments
         cluster.fail(1)
         cluster.recover(1)
         session.invalidate_node(1)
-        restored, _ = session.restore_latest(serving_state)
-        nxt2 = jnp.asarray(restored["last"])
-        cache2 = jax.tree_util.tree_map(jnp.asarray, restored["cache"])
-        p2 = int(restored["pos"])
-        out = []
-        for _ in range(args.tokens - half):
-            nxt2, cache2 = serve_step(params, cache2, nxt2, jnp.int32(p2))
-            out.append(np.asarray(nxt2))
-            p2 += 1
 
-    assert all(np.array_equal(a, b) for a, b in zip(ref, out)), \
-        "post-restore decode diverged"
-    print(f"decoded {args.tokens} tokens/seq x {batch} seqs on {cfg.name}")
-    print("OK: serving state survived a node loss (XOR reconstruction); "
-          "resumed stream is byte-identical.")
+        sched2 = make_scheduler(session)    # fresh process stand-in
+        sched2.restore()                    # stream set comes from the ckpt
+        sched2.run()
+        out = {sid: sched2.output(sid) for sid in sched2.streams}
+        sched2.close()
+
+    assert out == ref, "post-restore decode diverged"
+    total = sum(len(v) for v in out.values())
+    print(f"decoded {total} tokens across {args.streams} streams on "
+          f"{cfg.name} ({args.slots} slots, quantum 3): "
+          f"{ref_stats['parked']} parks, {ref_stats['resumed']} resumes, "
+          f"max {ref_stats['max_resident']} resident")
+    print(f"OK: killed mid-decode with {parked} streams parked + a node "
+          f"loss; restored scheduler finished every stream byte-identically.")
     cluster.teardown()
 
 

@@ -4,6 +4,7 @@ from repro.api.policy import (
     CheckpointPolicy,
     DalyPolicy,
     DrainAwarePolicy,
+    FailureHistoryPolicy,
     IntervalPolicy,
     PolicyContext,
 )
@@ -13,6 +14,7 @@ __all__ = [
     "CheckpointPolicy",
     "DalyPolicy",
     "DrainAwarePolicy",
+    "FailureHistoryPolicy",
     "IntervalPolicy",
     "PolicyContext",
     "ResilienceSession",

@@ -17,6 +17,9 @@ decision is a pluggable policy consulted by
   while the async drain queue is backed up: piling a new checkpoint onto
   a saturated drain executor only converts background time into
   foreground backpressure.
+* :class:`FailureHistoryPolicy` — learns the MTBF online from an EMA of
+  observed inter-failure gaps and adapts both the Daly cadence and the
+  engine's ``keep``/``flush_every`` retention knobs to it.
 
 Policies are consulted with a :class:`PolicyContext` snapshot assembled
 by the session (step counters, wall clocks, measured costs, drain
@@ -28,7 +31,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Optional
+from typing import Dict, Optional
 
 
 @dataclasses.dataclass
@@ -56,6 +59,18 @@ class CheckpointPolicy:
         """Called after each committed checkpoint with its
         :class:`~repro.core.scr.CheckpointRecord` and the measured wall
         seconds the save spent on the caller's thread."""
+
+    def observe_failure(self, wall_s: float) -> None:
+        """Called by the session when the application reports a node
+        failure (``ResilienceSession.invalidate_node``) with the
+        ``time.monotonic`` timestamp — adaptive policies learn the
+        failure rate from the gaps between these calls."""
+
+    def engine_hints(self) -> Optional[Dict[str, int]]:
+        """Optional engine-knob overrides (``keep`` / ``flush_every``)
+        the session applies to its SCRManager after each decision point.
+        ``None`` (the default) leaves the engine untouched."""
+        return None
 
 
 class IntervalPolicy(CheckpointPolicy):
@@ -180,5 +195,124 @@ class DrainAwarePolicy(CheckpointPolicy):
     def observe_save(self, record, wall_s: float) -> None:
         self.inner.observe_save(record, wall_s)
 
+    def observe_failure(self, wall_s: float) -> None:
+        self.inner.observe_failure(wall_s)
+
+    def engine_hints(self) -> Optional[Dict[str, int]]:
+        return self.inner.engine_hints()
+
     def __repr__(self) -> str:
         return f"DrainAwarePolicy({self.inner!r}, max_backlog={self.max_backlog})"
+
+
+class FailureHistoryPolicy(CheckpointPolicy):
+    """Failure-history-adaptive policy (the ROADMAP's adaptive-cadence
+    follow-up): learn the platform MTBF online and adjust both *when* to
+    checkpoint and *how the engine retains/flushes* checkpoints.
+
+    Every ``ResilienceSession.invalidate_node`` call reports one observed
+    failure; the policy keeps an EMA over the gaps between them — an
+    online MTBF estimate seeded by ``mtbf_s`` — and
+
+    * **cadence**: delegates to an internal :class:`DalyPolicy` whose
+      MTBF tracks the live estimate, so the Daly-optimal interval
+      tightens as failures cluster and relaxes as they thin out;
+    * **retention** (``keep``): frequent failures retain more checkpoint
+      steps (up to ``max_keep`` — a recovery that itself fails can fall
+      back further), rare failures retain fewer (down to ``min_keep`` —
+      less multi-level storage pinned);
+    * **drain cadence** (``flush_every``): frequent failures drain every
+      save to global storage (``flush_every=1`` — node-local copies are
+      likely to be needed *and* likely to be lost), rare failures batch
+      drains (up to ``max_flush_every`` — the global tier sees 1/N of
+      the traffic).
+
+    The knob values interpolate log-linearly between ``tight_mtbf_s``
+    (full paranoia) and ``loose_mtbf_s`` (full relaxation) and are
+    surfaced via :meth:`engine_hints`; the session applies them to its
+    ``SCRManager`` at each decision point.  Selectable from the launcher
+    via ``--policy failure-history``.
+    """
+
+    def __init__(
+        self,
+        mtbf_s: float = 3600.0,
+        checkpoint_cost_s: Optional[float] = None,
+        ema: float = 0.4,
+        min_keep: int = 2,
+        max_keep: int = 8,
+        max_flush_every: int = 4,
+        tight_mtbf_s: float = 60.0,
+        loose_mtbf_s: float = 86400.0,
+        min_gap_s: float = 1.0,
+    ):
+        if mtbf_s <= 0:
+            raise ValueError("MTBF seed must be positive")
+        if not 0.0 < ema <= 1.0:
+            raise ValueError("ema weight must be in (0, 1]")
+        if not 1 <= min_keep <= max_keep:
+            raise ValueError("need 1 <= min_keep <= max_keep")
+        if max_flush_every < 1:
+            raise ValueError("max_flush_every must be >= 1")
+        if not 0 < tight_mtbf_s < loose_mtbf_s:
+            raise ValueError("need 0 < tight_mtbf_s < loose_mtbf_s")
+        if min_gap_s < 0:
+            raise ValueError("min_gap_s must be >= 0")
+        self.ema = float(ema)
+        self.min_keep, self.max_keep = int(min_keep), int(max_keep)
+        self.max_flush_every = int(max_flush_every)
+        self.tight_mtbf_s, self.loose_mtbf_s = float(tight_mtbf_s), float(loose_mtbf_s)
+        self.min_gap_s = float(min_gap_s)
+        self.mtbf_estimate_s = float(mtbf_s)
+        self.failures_observed = 0
+        self._last_failure_wall: Optional[float] = None
+        self._daly = DalyPolicy(mtbf_s, checkpoint_cost_s=checkpoint_cost_s)
+
+    # -- learning ---------------------------------------------------------- #
+
+    def observe_failure(self, wall_s: float) -> None:
+        """Record one failure report.  Reports closer than ``min_gap_s``
+        to the last counted one are duplicate sightings of the *same*
+        incident (the trainer invalidates a node both when the failure
+        fires and again after recovery) and are ignored — otherwise every
+        incident would feed a near-zero gap into the EMA and collapse the
+        MTBF estimate regardless of the true failure rate."""
+        if self._last_failure_wall is not None:
+            gap = float(wall_s) - self._last_failure_wall
+            if gap < self.min_gap_s:
+                return
+            self.mtbf_estimate_s = (
+                (1 - self.ema) * self.mtbf_estimate_s + self.ema * max(gap, 1e-3))
+        self._last_failure_wall = float(wall_s)
+        self.failures_observed += 1
+        self._daly.mtbf_s = self.mtbf_estimate_s
+
+    def observe_save(self, record, wall_s: float) -> None:
+        self._daly.observe_save(record, wall_s)
+
+    # -- decisions ---------------------------------------------------------- #
+
+    def should_checkpoint(self, ctx: PolicyContext) -> bool:
+        return self._daly.should_checkpoint(ctx)
+
+    def optimal_interval_s(self) -> float:
+        return self._daly.optimal_interval_s()
+
+    def _relaxation(self) -> float:
+        """0.0 = failures at/below tight_mtbf_s (paranoid), 1.0 = at/above
+        loose_mtbf_s (relaxed); log-linear in between."""
+        m = min(max(self.mtbf_estimate_s, self.tight_mtbf_s), self.loose_mtbf_s)
+        return (math.log(m) - math.log(self.tight_mtbf_s)) / (
+            math.log(self.loose_mtbf_s) - math.log(self.tight_mtbf_s))
+
+    def engine_hints(self) -> Dict[str, int]:
+        t = self._relaxation()
+        keep = int(round(self.max_keep + t * (self.min_keep - self.max_keep)))
+        flush_every = int(round(1 + t * (self.max_flush_every - 1)))
+        return {"keep": keep, "flush_every": flush_every}
+
+    def __repr__(self) -> str:
+        h = self.engine_hints()
+        return (f"FailureHistoryPolicy(mtbf_est_s={self.mtbf_estimate_s:.3g}, "
+                f"failures={self.failures_observed}, keep={h['keep']}, "
+                f"flush_every={h['flush_every']})")

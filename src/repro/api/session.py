@@ -156,7 +156,19 @@ class ResilienceSession:
         want = self.policy.should_checkpoint(ctx)
         if not want:
             self.stats["declined"] += 1
+        self._apply_engine_hints()
         return want
+
+    def _apply_engine_hints(self) -> None:
+        """Adaptive policies (FailureHistoryPolicy) may steer the
+        engine's retention knobs; applied at each decision point."""
+        hints = self.policy.engine_hints()
+        if not hints:
+            return
+        if "keep" in hints:
+            self.scr.keep = int(hints["keep"])
+        if "flush_every" in hints:
+            self.scr.flush_every = int(hints["flush_every"])
 
     def start_checkpoint(self, step: int) -> None:
         """SCR_Start_checkpt: open a transaction for ``step``."""
@@ -285,8 +297,15 @@ class ResilienceSession:
         self.scr.wait_drained(step=step, timeout=timeout)
 
     def invalidate_node(self, rank: int) -> None:
-        """Drop cached per-node tier handles after a failure/recovery."""
+        """Drop cached per-node tier handles after a failure/recovery.
+
+        Also the session's failure-observation point: adaptive policies
+        (:class:`~repro.api.policy.FailureHistoryPolicy`) learn the
+        failure rate from these calls and may retune the engine's
+        ``keep``/``flush_every`` knobs in response."""
         self.scr.invalidate_node(rank)
+        self.policy.observe_failure(time.monotonic())
+        self._apply_engine_hints()
 
     def available_steps(self):
         return self.scr.available_steps()

@@ -194,6 +194,19 @@ class CacheFS:
                 pass
         return data
 
+    def fill(self, key: str, data: bytes) -> bool:
+        """Establish a *clean* local copy of an already-durable value — a
+        cache fill, not a write: no drain is enqueued (the global copy is
+        the source).  Best-effort: a full local tier refuses (False).  The
+        TierStack routes read-promotion through this instead of ``get``'s
+        implicit fill so the fill obeys the same admission control as any
+        other write into the level."""
+        try:
+            self.local.put(key, data)
+            return True
+        except CapacityError:
+            return False
+
     def exists(self, key: str) -> bool:
         return self.local.exists(key) or self.global_tier.exists(key)
 

@@ -14,7 +14,12 @@ from pathlib import Path
 
 import jax
 
-from repro.api.policy import DalyPolicy, DrainAwarePolicy, IntervalPolicy
+from repro.api.policy import (
+    DalyPolicy,
+    DrainAwarePolicy,
+    FailureHistoryPolicy,
+    IntervalPolicy,
+)
 from repro.api.session import ResilienceSession
 from repro.cluster.topology import NodeState, VirtualCluster
 from repro.configs import get_config
@@ -41,6 +46,13 @@ def main():
                     help="use the Daly-optimal checkpoint policy for this "
                          "MTBF (wrapped drain-aware) instead of a fixed "
                          "--ckpt-every interval")
+    ap.add_argument("--policy", default="auto",
+                    choices=["auto", "interval", "daly", "failure-history"],
+                    help="checkpoint cadence policy; 'auto' keeps the "
+                         "legacy selection (--mtbf-s => daly, else "
+                         "interval); 'failure-history' adapts cadence AND "
+                         "the engine's keep/flush_every knobs to the "
+                         "observed failure rate (seeded by --mtbf-s)")
     ap.add_argument("--n-cluster", type=int, default=4)
     ap.add_argument("--n-booster", type=int, default=4)
     ap.add_argument("--fail-at", type=int, default=None,
@@ -61,8 +73,14 @@ def main():
     # session whose storage side is composed by the TierStack router
     # (BeeOND cache domain + optional NAM level + global tier) and whose
     # cadence is a pluggable policy instead of a hard-coded modulo
-    if args.mtbf_s is not None:
-        policy = DrainAwarePolicy(DalyPolicy(args.mtbf_s))
+    choice = args.policy
+    if choice == "auto":
+        choice = "daly" if args.mtbf_s is not None else "interval"
+    mtbf_s = args.mtbf_s if args.mtbf_s is not None else 3600.0
+    if choice == "failure-history":
+        policy = DrainAwarePolicy(FailureHistoryPolicy(mtbf_s=mtbf_s))
+    elif choice == "daly":
+        policy = DrainAwarePolicy(DalyPolicy(mtbf_s))
     else:
         policy = IntervalPolicy(args.ckpt_every)
     session = ResilienceSession.for_cluster(

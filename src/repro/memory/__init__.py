@@ -10,6 +10,7 @@ from repro.memory.tiers import (
 )
 from repro.memory.store import BufferStore, NAMStore
 from repro.memory.stack import (
+    HitRatePromotion,
     KeyClass,
     PlacementRule,
     TierStack,
@@ -27,6 +28,7 @@ __all__ = [
     "TPU_V5E_TIERS",
     "BufferStore",
     "NAMStore",
+    "HitRatePromotion",
     "KeyClass",
     "PlacementRule",
     "TierStack",

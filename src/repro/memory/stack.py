@@ -15,9 +15,11 @@ data lands and when it moves.  ``TierStack`` pins that down:
   recently-used *clean* entries (or demotes dirty ones) and retries, then
   spills to the next level — instead of a hard ``CapacityError`` on the
   hot path;
-* read-through with promotion: a get walks the levels from the key's
-  home downward and (policy permitting) re-establishes the value at its
-  home level;
+* read-through with hit-rate-driven promotion: a get walks the levels
+  from the key's home downward and re-establishes the value at its home
+  level once it has earned >= k hits inside a sliding access window
+  (:class:`HitRatePromotion`; k=1 keeps the classic promote-on-read) —
+  with per-level hit/miss counters in :meth:`TierStack.stats`;
 * admission control (``admission_fraction``): a value larger than that
   fraction of a level's capacity is never cached there — it routes
   straight to the next level of its chain, so one oversized stream
@@ -51,13 +53,17 @@ class KeyClass(enum.Enum):
     FRAGMENT = "fragment"       # bulk checkpoint fragments
     CONTAINER = "container"     # SION aggregated containers
     PARITY = "parity"           # XOR / NAM parity blocks
+    KV = "kv"                   # serving KV-cache pages (serve/kvpage.py)
     OTHER = "other"
 
 
 def classify_key(key: str) -> KeyClass:
-    """Map a storage key to its placement class (see core/scr.py key layout)."""
+    """Map a storage key to its placement class (see core/scr.py key layout
+    and serve/kvpage.py for the ``kv/`` namespace)."""
     if key.startswith("scr/desc/"):
         return KeyClass.DESCRIPTOR
+    if key.startswith("kv/"):
+        return KeyClass.KV
     base = key.rsplit("/", 1)[-1]
     if key.startswith("nam_parity/") or "parity" in base:
         return KeyClass.PARITY
@@ -86,8 +92,48 @@ DEFAULT_POLICY: Dict[KeyClass, PlacementRule] = {
     KeyClass.CONTAINER: PlacementRule(),
     # parity is redundancy data: prefers the NAM (off the failure domain)
     KeyClass.PARITY: PlacementRule(level="nam", promote=False),
+    # serving KV pages: hot at the fastest level, cold pages spill down
+    KeyClass.KV: PlacementRule(),
     KeyClass.OTHER: PlacementRule(),
 }
+
+
+@dataclasses.dataclass(frozen=True)
+class HitRatePromotion:
+    """Hit-rate-driven promotion: a below-home hit re-establishes the key
+    at its home level only once the key has accumulated ``k`` hits within
+    the last ``window`` stack accesses (a sliding window over the stack's
+    global access counter).
+
+    ``k=1`` promotes on the first hit — the classic read-promotion, and
+    the default so checkpoint-restore reads (each fragment read exactly
+    once) keep promoting.  The serving KV path installs ``k >= 2`` so
+    one-shot resume reads never wipe the fast tier's working set: only
+    keys with genuine reuse inside the window earn promotion (DEEP-ER
+    §II-B as *policy*: placement follows the access pattern, not the
+    last access).
+
+    The same hit log drives eviction order: under capacity pressure,
+    blocks with no hit inside the window (cold) are demoted before warm
+    ones, regardless of raw LRU recency.
+    """
+
+    k: int = 1
+    window: int = 64
+
+    def __post_init__(self):
+        if self.k < 1:
+            raise ValueError("promotion threshold k must be >= 1")
+        if self.window < 1:
+            raise ValueError("promotion window must be >= 1")
+
+
+class _Stats(dict):
+    """Counter map that is also callable: ``stack.stats["hits_x"]`` for
+    one counter, ``stack.stats()`` for an immutable snapshot."""
+
+    def __call__(self) -> Dict[str, int]:
+        return dict(self)
 
 
 class _ReplayableChunks:
@@ -130,6 +176,7 @@ class TierStack:
         policy: Optional[Dict[KeyClass, PlacementRule]] = None,
         hierarchy: Optional[MemoryHierarchy] = None,
         admission_fraction: Optional[float] = None,
+        promotion: Optional[HitRatePromotion] = None,
     ):
         if not levels:
             raise ValueError("TierStack needs at least one level")
@@ -147,6 +194,9 @@ class TierStack:
         # the next level of its placement chain (the terminal level
         # always admits).  None disables the check.
         self.admission_fraction = admission_fraction
+        # hit-rate-driven promotion: the default (k=1) promotes on the
+        # first below-home hit; see :class:`HitRatePromotion`
+        self.promotion = promotion if promotion is not None else HitRatePromotion()
         self.beeond = None       # set by for_hierarchy when a cache domain exists
         self.nam_device = None   # set by for_hierarchy when a NAM level exists
         self._lock = threading.RLock()
@@ -156,11 +206,17 @@ class TierStack:
         # a rewrite at this level clears the mark — eviction must never
         # treat a merely-existing lower copy as backing for newer data
         self._clean: Dict[str, set] = {n: set() for n in names}
-        self.stats: Dict[str, int] = {
+        # sliding-window hit log: key -> ticks of recent read hits, one
+        # tick per get(); drives promotion (>= k hits) and eviction order
+        # (no hit in the window = cold, demoted first)
+        self._tick = 0
+        self._hit_log: Dict[str, List[int]] = {}
+        self.stats = _Stats({
             "evictions": 0, "promotions": 0, "spills": 0,
             "admission_routed": 0, "offloads": 0,
             **{f"hits_{n}": 0 for n in names},
-        }
+            **{f"misses_{n}": 0 for n in names},
+        })
 
     # -- construction ---------------------------------------------------- #
 
@@ -174,6 +230,7 @@ class TierStack:
         max_pending: Optional[int] = None,
         policy: Optional[Dict[KeyClass, PlacementRule]] = None,
         admission_fraction: Optional[float] = None,
+        promotion: Optional[HitRatePromotion] = None,
     ) -> "TierStack":
         """The canonical DEEP-ER stack over a MemoryHierarchy:
 
@@ -199,7 +256,7 @@ class TierStack:
             levels.append(("nam", NAMStore(nam)))
         levels.append(("global", hierarchy.global_tier))
         stack = cls(levels, policy=policy, hierarchy=hierarchy,
-                    admission_fraction=admission_fraction)
+                    admission_fraction=admission_fraction, promotion=promotion)
         stack.beeond = beeond
         stack.nam_device = nam
         return stack
@@ -268,6 +325,29 @@ class TierStack:
             name = self.levels[idx][0]
             self._lru[name].pop(key, None)
             self._clean[name].discard(key)
+
+    # -- hit-rate bookkeeping ---------------------------------------------- #
+
+    def _record_hit(self, key: str, tick: int) -> bool:
+        """Log one read hit; True when the key is *hot* — at least
+        ``promotion.k`` hits inside the sliding window — i.e. eligible for
+        promotion back to its home level."""
+        with self._lock:
+            log = self._hit_log.setdefault(key, [])
+            log.append(tick)
+            cutoff = tick - self.promotion.window
+            while log and log[0] <= cutoff:
+                log.pop(0)
+            return len(log) >= self.promotion.k
+
+    def _window_hits(self, key: str) -> int:
+        """Hits of ``key`` inside the current sliding window (0 = cold)."""
+        with self._lock:
+            log = self._hit_log.get(key)
+            if not log:
+                return 0
+            cutoff = self._tick - self.promotion.window
+            return sum(1 for t in log if t > cutoff)
 
     # -- write path -------------------------------------------------------- #
 
@@ -355,13 +435,17 @@ class TierStack:
 
     def _evict_one(self, idx: int, protect: str,
                    protect_prefix: Optional[str] = None) -> bool:
-        """Free space on one level: LRU-first, clean entries dropped, dirty
-        evictable entries demoted a level.  ``protect`` (and every key
-        under ``protect_prefix``) is never a candidate.  True if anything
-        was freed."""
+        """Free space on one level: cold-first (no hit inside the
+        promotion window), then LRU within equal hotness; clean entries
+        dropped, dirty evictable entries demoted a level.  ``protect``
+        (and every key under ``protect_prefix``) is never a candidate.
+        True if anything was freed."""
         name, store = self.levels[idx]
         with self._lock:
             candidates = [k for k in self._lru[name] if k != protect]
+        # cold blocks demote first: order by window hit count, the stable
+        # sort keeping LRU order among equally-warm keys
+        candidates.sort(key=self._window_hits)
         seen = set(candidates)
         # keys written around the stack (directly into the store) are
         # eviction candidates too, after everything the stack tracked
@@ -411,40 +495,64 @@ class TierStack:
     def get(self, key: str, streams: int = 1, promote: Optional[bool] = None) -> bytes:
         """Read through the stack from the key's home level downward.
 
-        A hit below home is promoted back to the home level (best-effort:
-        promotion that cannot make room is skipped, never an error) when
-        the policy — or the explicit ``promote`` argument — says so.
+        A hit below home is promoted back to the home level when the
+        placement rule allows it AND the key is *hot* per the
+        :class:`HitRatePromotion` policy (>= k hits in the sliding
+        window); an explicit ``promote=True`` forces promotion, bypassing
+        the hit-rate gate.  Promotion is best-effort (no room = skipped,
+        never an error) and always routed through the same admission
+        check as any other write into the level — including the
+        read-through fill of a cache-domain level, so one oversized cold
+        value can never wipe a fast level's working set on a read.
         """
         rule = self.rule_for(key)
         start = self._home_idx(rule)
         do_promote = rule.promote if promote is None else promote
+        # an explicit promote=False read is a pure observer (checkpoint /
+        # drain traffic): it neither logs a hit nor ages the window
+        observer = promote is False
+        with self._lock:
+            if not observer:
+                self._tick += 1
+            tick = self._tick
         for i in range(start, len(self.levels)):
             name, store = self.levels[i]
             if not store.exists(key):
+                with self._lock:
+                    self.stats[f"misses_{name}"] += 1
                 continue
             # a read-through level (CacheFS) answers exists() for content it
             # merely fronts; `cached` tells whether the level itself holds it
             held = store.cached(key) if hasattr(store, "cached") else True
             try:
                 if hasattr(store, "cached"):
-                    # its fill IS the promotion for keys homed here
-                    data = store.get(key, streams=streams, fill=do_promote)
+                    # fill decided below, through admission + hit-rate gates
+                    data = store.get(key, streams=streams, fill=False)
                 else:
                     data = store.get(key, streams=streams)
             except KeyError:
+                with self._lock:
+                    self.stats[f"misses_{name}"] += 1
                 continue
+            hot = False if observer else self._record_hit(key, tick)
+            want = do_promote and (hot or promote is True)
             with self._lock:
                 if held:
                     self.stats[f"hits_{name}"] += 1
                 else:
                     # served through the level from the store it fronts
                     # (the terminal level in the canonical stack)
+                    self.stats[f"misses_{name}"] += 1
                     self.stats[f"hits_{self.levels[-1][0]}"] += 1
-                    if do_promote and store.cached(key):
-                        self.stats["promotions"] += 1
-            if held or (hasattr(store, "cached") and store.cached(key)):
+            if held:
                 self._touch(i, key, len(data))
-            if do_promote and i > start and self._admits(start, len(data)):
+            elif want and self._admits(i, len(data)) and store.fill(key, data):
+                # the read-through fill IS this level's promotion
+                with self._lock:
+                    self.stats["promotions"] += 1
+                    self._clean[name].add(key)
+                self._touch(i, key, len(data))
+            if want and i > start and self._admits(start, len(data)):
                 try:
                     self._put_at(start, key, data, streams)
                     with self._lock:
@@ -503,6 +611,8 @@ class TierStack:
         for i, (_, store) in enumerate(self.levels):
             store.delete(key)
             self._forget(i, key)
+        with self._lock:
+            self._hit_log.pop(key, None)
 
     def keys(self) -> Iterator[str]:
         seen = set()

@@ -1,3 +1,18 @@
 from repro.serve.engine import ServeEngine
+from repro.serve.kvpage import KVPager, kv_page_key
+from repro.serve.scheduler import (
+    DecodeStream,
+    ServeScheduler,
+    StreamState,
+    make_slot_serve_step,
+)
 
-__all__ = ["ServeEngine"]
+__all__ = [
+    "DecodeStream",
+    "KVPager",
+    "ServeEngine",
+    "ServeScheduler",
+    "StreamState",
+    "kv_page_key",
+    "make_slot_serve_step",
+]

@@ -1,15 +1,20 @@
-"""Batched serving loop with checkpointable serving state.
+"""ServeEngine: the single-batch serving surface over the ServeScheduler.
 
-Wraps the jitted serve_step with: greedy batched decoding, KV-cache
-management, and SCR checkpointing of the *serving* state (cache + stream
-positions) so an interrupted decode resumes byte-identically — the
-inference-side counterpart of the trainer's fault tolerance
-(demonstrated end-to-end in examples/serve.py).
+Historically this class owned its own lockstep decode loop; it is now a
+thin wrapper that submits one stream per batch row to a
+:class:`~repro.serve.scheduler.ServeScheduler` (slots == batch, no
+paging) and keeps the original prefill/decode/save/restore API.  The
+scheduler is exposed as ``.scheduler`` for callers that want the
+multi-stream surface — continuous batching, KV paging, quantum
+preemption — with the same checkpoint semantics (the full serving state
+rides one :class:`~repro.api.session.ResilienceSession` transaction; a
+killed decode resumes byte-identically, demonstrated in
+examples/serve.py).
 """
 
 from __future__ import annotations
 
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -19,7 +24,7 @@ from repro.api.session import ResilienceSession
 from repro.configs.base import ArchConfig
 from repro.core.scr import SCRManager
 from repro.models.registry import ModelApi
-from repro.train.step import make_serve_step
+from repro.serve.scheduler import ServeScheduler, StreamState
 
 
 class ServeEngine:
@@ -31,10 +36,8 @@ class ServeEngine:
         self.cfg = cfg
         self.model = model
         self.params = params
+        self.batch = batch
         self.max_len = max_len
-        self.cache = model.init_cache(cfg, batch, max_len)
-        self.pos = 0
-        self.last: Optional[jax.Array] = None
         if isinstance(scr, ResilienceSession):
             self.session: Optional[ResilienceSession] = scr
         elif scr is not None:
@@ -43,7 +46,11 @@ class ServeEngine:
             self.session = None
         self.scr: Optional[SCRManager] = (
             self.session.scr if self.session is not None else None)
-        self._step = jax.jit(make_serve_step(cfg, model))
+        self.scheduler = ServeScheduler(
+            cfg, model, params, slots=batch, max_len=max_len,
+            session=self.session)
+        self._engine_sids: List[int] = []
+        self.last: Optional[jax.Array] = None
 
     @classmethod
     def with_checkpointing(
@@ -69,48 +76,58 @@ class ServeEngine:
             cluster, strategy=strategy, procs_per_node=procs_per_node, **scr_kw)
         return cls(cfg, model, params, batch=batch, max_len=max_len, scr=session)
 
+    # -- the lockstep single-batch surface -------------------------------- #
+    #
+    # The engine owns the `batch` streams it submitted in prefill();
+    # callers may run additional streams through `.scheduler` without
+    # breaking the lockstep view (decode only reads its own rows).
+
+    def _engine_streams(self):
+        return [self.scheduler.streams[sid] for sid in self._engine_sids]
+
     def prefill(self, prompt: jax.Array) -> jax.Array:
-        """Token-by-token prefill (tiny models; batched prefill uses
-        launch/dryrun's prefill_step path)."""
-        nxt = prompt[:, 0]
-        for i in range(prompt.shape[1]):
-            nxt, self.cache = self._step(self.params, self.cache,
-                                         prompt[:, i], jnp.int32(self.pos))
-            self.pos += 1
-        self.last = nxt
-        return nxt
+        """Submit one stream per prompt row and run the prompts through
+        the lanes (per-lane prefill is just decode steps whose outputs
+        are ignored).  Returns the first predicted token per row."""
+        prompt = np.asarray(prompt)
+        assert prompt.ndim == 2 and prompt.shape[0] == self.batch, prompt.shape
+        self._engine_sids = [
+            # one stream per row, bounded only by the lane length
+            self.scheduler.submit(prompt[row], max_new=self.max_len)
+            for row in range(self.batch)]
+        for _ in range(prompt.shape[1]):
+            self.scheduler.step()
+        nxt = np.asarray([s.tokens[s.plen] for s in self._engine_streams()],
+                         np.int32)
+        self.last = jnp.asarray(nxt)
+        return self.last
 
     def decode(self, n_tokens: int) -> List[np.ndarray]:
-        assert self.last is not None, "prefill first"
-        out = []
+        """Greedy lockstep decode: one (batch,) token vector per step,
+        clipped when the lanes hit ``max_len``.  The engine's rows share
+        one prompt length and lane budget, so they emit in lockstep until
+        they finish together."""
+        assert self._engine_sids, "prefill first"
+        out: List[np.ndarray] = []
         for _ in range(n_tokens):
-            if self.pos >= self.max_len:
-                break
-            self.last, self.cache = self._step(self.params, self.cache,
-                                               self.last, jnp.int32(self.pos))
-            self.pos += 1
-            out.append(np.asarray(self.last))
+            emitted = dict(self.scheduler.step())
+            if not all(sid in emitted for sid in self._engine_sids):
+                break    # the engine's rows are done (others may continue)
+            step_out = np.asarray(
+                [emitted[sid] for sid in self._engine_sids], np.int32)
+            out.append(step_out)
+            self.last = jnp.asarray(step_out)
         return out
 
     # -- serving-state checkpoint/restore -------------------------------- #
 
-    def serving_state(self) -> Dict[str, Any]:
-        batch = jax.tree_util.tree_leaves(self.cache)[0].shape[1]
-        last = (np.asarray(self.last) if self.last is not None
-                else np.zeros((batch,), np.int32))  # template-friendly
-        return {
-            "cache": jax.device_get(self.cache),
-            "last": last,
-            "pos": np.int32(self.pos),
-        }
-
     def save(self):
-        """Checkpoint the serving state through one session transaction;
-        with an async-drain engine the decode loop continues while the
-        flush rides the drain executor.  Returns the CheckpointRecord
-        (its ``ticket`` is the drain future)."""
+        """Checkpoint the full serving state through one session
+        transaction; with an async-drain engine the decode loop continues
+        while the flush rides the drain executor.  Returns the
+        CheckpointRecord (its ``ticket`` is the drain future)."""
         assert self.session is not None
-        return self.session.save(self.pos, self.serving_state())
+        return self.scheduler.save(self.session)
 
     def wait_drained(self, timeout=None) -> None:
         """Durability barrier over outstanding serving-state drains."""
@@ -118,15 +135,22 @@ class ServeEngine:
         self.session.wait_drained(timeout=timeout)
 
     def restore(self) -> int:
+        """Rebuild the serving state — stream set included — from the
+        newest checkpoint; a fresh engine restores without re-prefilling."""
         assert self.session is not None
-        state, step = self.session.restore_latest(self.serving_state())
-        self.cache = jax.tree_util.tree_map(jnp.asarray, state["cache"])
-        self.last = jnp.asarray(state["last"])
-        self.pos = int(state["pos"])
+        step = self.scheduler.restore(self.session)
+        # the engine's rows are the first `batch` streams of the
+        # restored set (prefill submits them first, in row order)
+        self._engine_sids = sorted(self.scheduler.streams)[:self.batch]
+        live = [s for s in self._engine_streams()
+                if s.state is not StreamState.DONE and s.pos > 0]
+        if live:
+            self.last = jnp.asarray([s.tokens[s.pos] for s in live], jnp.int32)
         return step
 
     def close(self) -> None:
         """Idempotent: close the engine-owned session (and its drain
         threads); a caller-provided engine is left running."""
+        self.scheduler.close()
         if self.session is not None:
             self.session.close()

@@ -1,0 +1,227 @@
+"""KVPager: per-stream KV-cache blocks paged through the TierStack.
+
+The serving path is the first consumer of the DEEP-ER hierarchy from the
+*inference* side: instead of every decode stream's KV cache living in one
+flat resident buffer, a parked stream's lane cache is serialized, split
+into fixed-size pages, and routed through a :class:`~repro.memory.stack.
+TierStack` under the ``kv/`` key class — so placement is policy:
+
+* admission control (``admission_fraction``) keeps an oversized stream's
+  cache out of the fast tier (it routes straight to the next level
+  instead of wiping the hot working set);
+* hit-rate promotion (:class:`~repro.memory.stack.HitRatePromotion`
+  with ``k >= 2``) keeps the round-robin resume traffic from churning
+  the fast tier: a parked page is read exactly once per park/resume
+  cycle (then rewritten), so resume reads never cross the promotion
+  threshold — only keys with genuine in-window reuse (a shared-prefix
+  page cache is the ROADMAP follow-up) earn their way back up;
+* capacity pressure demotes cold pages downward (LRU within hotness)
+  rather than rejecting new streams — the Fridman-style "hot working set
+  in DRAM, reuse-tracked spill to slower tiers" pattern.
+
+The pager is pure byte plumbing: the scheduler hands it a *lane cache*
+(the batch-1 slice of the stacked decode cache, any model family's
+pytree) and gets it back byte-identically on :meth:`fetch` — bf16 and
+friends round-trip exactly through the checkpoint serializer.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Iterator, List, Optional, Tuple
+
+from repro.io.serialization import StateBlob, deserialize_state, serialize_state
+from repro.memory.stack import HitRatePromotion, TierStack
+from repro.memory.tiers import CapacityError, MemoryTier, TierKind, TierSpec
+
+KV_PAGE_BYTES = 64 * 1024  # default paging granularity
+
+
+def kv_page_key(sid: int, page: int) -> str:
+    """Key layout for one page of one stream's KV cache (``kv`` class)."""
+    return f"kv/stream{sid:08d}/page{page:05d}.bin"
+
+
+@dataclasses.dataclass
+class _ParkedEntry:
+    nbytes: int
+    npages: int
+    manifest: Dict[str, Any]
+
+
+class KVPager:
+    """Page per-stream KV lane caches through a TierStack.
+
+    ``stack`` carries the ``kv/`` keys; ``page_bytes`` is the paging
+    granularity (a lane cache is split into ceil(nbytes / page_bytes)
+    pages so tier placement — admission, spill, promotion, demotion —
+    happens per block, not per whole stream).  ``own_stack`` controls
+    whether :meth:`close` also closes the stack.
+    """
+
+    def __init__(self, stack: TierStack, page_bytes: int = KV_PAGE_BYTES,
+                 own_stack: bool = True):
+        if page_bytes < 1:
+            raise ValueError("page_bytes must be >= 1")
+        self.stack = stack
+        self.page_bytes = int(page_bytes)
+        self._own_stack = own_stack
+        self._parked: Dict[int, _ParkedEntry] = {}
+
+    # -- construction ----------------------------------------------------- #
+
+    @classmethod
+    def for_capacity(
+        cls,
+        fast_bytes: int,
+        slow_bytes: int = 1 << 30,
+        paged: bool = True,
+        admission_fraction: Optional[float] = 0.5,
+        promotion: Optional[HitRatePromotion] = None,
+        page_bytes: int = KV_PAGE_BYTES,
+    ) -> "KVPager":
+        """A serving KV stack sized by its fast tier.
+
+        ``paged=True`` builds the hierarchy ``hbm > dram > global`` (cold
+        pages spill down, hot ones promote back); ``paged=False`` builds
+        the flat single-tier baseline — every resident stream's cache
+        must fit in the fast tier or :meth:`park` raises
+        :class:`CapacityError` — which is exactly the resident-stream
+        ceiling fig10 measures against.
+        """
+        def tier(kind: TierKind, cap: int, bw: float, lat: float) -> MemoryTier:
+            return MemoryTier(TierSpec(kind, cap, bw, bw, lat))
+
+        levels: List[Tuple[str, MemoryTier]] = [
+            ("hbm", tier(TierKind.HBM, fast_bytes, 450e9, 1e-7))]
+        if paged:
+            levels.append(("dram", tier(TierKind.DRAM, slow_bytes, 80e9, 1e-7)))
+            levels.append(("global", tier(TierKind.GLOBAL, 16 * slow_bytes,
+                                          5e9, 5e-4)))
+        stack = TierStack(
+            levels,
+            admission_fraction=admission_fraction if paged else None,
+            promotion=promotion if promotion is not None
+            else HitRatePromotion(k=2, window=256),
+        )
+        return cls(stack, page_bytes=page_bytes, own_stack=True)
+
+    # -- paging ----------------------------------------------------------- #
+
+    def _page_iter(self, data: bytes) -> Iterator[bytes]:
+        view = memoryview(data)
+        for off in range(0, len(data), self.page_bytes):
+            yield bytes(view[off:off + self.page_bytes])
+
+    def _park_pages(self, sid: int, data: bytes, manifest: Dict[str, Any]) -> int:
+        if sid in self._parked:
+            self.release(sid)
+        pages = list(self._page_iter(data))
+        written = 0
+        try:
+            for j, page in enumerate(pages):
+                self.stack.put(kv_page_key(sid, j), page)
+                written += 1
+        except CapacityError:
+            for j in range(written):
+                self.stack.delete(kv_page_key(sid, j))
+            raise
+        self._parked[sid] = _ParkedEntry(
+            nbytes=len(data), npages=len(pages), manifest=manifest)
+        return len(data)
+
+    def park(self, sid: int, lane_cache: Any) -> int:
+        """Serialize one stream's lane cache and route its pages through
+        the stack.  All-or-nothing: if any page cannot be placed anywhere
+        (single-tier baseline at capacity), every page already written is
+        removed and the CapacityError propagates — a stream is either
+        fully resident or not resident at all.  Returns bytes parked."""
+        blob = serialize_state(lane_cache)
+        return self._park_pages(sid, blob.data, blob.manifest)
+
+    def park_bytes(self, sid: int, blob: bytes, layout_manifest: Dict[str, Any]) -> int:
+        """Re-park a stream from its already-serialized bytes (the
+        checkpoint-restore path: no deserialize/re-serialize round trip).
+        ``layout_manifest`` describes the lane template's leaf layout —
+        identical for every lane — and the integrity digests are
+        recomputed over ``blob``."""
+        import hashlib
+        import zlib
+
+        if len(blob) != layout_manifest["total_bytes"]:
+            raise ValueError(
+                f"stream {sid}: blob of {len(blob)} bytes does not match the "
+                f"lane layout ({layout_manifest['total_bytes']} bytes)")
+        manifest = dict(layout_manifest)
+        manifest["crc32"] = zlib.crc32(blob) & 0xFFFFFFFF
+        manifest["sha256"] = hashlib.sha256(blob).hexdigest()
+        return self._park_pages(sid, blob, manifest)
+
+    def blob_bytes(self, sid: int) -> bytes:
+        """A parked stream's joined serialized bytes, read as a pure
+        observer (``promote=False``: the checkpoint path must not disturb
+        placement or the hit window) and without releasing the pages."""
+        entry = self._parked.get(sid)
+        if entry is None:
+            raise KeyError(f"stream {sid} is not parked")
+        data = b"".join(self.stack.get(kv_page_key(sid, j), promote=False)
+                        for j in range(entry.npages))
+        if len(data) != entry.nbytes:
+            raise IOError(
+                f"stream {sid}: paged bytes {len(data)} != parked {entry.nbytes}")
+        return data
+
+    def fetch(self, sid: int, like: Any, release: bool = True,
+              promote: Optional[bool] = None) -> Any:
+        """Read a parked stream's pages back through the stack (hit-rate
+        promotion applies per page unless ``promote=False`` — the
+        checkpoint path reads without disturbing placement) and rebuild
+        the lane cache against the ``like`` template.  ``release`` drops
+        the pages afterwards (the stream is resuming into a slot — its
+        stack copy is stale the moment it decodes again)."""
+        entry = self._parked.get(sid)
+        if entry is None:
+            raise KeyError(f"stream {sid} is not parked")
+        parts = [self.stack.get(kv_page_key(sid, j), promote=promote)
+                 for j in range(entry.npages)]
+        data = b"".join(parts)
+        if len(data) != entry.nbytes:
+            raise IOError(
+                f"stream {sid}: paged bytes {len(data)} != parked {entry.nbytes}")
+        lane = deserialize_state(StateBlob(data=data, manifest=entry.manifest), like)
+        if release:
+            self.release(sid)
+        return lane
+
+    def release(self, sid: int) -> None:
+        """Drop a parked stream's pages from every level (idempotent)."""
+        entry = self._parked.pop(sid, None)
+        if entry is None:
+            return
+        for j in range(entry.npages):
+            self.stack.delete(kv_page_key(sid, j))
+
+    # -- introspection ----------------------------------------------------- #
+
+    def parked_sids(self) -> List[int]:
+        return sorted(self._parked)
+
+    def is_parked(self, sid: int) -> bool:
+        return sid in self._parked
+
+    def parked_bytes(self) -> int:
+        return sum(e.nbytes for e in self._parked.values())
+
+    def stats(self) -> Dict[str, int]:
+        """The underlying stack's counter snapshot (hits/misses per level,
+        promotions, evictions, admission routing)."""
+        return self.stack.stats()
+
+    def level_used(self) -> Dict[str, int]:
+        return {name: store.used_bytes() for name, store in self.stack.levels}
+
+    # -- lifecycle ---------------------------------------------------------- #
+
+    def close(self) -> None:
+        if self._own_stack:
+            self.stack.close()

@@ -1,0 +1,465 @@
+"""ServeScheduler: continuous batching of many decode streams + paging.
+
+The north-star serving workload ("heavy traffic from millions of users")
+is many concurrent decode streams over one model.  The scheduler runs a
+fixed number of decode *slots* — one jitted, vmapped decode step over all
+slots, each lane carrying its own KV cache and its own position — and
+moves streams through them with continuous batching:
+
+* streams join and leave at **step boundaries** (a freed slot is reused
+  by the next queued stream the very next step — no padding, no batch
+  re-formation, no recompilation);
+* per-lane positions mean a joining stream prefills its prompt in its
+  lane while neighbouring lanes keep decoding — prefill is just decode
+  steps whose outputs are ignored;
+* with more live streams than slots, the scheduler round-robins: after
+  ``quantum`` steps an active stream is *parked* — its lane cache paged
+  through the :class:`~repro.serve.kvpage.KVPager` into the tier stack —
+  and the next queued stream takes the slot.  Admission control and
+  hit-rate promotion decide where parked pages live (see kvpage.py).
+
+The whole multi-stream state — every lane cache, every stream's token
+history and cursor, the run queue, and every parked stream's pages — is
+checkpointed through one :class:`~repro.api.session.ResilienceSession`
+transaction, and :meth:`restore` rebuilds all of it from the checkpoint
+alone (stream set included, via the descriptor's ``meta``): a killed
+multi-stream decode resumes byte-identically in a fresh process.
+
+Determinism contract: scheduling decisions depend only on (stream
+submission order, quantum, slot count), never on wall clocks — so a
+restored scheduler replays the exact same interleaving, which is what
+makes the kill/restore byte-identity guarantee testable end to end.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from collections import deque
+from typing import Any, Callable, Deque, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.session import ResilienceSession
+from repro.configs.base import ArchConfig
+from repro.memory.tiers import CapacityError
+from repro.models.registry import ModelApi
+from repro.serve.kvpage import KVPager
+
+
+def make_slot_serve_step(cfg: ArchConfig, model: ModelApi) -> Callable:
+    """One greedy decode step vmapped over independent slots.
+
+    Each lane is a batch-1 ``model.decode_step`` with its *own* scalar
+    position, so the slot axis can hold streams at arbitrary, unequal
+    offsets (joining, prefilling, decoding) in one fixed-shape jitted
+    call — the compiled batching rule for ``dynamic_update_slice`` turns
+    the per-lane cache updates into one scatter.
+    """
+
+    def one(params, lane_cache, token, pos):
+        logits, lane_cache = model.decode_step(params, lane_cache, token, pos, cfg)
+        return logits.argmax(axis=-1).astype(jnp.int32), lane_cache
+
+    return jax.vmap(one, in_axes=(None, 0, 0, 0))
+
+
+class StreamState(str, enum.Enum):
+    WAITING = "waiting"   # submitted, never run
+    ACTIVE = "active"     # owns a slot
+    PARKED = "parked"     # KV paged out through the tier stack
+    DONE = "done"
+
+
+_STATE_CODE = {s: i for i, s in enumerate(StreamState)}
+_CODE_STATE = {i: s for s, i in _STATE_CODE.items()}
+
+
+@dataclasses.dataclass
+class DecodeStream:
+    """One decode request: prompt in, greedy continuation out.
+
+    ``tokens`` is the full token history (prompt, then every emitted
+    token); ``pos`` counts tokens consumed into the lane KV, so the next
+    input is always ``tokens[pos]``.
+    """
+
+    sid: int
+    tokens: List[int]            # prompt + emitted history
+    plen: int                    # prompt length
+    max_new: int
+    submitted_step: int
+    pos: int = 0
+    state: StreamState = StreamState.WAITING
+    slot: Optional[int] = None
+    ran: int = 0                 # steps since last admit (quantum accounting)
+    finished_step: Optional[int] = None
+
+    @property
+    def emitted(self) -> List[int]:
+        return self.tokens[self.plen:]
+
+    @property
+    def n_emitted(self) -> int:
+        return len(self.tokens) - self.plen
+
+    def next_input(self) -> int:
+        return self.tokens[self.pos]
+
+
+class ServeScheduler:
+    """Continuous-batching decode scheduler over ``slots`` lanes.
+
+    ``pager=None`` disables paging: oversubscribed streams simply wait
+    for a slot to free up at stream completion (the single-stream
+    :class:`~repro.serve.engine.ServeEngine` compatibility mode).  With a
+    pager, ``quantum`` > 0 enables round-robin preemption: an active
+    stream that has run ``quantum`` consecutive steps while others queue
+    is parked through the pager.  A park the tier stack cannot place
+    (flat unpaged stack at capacity) leaves the stream running — counted
+    in ``stats["park_failures"]`` — which is exactly the head-of-line
+    blocking the paged configuration exists to remove.
+    """
+
+    def __init__(
+        self,
+        cfg: ArchConfig,
+        model: ModelApi,
+        params: Any,
+        slots: int,
+        max_len: int,
+        pager: Optional[KVPager] = None,
+        session: Optional[ResilienceSession] = None,
+        quantum: int = 0,
+    ):
+        if slots < 1:
+            raise ValueError("need at least one decode slot")
+        if quantum < 0:
+            raise ValueError("quantum must be >= 0")
+        self.cfg = cfg
+        self.model = model
+        self.params = params
+        self.slots = int(slots)
+        self.max_len = int(max_len)
+        self.pager = pager
+        self.session = session
+        self.quantum = int(quantum)
+        lane = model.init_cache(cfg, 1, max_len)
+        self._lane_template = jax.device_get(lane)
+        # every lane serializes to the same layout; cached once so the
+        # checkpoint path can move raw page bytes instead of pytrees
+        from repro.io.serialization import serialize_state
+        self._lane_manifest = serialize_state(self._lane_template).manifest
+        self._lane_nbytes = self._lane_manifest["total_bytes"]
+        self.slots_cache = jax.tree_util.tree_map(
+            lambda l: jnp.stack([l] * self.slots), lane)
+        self._step_fn = jax.jit(make_slot_serve_step(cfg, model))
+        self._slot_sid: List[Optional[int]] = [None] * self.slots
+        self.streams: Dict[int, DecodeStream] = {}
+        self._runq: Deque[int] = deque()
+        self._next_sid = 0
+        self.step_count = 0
+        self.stats: Dict[str, int] = {
+            "steps": 0, "joined": 0, "parked": 0, "resumed": 0,
+            "finished": 0, "park_failures": 0, "max_resident": 0,
+        }
+
+    # -- submission -------------------------------------------------------- #
+
+    def submit(self, prompt: Sequence[int], max_new: int) -> int:
+        """Queue one decode stream; it joins a slot at the next step
+        boundary.  Returns the stream id."""
+        prompt = [int(t) for t in np.asarray(prompt).reshape(-1)]
+        if not prompt:
+            raise ValueError("empty prompt")
+        if len(prompt) >= self.max_len:
+            raise ValueError(f"prompt of {len(prompt)} tokens >= max_len "
+                             f"{self.max_len}")
+        if max_new < 1:
+            raise ValueError("max_new must be >= 1")
+        sid = self._next_sid
+        self._next_sid += 1
+        self.streams[sid] = DecodeStream(
+            sid=sid, tokens=list(prompt), plen=len(prompt), max_new=int(max_new),
+            submitted_step=self.step_count)
+        self._runq.append(sid)
+        return sid
+
+    # -- slot management --------------------------------------------------- #
+
+    def _zero_lane(self, slot: int) -> None:
+        self.slots_cache = jax.tree_util.tree_map(
+            lambda l: l.at[slot].set(jnp.zeros_like(l[slot])), self.slots_cache)
+
+    def _lane(self, slot: int) -> Any:
+        return jax.tree_util.tree_map(
+            lambda l: jax.device_get(l[slot]), self.slots_cache)
+
+    def _set_lane(self, slot: int, lane: Any) -> None:
+        self.slots_cache = jax.tree_util.tree_map(
+            lambda l, ln: l.at[slot].set(jnp.asarray(ln)),
+            self.slots_cache, lane)
+
+    def _admit(self, sid: int, slot: int) -> None:
+        s = self.streams[sid]
+        if s.state is StreamState.PARKED:
+            assert self.pager is not None
+            self._set_lane(slot, self.pager.fetch(sid, self._lane_template))
+            self.stats["resumed"] += 1
+        else:
+            self._zero_lane(slot)
+            self.stats["joined"] += 1
+        s.state, s.slot, s.ran = StreamState.ACTIVE, slot, 0
+        self._slot_sid[slot] = sid
+
+    def _park(self, sid: int) -> bool:
+        """Page an active stream's lane out; False when the stack refuses
+        (unpaged baseline at capacity) — the stream keeps its slot."""
+        s = self.streams[sid]
+        assert s.state is StreamState.ACTIVE and s.slot is not None
+        assert self.pager is not None
+        try:
+            self.pager.park(sid, self._lane(s.slot))
+        except CapacityError:
+            self.stats["park_failures"] += 1
+            s.ran = 0      # retry after another quantum, not every step
+            return False
+        self._slot_sid[s.slot] = None
+        s.state, s.slot = StreamState.PARKED, None
+        self._runq.append(sid)
+        self.stats["parked"] += 1
+        return True
+
+    def _schedule(self) -> None:
+        """Step-boundary scheduling: fill free slots from the run queue,
+        then (queue still non-empty) park quantum-expired active streams
+        and hand their slots to waiters — deterministic slot order."""
+        for slot in range(self.slots):
+            if self._slot_sid[slot] is None and self._runq:
+                self._admit(self._runq.popleft(), slot)
+        if not self._runq or self.pager is None or self.quantum <= 0:
+            return
+        for slot in range(self.slots):
+            if not self._runq:
+                return
+            sid = self._slot_sid[slot]
+            if sid is None:
+                continue
+            if self.streams[sid].ran >= self.quantum and self._park(sid):
+                self._admit(self._runq.popleft(), slot)
+
+    # -- the decode loop ---------------------------------------------------- #
+
+    def _finish(self, s: DecodeStream) -> None:
+        assert s.slot is not None
+        self._slot_sid[s.slot] = None
+        s.state, s.slot = StreamState.DONE, None
+        s.finished_step = self.step_count
+        self.stats["finished"] += 1
+
+    def resident_streams(self) -> int:
+        """Streams whose KV currently lives somewhere in the hierarchy:
+        active lanes plus parked pages."""
+        active = sum(1 for sid in self._slot_sid if sid is not None)
+        parked = len(self.pager.parked_sids()) if self.pager is not None else 0
+        return active + parked
+
+    def step(self) -> List[Tuple[int, int]]:
+        """One batched decode step at a stream-join/evict boundary.
+        Returns the ``(sid, token)`` pairs emitted this step."""
+        self._schedule()
+        active = [(slot, self.streams[sid])
+                  for slot, sid in enumerate(self._slot_sid) if sid is not None]
+        if not active:
+            return []
+        tokens = np.zeros((self.slots, 1), np.int32)
+        pos = np.zeros((self.slots,), np.int32)
+        for slot, s in active:
+            tokens[slot, 0] = s.next_input()
+            pos[slot] = s.pos
+        nxt, self.slots_cache = self._step_fn(
+            self.params, self.slots_cache, jnp.asarray(tokens), jnp.asarray(pos))
+        out = np.asarray(nxt)[:, 0]
+        emitted: List[Tuple[int, int]] = []
+        for slot, s in active:
+            s.pos += 1
+            s.ran += 1
+            if s.pos >= s.plen:
+                tok = int(out[slot])
+                s.tokens.append(tok)
+                emitted.append((s.sid, tok))
+            if s.n_emitted >= s.max_new or s.pos >= self.max_len:
+                self._finish(s)
+        self.step_count += 1
+        self.stats["steps"] += 1
+        self.stats["max_resident"] = max(self.stats["max_resident"],
+                                         self.resident_streams())
+        return emitted
+
+    def unfinished(self) -> int:
+        return sum(1 for s in self.streams.values()
+                   if s.state is not StreamState.DONE)
+
+    def run(self, max_steps: Optional[int] = None) -> int:
+        """Step until every stream finishes (or ``max_steps``); returns
+        the number of steps taken."""
+        taken = 0
+        while self.unfinished() and (max_steps is None or taken < max_steps):
+            self.step()
+            taken += 1
+        return taken
+
+    def output(self, sid: int) -> List[int]:
+        """Tokens emitted so far for one stream."""
+        return list(self.streams[sid].emitted)
+
+    def latency_steps(self, sid: int) -> Optional[int]:
+        s = self.streams[sid]
+        if s.finished_step is None:
+            return None
+        return s.finished_step - s.submitted_step
+
+    # -- checkpoint / restore ----------------------------------------------- #
+    #
+    # Fixed-shape state (the serializer cross-checks template shapes):
+    #   slots    stacked lane caches, exactly as resident
+    #   tokens   (S, cap) int32 token histories, zero-padded
+    #   meta     (S, 9) int32 per-stream cursors (see _META_COLS)
+    #   runq     (S,) int32 queue order, -1-padded
+    #   slot_sid (slots,) int32 slot ownership, -1 for free
+    #   parked   (P, lane_nbytes) uint8: parked lanes as their raw
+    #            serialized page bytes (only when any stream is parked)
+    # Variable facts (S, cap, parked sids, step counter) ride in the
+    # descriptor's JSON meta, which restore() reads *before* building the
+    # template — so a fresh process can restore with zero prior knowledge
+    # of the stream set.
+
+    _META_COLS = 9  # plen, ntok, pos, state, slot, max_new, ran, sub, fin
+
+    def _serving_state(self) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+        sids = sorted(self.streams)
+        cap = max((len(self.streams[s].tokens) for s in sids), default=1)
+        tokens = np.zeros((len(sids), cap), np.int32)
+        meta_arr = np.zeros((len(sids), self._META_COLS), np.int32)
+        for row, sid in enumerate(sids):
+            s = self.streams[sid]
+            tokens[row, :len(s.tokens)] = s.tokens
+            meta_arr[row] = [
+                s.plen, len(s.tokens), s.pos, _STATE_CODE[s.state],
+                -1 if s.slot is None else s.slot, s.max_new, s.ran,
+                s.submitted_step,
+                -1 if s.finished_step is None else s.finished_step,
+            ]
+        runq = np.full((len(sids),), -1, np.int32)
+        runq[:len(self._runq)] = list(self._runq)
+        slot_sid = np.asarray(
+            [-1 if sid is None else sid for sid in self._slot_sid], np.int32)
+        state: Dict[str, Any] = {
+            "slots": jax.device_get(self.slots_cache),
+            "tokens": tokens,
+            "meta": meta_arr,
+            "runq": runq,
+            "slot_sid": slot_sid,
+        }
+        parked = self.pager.parked_sids() if self.pager is not None else []
+        if parked:
+            # parked lanes ride the checkpoint as their raw serialized
+            # page bytes — no deserialize/re-serialize round trip
+            state["parked"] = np.stack(
+                [np.frombuffer(self.pager.blob_bytes(sid), np.uint8)
+                 for sid in parked])
+        meta = {
+            "serve": {
+                "n_streams": len(sids),
+                "cap": int(cap),
+                "parked_sids": [int(s) for s in parked],
+                "step_count": int(self.step_count),
+                "next_sid": int(self._next_sid),
+                "slots": self.slots,
+                "max_len": self.max_len,
+            }
+        }
+        return state, meta
+
+    def save(self, session: Optional[ResilienceSession] = None):
+        """Checkpoint the full multi-stream serving state in one session
+        transaction, keyed by the scheduler step counter.  Returns the
+        :class:`CheckpointRecord` (its ticket is the async-drain future)."""
+        session = session or self.session
+        assert session is not None, "no ResilienceSession attached"
+        state, meta = self._serving_state()
+        session.start_checkpoint(self.step_count)
+        for name, part in state.items():
+            session.route(name, part)
+        return session.complete_checkpoint(meta=meta)
+
+    def restore(self, session: Optional[ResilienceSession] = None,
+                step: Optional[int] = None) -> int:
+        """Rebuild the entire scheduler — stream set, token histories, run
+        queue, lane caches, parked pages — from the newest (or given)
+        checkpoint.  The stream set comes from the checkpoint itself; the
+        scheduler only needs to be constructed with the same model,
+        ``slots`` and ``max_len`` it was saved with."""
+        session = session or self.session
+        assert session is not None, "no ResilienceSession attached"
+        steps = session.available_steps()
+        if not steps:
+            raise RuntimeError("no checkpoint available to restore")
+        step = max(steps) if step is None else step
+        sm = session.checkpoint_meta(step).get("serve")
+        if not sm:
+            raise RuntimeError(f"checkpoint {step} carries no serving state")
+        if sm["slots"] != self.slots or sm["max_len"] != self.max_len:
+            raise ValueError(
+                f"scheduler shape mismatch: checkpoint has slots={sm['slots']} "
+                f"max_len={sm['max_len']}, this scheduler has slots={self.slots} "
+                f"max_len={self.max_len}")
+        n, cap = sm["n_streams"], sm["cap"]
+        parked_sids = [int(s) for s in sm["parked_sids"]]
+        template: Dict[str, Any] = {
+            "slots": jax.tree_util.tree_map(
+                lambda l: np.zeros((self.slots,) + l.shape, l.dtype),
+                self._lane_template),
+            "tokens": np.zeros((n, cap), np.int32),
+            "meta": np.zeros((n, self._META_COLS), np.int32),
+            "runq": np.zeros((n,), np.int32),
+            "slot_sid": np.zeros((self.slots,), np.int32),
+        }
+        if parked_sids:
+            template["parked"] = np.zeros(
+                (len(parked_sids), self._lane_nbytes), np.uint8)
+        state, got = session.restore_latest(template, step=step)
+
+        self.slots_cache = jax.tree_util.tree_map(jnp.asarray, state["slots"])
+        self.streams = {}
+        for row in range(n):
+            plen, ntok, pos, code, slot, max_new, ran, sub, fin = (
+                int(v) for v in state["meta"][row])
+            self.streams[row] = DecodeStream(
+                sid=row, tokens=[int(t) for t in state["tokens"][row, :ntok]],
+                plen=plen, max_new=max_new, submitted_step=sub, pos=pos,
+                state=_CODE_STATE[code], slot=None if slot < 0 else slot,
+                ran=ran, finished_step=None if fin < 0 else fin)
+        self._runq = deque(int(s) for s in state["runq"] if s >= 0)
+        self._slot_sid = [None if s < 0 else int(s)
+                          for s in state["slot_sid"]]
+        if self.pager is not None:
+            for sid in self.pager.parked_sids():
+                self.pager.release(sid)
+        if parked_sids:
+            assert self.pager is not None, \
+                "checkpoint has parked streams but this scheduler has no pager"
+            for i, sid in enumerate(parked_sids):
+                self.pager.park_bytes(sid, state["parked"][i].tobytes(),
+                                      self._lane_manifest)
+        self.step_count = int(sm["step_count"])
+        self._next_sid = int(sm["next_sid"])
+        return got
+
+    # -- lifecycle ----------------------------------------------------------- #
+
+    def close(self) -> None:
+        if self.pager is not None:
+            self.pager.close()
