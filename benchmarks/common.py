@@ -10,14 +10,22 @@ Every benchmark reports two kinds of numbers, clearly labelled:
     reproduces the paper's claimed ratios (Figs 3-10).
 
 CSV contract (benchmarks/run.py): ``name,us_per_call,derived``.
+
+JSON contract (:func:`bench_json`): figures that upload a per-PR
+``BENCH_<name>.json`` artifact write it through one helper, which stamps
+the figure name and embeds the per-level TierStack hit/miss counters —
+augmented with derived ``hit_rate_<level>`` ratios — under a top-level
+``tier_stats`` map, so cache behaviour is tracked per figure over time
+alongside the throughput numbers.
 """
 
 from __future__ import annotations
 
+import json
 import tempfile
 import time
 from pathlib import Path
-from typing import Callable, Dict, List
+from typing import Callable, Dict, List, Mapping, Optional
 
 from repro.api.session import ResilienceSession
 from repro.cluster.topology import VirtualCluster
@@ -60,3 +68,39 @@ def make_session(cl, hier, strategy: Strategy, policy=None, **kw) -> ResilienceS
 
 def row(name: str, us: float, derived: str) -> Dict[str, str]:
     return {"name": name, "us_per_call": f"{us:.1f}", "derived": derived}
+
+
+def with_hit_rates(snapshot: Mapping[str, int]) -> Dict[str, float]:
+    """A TierStack.stats() snapshot with derived per-level hit rates:
+    ``hit_rate_<level> = hits / (hits + misses)`` for every level that
+    saw traffic (0.0 otherwise)."""
+    out: Dict[str, float] = dict(snapshot)
+    for key in list(snapshot):
+        if not key.startswith("hits_"):
+            continue
+        level = key[len("hits_"):]
+        h = snapshot[key]
+        m = snapshot.get(f"misses_{level}", 0)
+        out[f"hit_rate_{level}"] = (h / (h + m)) if (h + m) else 0.0
+    return out
+
+
+def bench_json(
+    bench: str,
+    result: Dict,
+    tier_stats: Optional[Dict[str, Mapping[str, int]]] = None,
+) -> Path:
+    """Write ``BENCH_<bench>.json`` (the per-PR CI artifact contract).
+
+    ``tier_stats`` maps a label (e.g. ``"paged"``, ``"serve"``) to a
+    ``TierStack.stats()`` / ``KVPager.stats()`` snapshot; each is stored
+    with derived per-level hit rates so the artifact records how the
+    hierarchy behaved for this figure, not only how fast it went."""
+    payload = dict(result)
+    payload["bench"] = bench
+    if tier_stats:
+        payload["tier_stats"] = {
+            label: with_hit_rates(snap) for label, snap in tier_stats.items()}
+    path = Path(f"BENCH_{bench}.json")
+    path.write_text(json.dumps(payload, indent=1))
+    return path

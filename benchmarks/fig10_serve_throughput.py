@@ -39,7 +39,7 @@ from typing import Dict, List
 import jax
 import numpy as np
 
-from benchmarks.common import row
+from benchmarks.common import bench_json, row
 from repro.api import ResilienceSession
 from repro.cluster.topology import VirtualCluster
 from repro.configs import get_config
@@ -49,7 +49,6 @@ from repro.models.registry import get_model
 from repro.serve.kvpage import KVPager
 from repro.serve.scheduler import ServeScheduler
 
-OUT_JSON = Path("BENCH_fig10_serve_throughput.json")
 
 
 def _percentile(xs: List[int], q: float) -> float:
@@ -89,7 +88,7 @@ def _run_config(cfg, model, params, prompts, *, slots, max_len, max_new,
         "parked": sched.stats["parked"],
         "p50_latency_steps": _percentile(lat, 50),
         "p99_latency_steps": _percentile(lat, 99),
-        "tier_stats": {k: v for k, v in pager.stats().items() if v},
+        "tier_stats": dict(pager.stats()),
         "outputs": {int(sid): sched.output(sid) for sid in sched.streams},
     }
     sched.close()
@@ -169,17 +168,26 @@ def bench(arch: str, n_streams: int, slots: int, max_len: int, max_new: int,
         "fast_tier_bytes": fast_bytes,
         "kill_restore_byte_identical": True,
         "restored_parked_streams": restored_parked,
-        "unpaged": {k: v for k, v in unpaged.items() if k != "outputs"},
-        "paged": {k: v for k, v in paged.items() if k != "outputs"},
+        "unpaged": {k: v for k, v in unpaged.items()
+                    if k not in ("outputs", "tier_stats")},
+        "paged": {k: v for k, v in paged.items()
+                  if k not in ("outputs", "tier_stats")},
+        "_tier_stats": {"unpaged": unpaged["tier_stats"],
+                        "paged": paged["tier_stats"]},
     }
     return result
+
+
+def _emit_json(res: Dict) -> Path:
+    tier_stats = res.pop("_tier_stats")
+    return bench_json("fig10_serve_throughput", res, tier_stats=tier_stats)
 
 
 def run(smoke: bool = True):
     """Harness entry (benchmarks/run.py CSV contract)."""
     res = bench(arch="rwkv6-3b", n_streams=16 if smoke else 24, slots=4,
                 max_len=48, max_new=8 if smoke else 16, quantum=4, smoke=smoke)
-    OUT_JSON.write_text(json.dumps(res, indent=1))
+    _emit_json(res)
     up, pg = res["unpaged"], res["paged"]
     return [
         row("serve_unpaged",
@@ -212,7 +220,7 @@ def main():
     res = bench(arch=args.arch, n_streams=n_streams, slots=args.slots,
                 max_len=args.max_len, max_new=max_new, quantum=args.quantum,
                 smoke=args.smoke)
-    OUT_JSON.write_text(json.dumps(res, indent=1))
+    out_path = _emit_json(res)
     up, pg = res["unpaged"], res["paged"]
     print(json.dumps({k: v for k, v in res.items()
                       if k not in ("unpaged", "paged")}, indent=1))
@@ -226,7 +234,7 @@ def main():
           f"{up['max_resident']} at equal fast tier "
           f"({res['fast_tier_bytes']} B); mid-decode kill restored "
           f"{res['restored_parked_streams']} parked streams byte-identically.")
-    print(f"wrote {OUT_JSON}")
+    print(f"wrote {out_path}")
 
 
 if __name__ == "__main__":

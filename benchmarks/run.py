@@ -23,6 +23,7 @@ def modules():
         fig9_xor_vs_namxor,
         fig10_task_resilience,
         fig10_serve_throughput,
+        fig11_prefix_reuse,
         roofline,
     )
 
@@ -36,6 +37,7 @@ def modules():
         "fig9": fig9_xor_vs_namxor,
         "fig10": fig10_task_resilience,
         "fig10serve": fig10_serve_throughput,
+        "fig11prefix": fig11_prefix_reuse,
         "roofline": roofline,
     }
 

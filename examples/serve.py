@@ -1,12 +1,16 @@
-"""Multi-request serving example: continuous batching + tiered KV paging.
+"""Multi-request serving example: continuous batching + tiered KV paging
++ shared-prefix page cache.
 
-Submits more decode streams than there are decode slots, lets the
-ServeScheduler round-robin them — parked streams page their KV caches
-through the TierStack (admission control + hit-rate promotion decide the
-tier) — checkpoints the full multi-stream state through an SCR-style
-session mid-decode, kills the scheduler AND a node, restores everything
-into a fresh scheduler, and verifies every stream's continuation is
-byte-identical to an uninterrupted run.
+Submits more decode streams than there are decode slots — all opening
+with the same "system prompt" — and lets the ServeScheduler round-robin
+them: the first stream's prompt populates the PrefixCache, every later
+stream fetches those shared KV pages instead of recomputing them
+(prefill tokens saved), parked streams page their caches through the
+TierStack as content-addressed page tables (admission control +
+hit-rate promotion decide the tier), the full multi-stream state —
+dedup'd page pool and prefix trie included — is checkpointed through an
+SCR-style session mid-decode, the scheduler AND a node are killed, and
+a fresh scheduler restores everything and finishes byte-identically.
 
   PYTHONPATH=src python examples/serve.py [--arch minicpm3-4b] [--steps 8]
 """
@@ -24,7 +28,7 @@ from repro.configs import get_config
 from repro.core.scr import Strategy
 from repro.io.serialization import serialize_state
 from repro.models.registry import get_model
-from repro.serve import KVPager, ServeScheduler
+from repro.serve import KVPager, PrefixCache, ServeScheduler
 
 
 def main():
@@ -50,12 +54,19 @@ def main():
     def make_scheduler(session):
         pager = KVPager.for_capacity(fast_bytes=(args.slots + 1) * lane_bytes,
                                      page_bytes=8 * 1024)
+        # the prefix cache shares the pager's stack: prefix pages and
+        # parked page tables live under one placement policy
+        prefix = PrefixCache.for_model(pager.stack, cfg, model, max_len,
+                                       page_tokens=4)
         return ServeScheduler(cfg, model, params, slots=args.slots,
                               max_len=max_len, pager=pager, session=session,
-                              quantum=3)
+                              quantum=3, prefix=prefix)
 
     rng = np.random.default_rng(7)
-    prompts = [rng.integers(0, cfg.vocab_size, size=int(rng.integers(3, 8)))
+    system_prompt = rng.integers(0, cfg.vocab_size, size=9).tolist()
+    prompts = [system_prompt
+               + rng.integers(0, cfg.vocab_size,
+                              size=int(rng.integers(3, 8))).tolist()
                for _ in range(args.streams)]
 
     # reference: the same workload decoded with no interruption
@@ -96,6 +107,9 @@ def main():
           f"{cfg.name} ({args.slots} slots, quantum 3): "
           f"{ref_stats['parked']} parks, {ref_stats['resumed']} resumes, "
           f"max {ref_stats['max_resident']} resident")
+    print(f"shared system prompt: {ref_stats['prefix_hits']} prefix hits, "
+          f"{ref_stats['prefill_tokens_saved']} prefill tokens never "
+          f"recomputed ({ref_stats['prefill_tokens']} computed)")
     print(f"OK: killed mid-decode with {parked} streams parked + a node "
           f"loss; restored scheduler finished every stream byte-identically.")
     cluster.teardown()

@@ -1,0 +1,183 @@
+"""Pallas TPU kernel: page-table-indexed decode attention (paged KV).
+
+Serving keeps each stream's KV cache as fixed-size *pages* in a shared
+physical pool instead of one contiguous per-stream buffer; a per-stream
+page table maps logical page j to a physical pool slot.  Two streams
+with a common prompt prefix point their leading table entries at the
+*same* physical pages (the serve/prefix.py radix cache), so the pool
+holds each shared prefix once.
+
+The kernel runs one single-token query per (batch, head) over the pages
+named by that row's table: grid (B, Hq, nPages), innermost dimension
+sequential on TPU so the running-softmax statistics live in VMEM scratch
+across page steps — the same structure as flash_attention.py, with the
+contiguous k-block index map replaced by a scalar-prefetched page-table
+lookup (``PrefetchScalarGridSpec``: the table and lengths are available
+*before* the kernel body, so the pipeline can DMA the right page while
+the previous one computes).  Pages past a sequence's length are skipped
+with ``pl.when``; GQA reads kv head ``h // group`` in the index map.
+
+Numerics match the contiguous-cache paths exactly at f32: the output is
+allclose to ``models.layers.decode_attention`` on the gathered cache and
+to ``flash_attention_pallas`` with a length-1 query (tests +
+benchmarks/fig11_prefix_reuse.py assert both).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.flash_attention import NEG_INF, STATS_LANES
+
+
+def _pa_kernel(
+    pt_ref, len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+    *, scale: float, page: int, npages: int,
+):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    length = len_ref[b]
+    # pages wholly past the valid length never touch the statistics
+    run = (j * page) < length
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0, 0, :].astype(jnp.float32).reshape(1, -1)   # (1, d)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)               # (page, d)
+        v = v_ref[0, :, 0, :]                                   # (page, dv)
+        # zero OOB value rows: p is 0 there, but 0 * garbage != 0
+        v_rows = j * page + jax.lax.broadcasted_iota(jnp.int32, v.shape, 0)
+        v = jnp.where(v_rows < length, v, jnp.zeros_like(v))
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale                                               # (1, page)
+        k_pos = j * page + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(k_pos < length, s, NEG_INF)
+
+        m_prev = m_scr[...]                                     # (1, 128)
+        m_cur = jnp.max(s, axis=-1, keepdims=True)              # (1, 1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new[:, :1])
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, -1, keepdims=True)
+        m_scr[...] = m_new
+        pv = jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        acc_scr[...] = acc_scr[...] * corr[:, :1] + pv
+
+    @pl.when(j == npages - 1)
+    def _fin():
+        l = l_scr[..., :1]
+        o_ref[0] = (acc_scr[...] / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def paged_attention_pallas(
+    q: jax.Array,           # (B, Hq, D) — one new token per sequence
+    k_pages: jax.Array,     # (N, page, Hkv, D) physical key pool
+    v_pages: jax.Array,     # (N, page, Hkv, Dv) physical value pool
+    page_table: jax.Array,  # (B, nP) int32: logical page j -> pool slot
+    lengths: jax.Array,     # (B,) valid token counts (including current)
+    scale: Optional[float] = None,
+    interpret: bool = False,
+) -> jax.Array:
+    b, hq, d = q.shape
+    n, page, hkv, dv = v_pages.shape
+    assert hq % hkv == 0, (hq, hkv)
+    g = hq // hkv
+    npages = page_table.shape[1]
+    scale = float(d ** -0.5) if scale is None else float(scale)
+    # table entries past a row's valid pages never contribute (pl.when
+    # masks the compute) but their index-map lookup still drives a block
+    # DMA — clamp so sentinel/-1 padding can never address out of pool
+    page_table = jnp.clip(page_table.astype(jnp.int32), 0, n - 1)
+
+    kernel = functools.partial(_pa_kernel, scale=scale, page=page,
+                               npages=npages)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,      # page_table, lengths
+        grid=(b, hq, npages),
+        in_specs=[
+            pl.BlockSpec((1, 1, d), lambda bi, h, j, pt, ln: (bi, h, 0)),
+            pl.BlockSpec((1, page, 1, d),
+                         lambda bi, h, j, pt, ln: (pt[bi, j], 0, h // g, 0)),
+            pl.BlockSpec((1, page, 1, dv),
+                         lambda bi, h, j, pt, ln: (pt[bi, j], 0, h // g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, dv), lambda bi, h, j, pt, ln: (bi, h, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1, STATS_LANES), jnp.float32),
+            pltpu.VMEM((1, STATS_LANES), jnp.float32),
+            pltpu.VMEM((1, dv), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hq, dv), q.dtype),
+        interpret=interpret,
+    )(page_table, lengths.astype(jnp.int32), q, k_pages, v_pages)
+
+
+def paged_attention(
+    q: jax.Array,           # (B, Hq, D)
+    k_pages: jax.Array,     # (N, page, Hkv, D)
+    v_pages: jax.Array,     # (N, page, Hkv, Dv)
+    page_table: jax.Array,  # (B, nP) int32
+    lengths: jax.Array,     # (B,)
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Pure-jnp fallback: gather the table's pages into a contiguous view
+    and run exact masked decode attention — the CPU/GPU oracle the Pallas
+    kernel is tested against (and a drop-in for stacks without Mosaic)."""
+    b, hq, d = q.shape
+    _, page, hkv, dv = v_pages.shape
+    g = hq // hkv
+    scale = (d ** -0.5) if scale is None else scale
+    k = jnp.take(k_pages, page_table, axis=0).reshape(b, -1, hkv, d)
+    v = jnp.take(v_pages, page_table, axis=0).reshape(b, -1, hkv, dv)
+    qg = q.reshape(b, hkv, g, d)
+    s = jnp.einsum("bhgd,bshd->bhgs", qg * scale, k).astype(jnp.float32)
+    mask = jnp.arange(k.shape[1])[None, None, None, :] < lengths[:, None, None, None]
+    s = jnp.where(mask, s, NEG_INF)
+    probs = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", probs.astype(v.dtype), v)
+    return out.reshape(b, hq, dv)
+
+
+def paginate_cache(
+    k_cache: jax.Array,     # (B, S, Hkv, D) contiguous per-stream cache
+    v_cache: jax.Array,     # (B, S, Hkv, Dv)
+    page: int,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Lay a contiguous batched cache out as a page pool + identity
+    tables: stream b's logical page j lives in pool slot b*nP + j.  The
+    round trip through :func:`paged_attention_pallas` must match the
+    contiguous path bit-for-bit — the equivalence fig11 asserts before
+    any sharing is introduced."""
+    b, s, hkv, d = k_cache.shape
+    dv = v_cache.shape[-1]
+    npages = pl.cdiv(s, page)
+    pad = npages * page - s
+    if pad:
+        k_cache = jnp.pad(k_cache, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v_cache = jnp.pad(v_cache, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    k_pages = k_cache.reshape(b * npages, page, hkv, d)
+    v_pages = v_cache.reshape(b * npages, page, hkv, dv)
+    table = jnp.arange(b * npages, dtype=jnp.int32).reshape(b, npages)
+    return k_pages, v_pages, table

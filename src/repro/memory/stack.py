@@ -102,8 +102,9 @@ DEFAULT_POLICY: Dict[KeyClass, PlacementRule] = {
 class HitRatePromotion:
     """Hit-rate-driven promotion: a below-home hit re-establishes the key
     at its home level only once the key has accumulated ``k`` hits within
-    the last ``window`` stack accesses (a sliding window over the stack's
-    global access counter).
+    the last ``window`` stack accesses of the key's *class* (each
+    :class:`KeyClass` has its own sliding-window clock, so kv page
+    traffic cannot age a checkpoint fragment's window or vice versa).
 
     ``k=1`` promotes on the first hit — the classic read-promotion, and
     the default so checkpoint-restore reads (each fragment read exactly
@@ -208,8 +209,13 @@ class TierStack:
         self._clean: Dict[str, set] = {n: set() for n in names}
         # sliding-window hit log: key -> ticks of recent read hits, one
         # tick per get(); drives promotion (>= k hits) and eviction order
-        # (no hit in the window = cold, demoted first)
-        self._tick = 0
+        # (no hit in the window = cold, demoted first).  The clock is
+        # PER KEY CLASS: a burst of kv page traffic must not age a
+        # checkpoint fragment's window (and vice versa) — with one global
+        # clock, whichever class is chattier starves the others of
+        # promotion, skewing placement by traffic volume instead of
+        # per-class reuse.
+        self._ticks: Dict[KeyClass, int] = {c: 0 for c in KeyClass}
         self._hit_log: Dict[str, List[int]] = {}
         self.stats = _Stats({
             "evictions": 0, "promotions": 0, "spills": 0,
@@ -341,12 +347,12 @@ class TierStack:
             return len(log) >= self.promotion.k
 
     def _window_hits(self, key: str) -> int:
-        """Hits of ``key`` inside the current sliding window (0 = cold)."""
+        """Hits of ``key`` inside its class's sliding window (0 = cold)."""
         with self._lock:
             log = self._hit_log.get(key)
             if not log:
                 return 0
-            cutoff = self._tick - self.promotion.window
+            cutoff = self._ticks[classify_key(key)] - self.promotion.window
             return sum(1 for t in log if t > cutoff)
 
     # -- write path -------------------------------------------------------- #
@@ -509,12 +515,14 @@ class TierStack:
         start = self._home_idx(rule)
         do_promote = rule.promote if promote is None else promote
         # an explicit promote=False read is a pure observer (checkpoint /
-        # drain traffic): it neither logs a hit nor ages the window
+        # drain traffic): it neither logs a hit nor ages the window.
+        # The window clock advances per key class (see __init__).
         observer = promote is False
+        cls = classify_key(key)
         with self._lock:
             if not observer:
-                self._tick += 1
-            tick = self._tick
+                self._ticks[cls] += 1
+            tick = self._ticks[cls]
         for i in range(start, len(self.levels)):
             name, store = self.levels[i]
             if not store.exists(key):

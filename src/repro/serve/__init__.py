@@ -1,18 +1,25 @@
 from repro.serve.engine import ServeEngine
-from repro.serve.kvpage import KVPager, kv_page_key
+from repro.serve.kvpage import KVPager, kv_page_key, page_digest
+from repro.serve.prefix import LaneLayout, PrefixCache, prefix_page_key
 from repro.serve.scheduler import (
     DecodeStream,
     ServeScheduler,
     StreamState,
+    make_prefill_fn,
     make_slot_serve_step,
 )
 
 __all__ = [
     "DecodeStream",
     "KVPager",
+    "LaneLayout",
+    "PrefixCache",
     "ServeEngine",
     "ServeScheduler",
     "StreamState",
     "kv_page_key",
+    "make_prefill_fn",
     "make_slot_serve_step",
+    "page_digest",
+    "prefix_page_key",
 ]

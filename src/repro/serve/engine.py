@@ -87,16 +87,16 @@ class ServeEngine:
 
     def prefill(self, prompt: jax.Array) -> jax.Array:
         """Submit one stream per prompt row and run the prompts through
-        the lanes (per-lane prefill is just decode steps whose outputs
-        are ignored).  Returns the first predicted token per row."""
+        the lanes.  The scheduler batch-prefills each prompt in one
+        jitted call at admit time, so a single step consumes the last
+        prompt token and emits the first prediction per row."""
         prompt = np.asarray(prompt)
         assert prompt.ndim == 2 and prompt.shape[0] == self.batch, prompt.shape
         self._engine_sids = [
             # one stream per row, bounded only by the lane length
             self.scheduler.submit(prompt[row], max_new=self.max_len)
             for row in range(self.batch)]
-        for _ in range(prompt.shape[1]):
-            self.scheduler.step()
+        self.scheduler.step()
         nxt = np.asarray([s.tokens[s.plen] for s in self._engine_streams()],
                          np.int32)
         self.last = jnp.asarray(nxt)

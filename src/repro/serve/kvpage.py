@@ -1,33 +1,42 @@
-"""KVPager: per-stream KV-cache blocks paged through the TierStack.
+"""KVPager: per-stream KV page *tables* over a content-addressed pool.
 
 The serving path is the first consumer of the DEEP-ER hierarchy from the
-*inference* side: instead of every decode stream's KV cache living in one
-flat resident buffer, a parked stream's lane cache is serialized, split
-into fixed-size pages, and routed through a :class:`~repro.memory.stack.
-TierStack` under the ``kv/`` key class — so placement is policy:
+*inference* side.  A parked stream's lane cache is serialized, split
+into fixed-size pages, and each page is **content-addressed**: its stack
+key is the hash of its bytes —
 
-* admission control (``admission_fraction``) keeps an oversized stream's
-  cache out of the fast tier (it routes straight to the next level
-  instead of wiping the hot working set);
-* hit-rate promotion (:class:`~repro.memory.stack.HitRatePromotion`
-  with ``k >= 2``) keeps the round-robin resume traffic from churning
-  the fast tier: a parked page is read exactly once per park/resume
-  cycle (then rewritten), so resume reads never cross the promotion
-  threshold — only keys with genuine in-window reuse (a shared-prefix
-  page cache is the ROADMAP follow-up) earn their way back up;
-* capacity pressure demotes cold pages downward (LRU within hotness)
-  rather than rejecting new streams — the Fridman-style "hot working set
-  in DRAM, reuse-tracked spill to slower tiers" pattern.
+    kv/page/<digest>.bin
 
-The pager is pure byte plumbing: the scheduler hands it a *lane cache*
-(the batch-1 slice of the stacked decode cache, any model family's
-pytree) and gets it back byte-identically on :meth:`fetch` — bf16 and
-friends round-trip exactly through the checkpoint serializer.
+— so a lane is represented by a *page table* (an ordered list of
+digests), and parking/resuming moves page **references**, not bytes:
+
+* two streams whose lanes share byte-identical pages (the zero tails of
+  half-filled caches, prefix-shaped regions) share one pooled copy,
+  refcounted across tables (``kv_page_dedup_hits``);
+* re-parking a stream whose pages did not change since its last park
+  (the common case for quantum round-robin: only the decoded region is
+  dirty) skips the re-``put`` entirely — per-page dirty tracking by
+  content hash (``kv_clean_page_skips``).  A resume keeps the table as
+  a non-parked *retained baseline* (``fetch(release=False)``) so those
+  clean pages are still pooled when the stream parks again;
+* placement stays policy: pages route through a
+  :class:`~repro.memory.stack.TierStack` under the ``kv/`` key class,
+  so admission control keeps oversized streams out of the fast tier,
+  capacity pressure demotes cold pages, and
+  :class:`~repro.memory.stack.HitRatePromotion` promotes genuinely
+  reused ones (the shared-prefix cache in serve/prefix.py is what makes
+  that reuse real).
+
+The pager stays pure byte plumbing: the scheduler hands it a *lane
+cache* (any model family's pytree) and gets it back byte-identically on
+:meth:`fetch` — bf16 and friends round-trip exactly through the
+checkpoint serializer.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from typing import Any, Dict, Iterator, List, Optional, Tuple
 
 from repro.io.serialization import StateBlob, deserialize_state, serialize_state
@@ -37,16 +46,28 @@ from repro.memory.tiers import CapacityError, MemoryTier, TierKind, TierSpec
 KV_PAGE_BYTES = 64 * 1024  # default paging granularity
 
 
-def kv_page_key(sid: int, page: int) -> str:
-    """Key layout for one page of one stream's KV cache (``kv`` class)."""
-    return f"kv/stream{sid:08d}/page{page:05d}.bin"
+def page_digest(data: bytes) -> str:
+    """Content address of one KV page (the dedup/dirty-tracking unit)."""
+    return hashlib.sha256(data).hexdigest()[:24]
+
+
+def kv_page_key(digest: str) -> str:
+    """Stack key for one pooled KV page (``kv`` key class)."""
+    return f"kv/page/{digest}.bin"
 
 
 @dataclasses.dataclass
-class _ParkedEntry:
+class _PoolPage:
     nbytes: int
-    npages: int
+    refs: int
+
+
+@dataclasses.dataclass
+class _TableEntry:
+    nbytes: int
+    digests: List[str]
     manifest: Dict[str, Any]
+    parked: bool = True     # False: a resumed stream's retained baseline
 
 
 class KVPager:
@@ -66,7 +87,12 @@ class KVPager:
         self.stack = stack
         self.page_bytes = int(page_bytes)
         self._own_stack = own_stack
-        self._parked: Dict[int, _ParkedEntry] = {}
+        self._tables: Dict[int, _TableEntry] = {}
+        self._pages: Dict[str, _PoolPage] = {}
+        self._stats: Dict[str, int] = {
+            "kv_clean_page_skips": 0, "kv_page_dedup_hits": 0,
+            "kv_pages_put": 0,
+        }
 
     # -- construction ----------------------------------------------------- #
 
@@ -113,31 +139,90 @@ class KVPager:
         for off in range(0, len(data), self.page_bytes):
             yield bytes(view[off:off + self.page_bytes])
 
+    def _deref(self, digest: str) -> None:
+        page = self._pages[digest]
+        page.refs -= 1
+        if page.refs <= 0:
+            del self._pages[digest]
+            self.stack.delete(kv_page_key(digest))
+
     def _park_pages(self, sid: int, data: bytes, manifest: Dict[str, Any]) -> int:
-        if sid in self._parked:
-            self.release(sid)
+        """All-or-nothing: acquire/put every page of the lane or leave the
+        pool exactly as it was.  Pages already pooled — shared with
+        another stream, or unchanged since this stream's last park (the
+        retained baseline a resume leaves behind) — are reference bumps,
+        not writes."""
         pages = list(self._page_iter(data))
-        written = 0
+        digests = [page_digest(p) for p in pages]
+        old = self._tables.get(sid)
+        old_digests = set(old.digests) if old is not None else set()
+        acquired: List[str] = []
+        # counters commit only on success: a rolled-back park must not
+        # inflate the pool-activity stats the BENCH artifacts record
+        delta = {"kv_clean_page_skips": 0, "kv_page_dedup_hits": 0,
+                 "kv_pages_put": 0}
         try:
-            for j, page in enumerate(pages):
-                self.stack.put(kv_page_key(sid, j), page)
-                written += 1
+            for digest, page in zip(digests, pages):
+                pooled = self._pages.get(digest)
+                if pooled is not None:
+                    pooled.refs += 1
+                    if digest in old_digests:
+                        delta["kv_clean_page_skips"] += 1
+                    else:
+                        delta["kv_page_dedup_hits"] += 1
+                else:
+                    self.stack.put(kv_page_key(digest), page)
+                    self._pages[digest] = _PoolPage(nbytes=len(page), refs=1)
+                    delta["kv_pages_put"] += 1
+                acquired.append(digest)
         except CapacityError:
-            for j in range(written):
-                self.stack.delete(kv_page_key(sid, j))
+            for digest in acquired:
+                self._deref(digest)
             raise
-        self._parked[sid] = _ParkedEntry(
-            nbytes=len(data), npages=len(pages), manifest=manifest)
+        for key, n in delta.items():
+            self._stats[key] += n
+        if old is not None:
+            for digest in old.digests:
+                self._deref(digest)
+        self._tables[sid] = _TableEntry(
+            nbytes=len(data), digests=digests, manifest=manifest)
         return len(data)
 
     def park(self, sid: int, lane_cache: Any) -> int:
         """Serialize one stream's lane cache and route its pages through
-        the stack.  All-or-nothing: if any page cannot be placed anywhere
-        (single-tier baseline at capacity), every page already written is
-        removed and the CapacityError propagates — a stream is either
-        fully resident or not resident at all.  Returns bytes parked."""
+        the stack.  All-or-nothing: if any new page cannot be placed
+        anywhere (single-tier baseline at capacity), every reference
+        taken so far is dropped and the CapacityError propagates — a
+        stream is either fully resident or not resident at all.
+
+        A park is *required* state; retained dirty-tracking baselines
+        (other resumed streams') are optional — under capacity pressure
+        they are dropped and the park retried once, so the optimization
+        can never cost residency the pre-baseline pager had.  Returns
+        bytes parked (logical, before dedup)."""
         blob = serialize_state(lane_cache)
-        return self._park_pages(sid, blob.data, blob.manifest)
+        try:
+            return self._park_pages(sid, blob.data, blob.manifest)
+        except CapacityError:
+            if not self._drop_retained(except_sid=sid):
+                raise
+        try:
+            return self._park_pages(sid, blob.data, blob.manifest)
+        except CapacityError:
+            # last resort: give up this stream's own baseline (losing
+            # only the dirty-skip win — exactly the pre-baseline state)
+            if not self._drop_retained(except_sid=None):
+                raise
+            return self._park_pages(sid, blob.data, blob.manifest)
+
+    def _drop_retained(self, except_sid: Optional[int]) -> bool:
+        """Release every retained (non-parked) baseline except
+        ``except_sid``'s own; True if anything was freed."""
+        victims = [sid for sid, e in self._tables.items()
+                   if not e.parked and sid != except_sid]
+        for sid in victims:
+            self.release(sid)
+        return bool(victims)
 
     def park_bytes(self, sid: int, blob: bytes, layout_manifest: Dict[str, Any]) -> int:
         """Re-park a stream from its already-serialized bytes (the
@@ -145,7 +230,6 @@ class KVPager:
         ``layout_manifest`` describes the lane template's leaf layout —
         identical for every lane — and the integrity digests are
         recomputed over ``blob``."""
-        import hashlib
         import zlib
 
         if len(blob) != layout_manifest["total_bytes"]:
@@ -157,33 +241,25 @@ class KVPager:
         manifest["sha256"] = hashlib.sha256(blob).hexdigest()
         return self._park_pages(sid, blob, manifest)
 
-    def blob_bytes(self, sid: int) -> bytes:
-        """A parked stream's joined serialized bytes, read as a pure
-        observer (``promote=False``: the checkpoint path must not disturb
-        placement or the hit window) and without releasing the pages."""
-        entry = self._parked.get(sid)
-        if entry is None:
-            raise KeyError(f"stream {sid} is not parked")
-        data = b"".join(self.stack.get(kv_page_key(sid, j), promote=False)
-                        for j in range(entry.npages))
-        if len(data) != entry.nbytes:
-            raise IOError(
-                f"stream {sid}: paged bytes {len(data)} != parked {entry.nbytes}")
-        return data
-
     def fetch(self, sid: int, like: Any, release: bool = True,
               promote: Optional[bool] = None) -> Any:
         """Read a parked stream's pages back through the stack (hit-rate
         promotion applies per page unless ``promote=False`` — the
         checkpoint path reads without disturbing placement) and rebuild
-        the lane cache against the ``like`` template.  ``release`` drops
-        the pages afterwards (the stream is resuming into a slot — its
-        stack copy is stale the moment it decodes again)."""
-        entry = self._parked.get(sid)
-        if entry is None:
+        the lane cache against the ``like`` template.
+
+        ``release=True`` drops the stream's page references afterwards;
+        ``release=False`` *retains* the table as a non-parked baseline:
+        the stream no longer counts as parked (it is resuming into a
+        slot), but its pages stay pooled so the next park re-puts only
+        the pages that actually changed — this is what makes per-page
+        dirty tracking fire in the quantum round-robin cycle.  Pages
+        referenced by other streams stay pooled either way."""
+        entry = self._tables.get(sid)
+        if entry is None or not entry.parked:
             raise KeyError(f"stream {sid} is not parked")
-        parts = [self.stack.get(kv_page_key(sid, j), promote=promote)
-                 for j in range(entry.npages)]
+        parts = [self.stack.get(kv_page_key(d), promote=promote)
+                 for d in entry.digests]
         data = b"".join(parts)
         if len(data) != entry.nbytes:
             raise IOError(
@@ -191,31 +267,70 @@ class KVPager:
         lane = deserialize_state(StateBlob(data=data, manifest=entry.manifest), like)
         if release:
             self.release(sid)
+        else:
+            entry.parked = False
         return lane
 
     def release(self, sid: int) -> None:
-        """Drop a parked stream's pages from every level (idempotent)."""
-        entry = self._parked.pop(sid, None)
+        """Drop one stream's table and page references (idempotent); a
+        page leaves the pool — and every tier — only when its last
+        reference goes."""
+        entry = self._tables.pop(sid, None)
         if entry is None:
             return
-        for j in range(entry.npages):
-            self.stack.delete(kv_page_key(sid, j))
+        for digest in entry.digests:
+            self._deref(digest)
 
     # -- introspection ----------------------------------------------------- #
 
     def parked_sids(self) -> List[int]:
-        return sorted(self._parked)
+        return sorted(sid for sid, e in self._tables.items() if e.parked)
+
+    def table_sids(self) -> List[int]:
+        """Every stream holding pool references: parked streams plus
+        resumed streams whose retained dirty-tracking baseline is live."""
+        return sorted(self._tables)
 
     def is_parked(self, sid: int) -> bool:
-        return sid in self._parked
+        entry = self._tables.get(sid)
+        return entry is not None and entry.parked
+
+    def page_table(self, sid: int) -> List[str]:
+        """A stream's ordered page digests (its page table)."""
+        entry = self._tables.get(sid)
+        if entry is None:
+            raise KeyError(f"stream {sid} has no page table")
+        return list(entry.digests)
+
+    def parked_nbytes(self, sid: int) -> int:
+        return self._tables[sid].nbytes
+
+    def page_payload(self, digest: str) -> bytes:
+        """One pooled page's bytes, read as a pure observer."""
+        if digest not in self._pages:
+            raise KeyError(digest)
+        return self.stack.get(kv_page_key(digest), promote=False)
 
     def parked_bytes(self) -> int:
-        return sum(e.nbytes for e in self._parked.values())
+        """Logical bytes parked (sum of parked lane sizes, before dedup)."""
+        return sum(e.nbytes for e in self._tables.values() if e.parked)
+
+    def pooled_bytes(self) -> int:
+        """Physical bytes pooled after dedup — what the tiers actually
+        hold; ``parked_bytes() - pooled_bytes()`` is the sharing win."""
+        return sum(p.nbytes for p in self._pages.values())
+
+    def pooled_pages(self) -> int:
+        return len(self._pages)
 
     def stats(self) -> Dict[str, int]:
-        """The underlying stack's counter snapshot (hits/misses per level,
-        promotions, evictions, admission routing)."""
-        return self.stack.stats()
+        """The stack's counter snapshot (hits/misses per level,
+        promotions, evictions, admission routing) merged with the pager's
+        own page-pool counters (dirty-skip, dedup, puts)."""
+        out = dict(self.stack.stats())
+        out.update(self._stats)
+        out["kv_pages_pooled"] = len(self._pages)
+        return out
 
     def level_used(self) -> Dict[str, int]:
         return {name: store.used_bytes() for name, store in self.stack.levels}

@@ -1,0 +1,476 @@
+"""PrefixCache: shared-prefix KV pages, content-addressed through the stack.
+
+DEEP-ER's hierarchy argument (and DAOS/Fridman's: keep the *reused* hot
+set in fast memory) only bites when data is genuinely reused.  The
+serving KV path had none: a parked page was read exactly once per
+park/resume cycle, so ``HitRatePromotion`` could never promote and the
+placement machinery idled.  This module creates the reuse: decode
+streams that share a prompt prefix — the same system prompt, the same
+few-shot preamble — fetch the *same* KV pages instead of recomputing
+(and re-storing) them per stream.
+
+Structure: a radix tree over token *pages* (``page_tokens`` tokens per
+node).  Each node covers tokens ``[0, end)`` of some prompt, is
+content-addressed by a chain digest (parent digest + this node's
+tokens — equal prefixes collide into one node regardless of which
+stream inserted them), and stores its KV payload through a
+:class:`~repro.memory.stack.TierStack` under the ``kv/`` key class:
+
+    kv/prefix/<chain-digest>.bin
+
+so *placement is policy*: a prefix page that several streams fetch
+crosses the hit-rate promotion threshold and earns fast-tier residency;
+a once-used page ages out, demotes under pressure, and is eventually
+evicted — exactly the reuse-follows-placement story of the paper's
+hierarchy, measured in benchmarks/fig11_prefix_reuse.py.
+
+Payload modes, chosen by the lane-cache layout (:class:`LaneLayout`):
+
+* **slice** — every cache leaf has a ``kv_seq`` axis (dense/moe
+  attention caches): a node stores only its own token-range slice, and
+  a lookup reassembles the prefix from the node path.  Causality makes
+  the slices position-local, so pages compose.
+* **snapshot** — recurrent or hybrid state (rwkv WKV state, mamba SSD
+  state, enc-dec cross caches): a node stores the *whole* lane state at
+  its boundary; a lookup restores the deepest matching node only.  The
+  state after ``t`` tokens is a pure function of ``tokens[:t]``, so
+  snapshots are exactly shareable — pricier per node, which is the
+  documented tradeoff.
+
+Refcounting: a stream *acquires* every node on its matched/inserted
+path at admit and *releases* at finish (`ServeScheduler` drives this).
+Eviction (LRU over the cache's byte budget) only considers leaf nodes
+with zero stream references — a page shared with a still-running stream
+survives its sibling finishing, and interior nodes survive their
+children (a child slice is useless without its ancestors).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.io.serialization import StateBlob, deserialize_state, serialize_state
+from repro.memory.stack import TierStack
+from repro.memory.tiers import CapacityError
+
+
+def prefix_page_key(digest: str) -> str:
+    """Stack key for one prefix node's payload (``kv`` key class)."""
+    return f"kv/prefix/{digest}.bin"
+
+
+def chain_digest(parent_digest: str, tokens: Sequence[int]) -> str:
+    """Content address of a prefix node: hash of the parent's digest and
+    this node's token chunk — equal token prefixes produce equal chains
+    no matter which stream (or process) inserted them."""
+    h = hashlib.sha256()
+    h.update(parent_digest.encode())
+    h.update(np.asarray(list(tokens), np.int64).tobytes())
+    return h.hexdigest()[:24]
+
+
+class LaneLayout:
+    """Token-slicing view over one decode lane's cache pytree.
+
+    Built from the model's cache template and its logical axes
+    (``model.cache_axes``): leaves whose axes name ``kv_seq`` can be
+    sliced per token range; if *every* leaf can, the layout supports
+    slice-mode prefix pages, otherwise snapshot mode.
+    """
+
+    def __init__(self, template: Any, axes: Any):
+        leaves, self.treedef = jax.tree_util.tree_flatten(template)
+        axes_leaves, axes_def = jax.tree_util.tree_flatten(
+            axes, is_leaf=lambda x: isinstance(x, tuple))
+        if len(axes_leaves) != len(leaves):
+            raise ValueError(
+                f"cache template has {len(leaves)} leaves but axes describe "
+                f"{len(axes_leaves)}")
+        self.template_leaves = [np.asarray(l) for l in leaves]
+        self.seq_axes: List[Optional[int]] = [
+            ax.index("kv_seq") if "kv_seq" in ax else None for ax in axes_leaves]
+        self.sliceable = all(a is not None for a in self.seq_axes)
+
+    @classmethod
+    def for_model(cls, cfg, model, max_len: int) -> "LaneLayout":
+        template = jax.device_get(model.init_cache(cfg, 1, max_len))
+        return cls(template, model.cache_axes(cfg, 1, max_len))
+
+    def zero_lane(self) -> Any:
+        """A fresh host-side lane (mutable numpy copies of the template)."""
+        return jax.tree_util.tree_unflatten(
+            self.treedef, [l.copy() for l in self.template_leaves])
+
+    def _index(self, leaf_i: int, t0: int, t1: int) -> Tuple:
+        ax = self.seq_axes[leaf_i]
+        idx = [slice(None)] * self.template_leaves[leaf_i].ndim
+        idx[ax] = slice(t0, t1)
+        return tuple(idx)
+
+    def extract(self, lane: Any, t0: int, t1: int) -> Any:
+        """The ``[t0, t1)`` token slice of every leaf (host arrays)."""
+        assert self.sliceable
+        leaves = jax.tree_util.tree_leaves(lane)
+        out = [np.asarray(l)[self._index(i, t0, t1)].copy()
+               for i, l in enumerate(leaves)]
+        return jax.tree_util.tree_unflatten(self.treedef, out)
+
+    def inject(self, lane: Any, part: Any, t0: int, t1: int) -> None:
+        """Write a token slice back into a mutable host lane in place."""
+        assert self.sliceable
+        leaves = jax.tree_util.tree_leaves(lane)
+        parts = jax.tree_util.tree_leaves(part)
+        for i, (l, p) in enumerate(zip(leaves, parts)):
+            l[self._index(i, t0, t1)] = p
+
+
+@dataclasses.dataclass
+class _Node:
+    digest: str
+    parent: Optional["_Node"]
+    chunk: Tuple[int, ...]
+    end: int                        # tokens [0, end) covered by this path
+    nbytes: int
+    crc32: int = 0                  # insert-time payload digest (integrity)
+    refs: int = 0                   # live stream references
+    last_used: int = 0              # cache clock, for LRU eviction
+    children: Dict[Tuple[int, ...], "_Node"] = dataclasses.field(
+        default_factory=dict)
+
+
+class PrefixCache:
+    """Radix cache of shared-prefix KV pages over a TierStack.
+
+    ``stack`` carries the payloads (typically the serving
+    :class:`~repro.serve.kvpage.KVPager`'s stack, so prefix pages and
+    parked pages share one placement policy); ``layout`` describes the
+    lane cache; ``page_tokens`` is the trie fan-out granularity;
+    ``capacity_bytes`` bounds the cached payload bytes (``None`` =
+    unbounded — the stack's own eviction still applies *placement*
+    pressure, this budget bounds the *namespace*).
+    """
+
+    def __init__(self, stack: TierStack, layout: LaneLayout,
+                 page_tokens: int = 8,
+                 capacity_bytes: Optional[int] = None):
+        if page_tokens < 1:
+            raise ValueError("page_tokens must be >= 1")
+        self.stack = stack
+        self.layout = layout
+        self.page_tokens = int(page_tokens)
+        self.capacity_bytes = capacity_bytes
+        self.mode = "slice" if layout.sliceable else "snapshot"
+        self._root: Dict[Tuple[int, ...], _Node] = {}
+        self._nodes: Dict[str, _Node] = {}
+        self._stream_refs: Dict[int, List[str]] = {}
+        self._clock = 0
+        self.stats: Dict[str, int] = {
+            "hits": 0, "misses": 0, "tokens_reused": 0, "pages_inserted": 0,
+            "pages_evicted": 0, "insert_rejected": 0, "bytes_cached": 0,
+        }
+        if self.mode == "slice":
+            part = layout.extract(layout.zero_lane(), 0, self.page_tokens)
+            self._part_template = part
+            self._part_manifest = serialize_state(part).manifest
+        else:
+            self._part_template = None
+            self._part_manifest = serialize_state(
+                jax.tree_util.tree_unflatten(
+                    layout.treedef, layout.template_leaves)).manifest
+
+    # default trie budget for for_model: enough for many distinct shared
+    # prefixes, small enough that a long-running server cannot grow the
+    # namespace (and the bottom tier) without bound — the trie-level LRU
+    # eviction is live by default, not dead code behind an opt-in
+    DEFAULT_CAPACITY_BYTES = 64 << 20
+
+    @classmethod
+    def for_model(cls, stack: TierStack, cfg, model, max_len: int,
+                  page_tokens: int = 8,
+                  capacity_bytes: Optional[int] = DEFAULT_CAPACITY_BYTES,
+                  ) -> "PrefixCache":
+        return cls(stack, LaneLayout.for_model(cfg, model, max_len),
+                   page_tokens=page_tokens, capacity_bytes=capacity_bytes)
+
+    # -- lookup ------------------------------------------------------------ #
+
+    def match(self, tokens: Sequence[int]) -> Tuple[int, List[_Node]]:
+        """Longest cached full-page prefix of ``tokens``: returns the
+        covered token count and the node path (empty on a miss)."""
+        tokens = [int(t) for t in tokens]
+        pt = self.page_tokens
+        path: List[_Node] = []
+        level = self._root
+        for j in range(len(tokens) // pt):
+            chunk = tuple(tokens[j * pt:(j + 1) * pt])
+            node = level.get(chunk)
+            if node is None:
+                break
+            path.append(node)
+            level = node.children
+        self._clock += 1
+        for node in path:
+            node.last_used = self._clock
+        if path:
+            self.stats["hits"] += 1
+        else:
+            self.stats["misses"] += 1
+        return (path[-1].end if path else 0), path
+
+    def fetch_into(self, path: List[_Node], lane: Any) -> int:
+        """Materialize a matched path into a mutable host lane: slice mode
+        injects every node's token range, snapshot mode restores the
+        deepest *fetchable* node's state (one read — the intermediate
+        snapshots are never needed, and reading them would both waste a
+        full lane's bytes per node and push never-used payloads toward
+        promotion).  Reads go through the stack with default promotion —
+        THIS is the reuse that lets hit-rate promotion earn fast-tier
+        residency for shared pages.  Returns the tokens covered (may be
+        shorter than the match if a payload vanished under extreme stack
+        pressure — the path is then pruned and the remainder is simply
+        recomputed by prefill)."""
+        covered = 0
+        if self.mode == "snapshot":
+            for node in reversed(path):
+                try:
+                    data = self.stack.get(prefix_page_key(node.digest))
+                except (KeyError, IOError):
+                    self._drop_subtree(node)
+                    continue
+                part = self._deserialize(data, node)
+                for dst, src in zip(jax.tree_util.tree_leaves(lane),
+                                    jax.tree_util.tree_leaves(part)):
+                    dst[...] = src
+                covered = node.end
+                break
+        else:
+            for node in path:
+                try:
+                    data = self.stack.get(prefix_page_key(node.digest))
+                except (KeyError, IOError):
+                    self._drop_subtree(node)
+                    break
+                self.layout.inject(lane, self._deserialize(data, node),
+                                   node.end - len(node.chunk), node.end)
+                covered = node.end
+        self.stats["tokens_reused"] += covered
+        return covered
+
+    def _deserialize(self, data: bytes, node: _Node) -> Any:
+        # the manifest carries the INSERT-time crc, so the integrity
+        # check inside deserialize_state actually detects a payload
+        # corrupted between insert and fetch (recomputing it here from
+        # the fetched bytes would make the check tautological)
+        manifest = dict(self._part_manifest)
+        manifest["crc32"] = node.crc32
+        like = (self._part_template if self.mode == "slice"
+                else jax.tree_util.tree_unflatten(
+                    self.layout.treedef, self.layout.template_leaves))
+        return deserialize_state(StateBlob(data=data, manifest=manifest), like)
+
+    # -- insertion --------------------------------------------------------- #
+
+    def extend(self, tokens: Sequence[int], upto: int, lane: Any,
+               sid: Optional[int] = None) -> List[_Node]:
+        """Register pages covering ``tokens[:upto]`` (``upto`` a multiple
+        of ``page_tokens``) from a lane holding KV for at least that
+        range.  Existing path nodes are reused; missing ones are created
+        with payloads cut from ``lane`` (slice mode) or — snapshot mode —
+        only the *deepest* new boundary gets the lane snapshot (callers
+        extend page-by-page during prefill so every boundary is captured
+        with the state *at* that boundary).  ``sid`` acquires the whole
+        path for that stream *before* the eviction sweep runs — a freshly
+        inserted page must never be evicted out from under its inserter.
+        Returns the full node path."""
+        tokens = [int(t) for t in tokens]
+        pt = self.page_tokens
+        assert upto % pt == 0 and upto <= len(tokens)
+        path: List[_Node] = []
+        level = self._root
+        parent: Optional[_Node] = None
+        self._clock += 1
+        for j in range(upto // pt):
+            chunk = tuple(tokens[j * pt:(j + 1) * pt])
+            node = level.get(chunk)
+            if node is None:
+                end = (j + 1) * pt
+                if self.mode == "snapshot" and end != upto:
+                    # no state for an intermediate boundary in hand; the
+                    # page-by-page extend during prefill fills these in
+                    break
+                payload, crc = self._payload(lane, end)
+                digest = chain_digest(parent.digest if parent else "", chunk)
+                try:
+                    self.stack.put(prefix_page_key(digest), payload)
+                except CapacityError:
+                    self.stats["insert_rejected"] += 1
+                    break
+                node = _Node(digest=digest, parent=parent, chunk=chunk,
+                             end=end, nbytes=len(payload), crc32=crc)
+                level[chunk] = node
+                self._nodes[digest] = node
+                self.stats["pages_inserted"] += 1
+                self.stats["bytes_cached"] += node.nbytes
+            node.last_used = self._clock
+            path.append(node)
+            parent, level = node, node.children
+        if sid is not None:
+            self.acquire(sid, path)
+        self._maybe_evict()
+        return path
+
+    def _payload(self, lane: Any, end: int) -> Tuple[bytes, int]:
+        if self.mode == "slice":
+            blob = serialize_state(
+                self.layout.extract(lane, end - self.page_tokens, end))
+        else:
+            blob = serialize_state(jax.tree_util.tree_map(np.asarray, lane))
+        return blob.data, int(blob.manifest["crc32"])
+
+    # -- stream references -------------------------------------------------- #
+
+    def acquire(self, sid: int, path: List[_Node]) -> None:
+        """A stream holds its prefix path from admit to finish: a page
+        shared with a live stream is never an eviction candidate.
+        Idempotent per (stream, node) — the page-by-page extend loop and
+        the match+extend pair may both present the same node, and
+        ``refs`` must stay 'number of live streams holding this page'."""
+        held = self._stream_refs.setdefault(sid, [])
+        for node in path:
+            if node.digest in held:
+                continue
+            node.refs += 1
+            held.append(node.digest)
+
+    def release_stream(self, sid: int) -> None:
+        """Drop one stream's references (idempotent).  The pages stay
+        cached — that is the point — but become evictable once no live
+        stream holds them."""
+        for digest in self._stream_refs.pop(sid, []):
+            node = self._nodes.get(digest)
+            if node is not None:
+                node.refs = max(0, node.refs - 1)
+
+    def stream_refs(self) -> Dict[int, List[str]]:
+        """Live stream -> held node digests (checkpoint meta)."""
+        return {sid: list(ds) for sid, ds in self._stream_refs.items() if ds}
+
+    # -- eviction ------------------------------------------------------------ #
+
+    def _maybe_evict(self) -> None:
+        if self.capacity_bytes is None:
+            return
+        while self.stats["bytes_cached"] > self.capacity_bytes:
+            victim = None
+            for node in self._nodes.values():
+                if node.children or node.refs > 0:
+                    continue
+                if victim is None or node.last_used < victim.last_used:
+                    victim = node
+            if victim is None:
+                return      # everything left is referenced or interior
+            self._drop_node(victim)
+
+    def _drop_node(self, node: _Node) -> None:
+        assert not node.children
+        self.stack.delete(prefix_page_key(node.digest))
+        (node.parent.children if node.parent else self._root).pop(
+            node.chunk, None)
+        self._nodes.pop(node.digest, None)
+        if node.refs:
+            # force-dropped under live references (payload vanished):
+            # purge the digest from every holder, or a later re-insert of
+            # the same content — same chain digest — would absorb their
+            # releases and become evictable under a live stream
+            for held in self._stream_refs.values():
+                if node.digest in held:
+                    held.remove(node.digest)
+        self.stats["bytes_cached"] -= node.nbytes
+        self.stats["pages_evicted"] += 1
+
+    def _drop_subtree(self, node: _Node) -> None:
+        for child in list(node.children.values()):
+            self._drop_subtree(child)
+        self._drop_node(node)
+
+    # -- introspection ------------------------------------------------------- #
+
+    def __len__(self) -> int:
+        return len(self._nodes)
+
+    def node(self, digest: str) -> Optional[_Node]:
+        return self._nodes.get(digest)
+
+    def cached_bytes(self) -> int:
+        return self.stats["bytes_cached"]
+
+    # -- checkpoint / restore ------------------------------------------------ #
+
+    def export_nodes(self) -> Tuple[List[Dict[str, Any]], List[bytes]]:
+        """The trie as (node records, payload bytes) — parents before
+        children, payloads read as pure observers (the checkpoint path
+        must not disturb placement or the hit windows).  A node whose
+        payload vanished under extreme stack pressure is pruned, exactly
+        as on the fetch path — a checkpoint must not fail because a
+        cache entry did."""
+        records: List[Dict[str, Any]] = []
+        payloads: List[bytes] = []
+        for node in sorted(self._nodes.values(), key=lambda n: n.end):
+            if node.digest not in self._nodes:
+                continue    # removed with an ancestor pruned below
+            try:
+                payload = self.stack.get(prefix_page_key(node.digest),
+                                         promote=False)
+            except (KeyError, IOError):
+                self._drop_subtree(node)
+                continue
+            records.append({
+                "digest": node.digest,
+                "parent": node.parent.digest if node.parent else "",
+                "chunk": list(node.chunk),
+                "end": node.end,
+                "nbytes": node.nbytes,
+                "crc32": node.crc32,
+            })
+            payloads.append(payload)
+        return records, payloads
+
+    def restore_nodes(self, records: List[Dict[str, Any]],
+                      payloads: List[bytes],
+                      stream_refs: Dict[int, List[str]]) -> None:
+        """Rebuild the trie (and re-put every payload through the stack)
+        from a checkpoint export; stream references are re-acquired so
+        the restored scheduler's refcounts match the saved ones."""
+        self.clear()
+        import zlib
+        for rec, payload in zip(records, payloads):
+            parent = self._nodes.get(rec["parent"]) if rec["parent"] else None
+            chunk = tuple(int(t) for t in rec["chunk"])
+            self.stack.put(prefix_page_key(rec["digest"]), payload)
+            node = _Node(digest=rec["digest"], parent=parent, chunk=chunk,
+                         end=int(rec["end"]), nbytes=int(rec["nbytes"]),
+                         crc32=int(rec.get("crc32",
+                                           zlib.crc32(payload) & 0xFFFFFFFF)))
+            (parent.children if parent else self._root)[chunk] = node
+            self._nodes[node.digest] = node
+            self.stats["bytes_cached"] += node.nbytes
+        for sid, digests in stream_refs.items():
+            held = self._stream_refs.setdefault(int(sid), [])
+            for digest in digests:
+                node = self._nodes.get(digest)
+                if node is not None:
+                    node.refs += 1
+                    held.append(digest)
+
+    def clear(self) -> None:
+        for digest in list(self._nodes):
+            self.stack.delete(prefix_page_key(digest))
+        self._root.clear()
+        self._nodes.clear()
+        self._stream_refs.clear()
+        self.stats["bytes_cached"] = 0

@@ -9,17 +9,25 @@ moves streams through them with continuous batching:
 * streams join and leave at **step boundaries** (a freed slot is reused
   by the next queued stream the very next step — no padding, no batch
   re-formation, no recompilation);
-* per-lane positions mean a joining stream prefills its prompt in its
-  lane while neighbouring lanes keep decoding — prefill is just decode
-  steps whose outputs are ignored;
+* a joining stream's prompt is **prefilled in one jitted call** (a
+  masked `lax.scan` over the padded suffix, bucketed so a handful of
+  compilations cover every prompt length) instead of occupying the slot
+  for one scheduler step per prompt token;
+* with a :class:`~repro.serve.prefix.PrefixCache` attached, the shared
+  part of the prompt is not computed at all: the scheduler fetches the
+  cached prefix pages (content-addressed through the tier stack — the
+  reuse that earns fast-tier residency via hit-rate promotion), prefills
+  only the **non-shared suffix**, and registers the new pages for the
+  next stream (``stats["prefill_tokens_saved"]``);
 * with more live streams than slots, the scheduler round-robins: after
   ``quantum`` steps an active stream is *parked* — its lane cache paged
-  through the :class:`~repro.serve.kvpage.KVPager` into the tier stack —
-  and the next queued stream takes the slot.  Admission control and
-  hit-rate promotion decide where parked pages live (see kvpage.py).
+  through the :class:`~repro.serve.kvpage.KVPager` into the tier stack
+  as content-addressed pages, so a re-park of unchanged pages moves page
+  *references*, not bytes.
 
 The whole multi-stream state — every lane cache, every stream's token
-history and cursor, the run queue, and every parked stream's pages — is
+history and cursor, the run queue, the **dedup'd page pool** of every
+parked stream's table, and the prefix-cache trie with its refcounts — is
 checkpointed through one :class:`~repro.api.session.ResilienceSession`
 transaction, and :meth:`restore` rebuilds all of it from the checkpoint
 alone (stream set included, via the descriptor's ``meta``): a killed
@@ -47,6 +55,9 @@ from repro.configs.base import ArchConfig
 from repro.memory.tiers import CapacityError
 from repro.models.registry import ModelApi
 from repro.serve.kvpage import KVPager
+from repro.serve.prefix import PrefixCache
+
+PREFILL_BUCKET = 8  # prompt-suffix pad granularity (compilations per bucket)
 
 
 def make_slot_serve_step(cfg: ArchConfig, model: ModelApi) -> Callable:
@@ -54,9 +65,9 @@ def make_slot_serve_step(cfg: ArchConfig, model: ModelApi) -> Callable:
 
     Each lane is a batch-1 ``model.decode_step`` with its *own* scalar
     position, so the slot axis can hold streams at arbitrary, unequal
-    offsets (joining, prefilling, decoding) in one fixed-shape jitted
-    call — the compiled batching rule for ``dynamic_update_slice`` turns
-    the per-lane cache updates into one scatter.
+    offsets in one fixed-shape jitted call — the compiled batching rule
+    for ``dynamic_update_slice`` turns the per-lane cache updates into
+    one scatter.
     """
 
     def one(params, lane_cache, token, pos):
@@ -64,6 +75,36 @@ def make_slot_serve_step(cfg: ArchConfig, model: ModelApi) -> Callable:
         return logits.argmax(axis=-1).astype(jnp.int32), lane_cache
 
     return jax.vmap(one, in_axes=(None, 0, 0, 0))
+
+
+def make_prefill_fn(cfg: ArchConfig, model: ModelApi) -> Callable:
+    """Single-jit batched prefill of one lane's prompt suffix.
+
+    A masked ``lax.scan`` over a zero-padded token buffer: every scan
+    step runs the same ``model.decode_step`` the serve loop uses (so the
+    lane cache is bit-identical to token-by-token prefill), and steps at
+    or past ``n_valid`` keep the carried cache unchanged.  The buffer
+    length is padded to :data:`PREFILL_BUCKET` multiples by the caller,
+    so a handful of compilations cover every prompt length.
+    """
+
+    def prefill(params, lane_cache, tokens, start, n_valid):
+        def body(carry, i):
+            cache, pos = carry
+            tok = jax.lax.dynamic_index_in_dim(tokens, i, keepdims=False)
+            _, new_cache = model.decode_step(params, cache, tok[None], pos, cfg)
+            valid = i < n_valid
+            cache = jax.tree_util.tree_map(
+                lambda n, o: jnp.where(valid, n, o), new_cache, cache)
+            pos = pos + jnp.where(valid, 1, 0).astype(pos.dtype)
+            return (cache, pos), None
+
+        idx = jnp.arange(tokens.shape[0], dtype=jnp.int32)
+        (cache, _), _ = jax.lax.scan(
+            body, (lane_cache, jnp.asarray(start, jnp.int32)), idx)
+        return cache
+
+    return prefill
 
 
 class StreamState(str, enum.Enum):
@@ -121,6 +162,11 @@ class ServeScheduler:
     (flat unpaged stack at capacity) leaves the stream running — counted
     in ``stats["park_failures"]`` — which is exactly the head-of-line
     blocking the paged configuration exists to remove.
+
+    ``prefix`` attaches a :class:`~repro.serve.prefix.PrefixCache`
+    (usually over the pager's own stack, so prefix pages and parked
+    pages share one placement policy); prompts then skip their cached
+    shared prefix entirely.
     """
 
     def __init__(
@@ -133,6 +179,7 @@ class ServeScheduler:
         pager: Optional[KVPager] = None,
         session: Optional[ResilienceSession] = None,
         quantum: int = 0,
+        prefix: Optional[PrefixCache] = None,
     ):
         if slots < 1:
             raise ValueError("need at least one decode slot")
@@ -146,6 +193,7 @@ class ServeScheduler:
         self.pager = pager
         self.session = session
         self.quantum = int(quantum)
+        self.prefix = prefix
         lane = model.init_cache(cfg, 1, max_len)
         self._lane_template = jax.device_get(lane)
         # every lane serializes to the same layout; cached once so the
@@ -156,6 +204,7 @@ class ServeScheduler:
         self.slots_cache = jax.tree_util.tree_map(
             lambda l: jnp.stack([l] * self.slots), lane)
         self._step_fn = jax.jit(make_slot_serve_step(cfg, model))
+        self._prefill_fn = jax.jit(make_prefill_fn(cfg, model))
         self._slot_sid: List[Optional[int]] = [None] * self.slots
         self.streams: Dict[int, DecodeStream] = {}
         self._runq: Deque[int] = deque()
@@ -164,6 +213,8 @@ class ServeScheduler:
         self.stats: Dict[str, int] = {
             "steps": 0, "joined": 0, "parked": 0, "resumed": 0,
             "finished": 0, "park_failures": 0, "max_resident": 0,
+            "prefill_calls": 0, "prefill_tokens": 0,
+            "prefix_hits": 0, "prefill_tokens_saved": 0,
         }
 
     # -- submission -------------------------------------------------------- #
@@ -189,10 +240,6 @@ class ServeScheduler:
 
     # -- slot management --------------------------------------------------- #
 
-    def _zero_lane(self, slot: int) -> None:
-        self.slots_cache = jax.tree_util.tree_map(
-            lambda l: l.at[slot].set(jnp.zeros_like(l[slot])), self.slots_cache)
-
     def _lane(self, slot: int) -> Any:
         return jax.tree_util.tree_map(
             lambda l: jax.device_get(l[slot]), self.slots_cache)
@@ -202,14 +249,77 @@ class ServeScheduler:
             lambda l, ln: l.at[slot].set(jnp.asarray(ln)),
             self.slots_cache, lane)
 
+    # -- prefill ----------------------------------------------------------- #
+
+    def _run_prefill(self, lane: Any, tokens: List[int], t0: int, t1: int) -> Any:
+        """Consume ``tokens[t0:t1]`` into a device lane in one jitted call
+        (padded to the bucket size so compilations are bounded)."""
+        n = t1 - t0
+        if n <= 0:
+            return lane
+        pad = ((n + PREFILL_BUCKET - 1) // PREFILL_BUCKET) * PREFILL_BUCKET
+        buf = np.zeros((pad,), np.int32)
+        buf[:n] = tokens[t0:t1]
+        self.stats["prefill_calls"] += 1
+        self.stats["prefill_tokens"] += n
+        return self._prefill_fn(self.params, lane, jnp.asarray(buf),
+                                np.int32(t0), np.int32(n))
+
+    def _prefilled_lane(self, s: DecodeStream) -> Any:
+        """Build a joining stream's lane: fetch the shared prompt prefix
+        from the prefix cache (zero compute for those tokens), batch-
+        prefill the non-shared suffix, and register the prompt's new
+        pages for the streams that come after."""
+        target = s.plen - 1        # the last prompt token runs in the slot
+        covered = 0
+        host_lane = None
+        if self.prefix is not None and target > 0:
+            _, path = self.prefix.match(s.tokens[:target])
+            if path:
+                host_lane = self.prefix.layout.zero_lane()
+                covered = self.prefix.fetch_into(path, host_lane)
+                if covered:
+                    self.prefix.acquire(s.sid, path[:covered // self.prefix.page_tokens])
+                    self.stats["prefix_hits"] += 1
+                    self.stats["prefill_tokens_saved"] += covered
+        lane = jax.tree_util.tree_map(
+            jnp.asarray, host_lane if host_lane is not None else self._lane_template)
+        if self.prefix is not None and self.prefix.mode == "snapshot":
+            # snapshot pages need the state *at* each boundary: prefill
+            # page-by-page (one fixed-size compile, reused) and register
+            # every full-page boundary as we pass it
+            pt = self.prefix.page_tokens
+            j = covered
+            while j + pt <= target:
+                lane = self._run_prefill(lane, s.tokens, j, j + pt)
+                j += pt
+                self.prefix.extend(s.tokens[:j], j, jax.device_get(lane),
+                                   sid=s.sid)
+            lane = self._run_prefill(lane, s.tokens, j, target)
+        else:
+            lane = self._run_prefill(lane, s.tokens, covered, target)
+            if self.prefix is not None and target > 0:
+                pt = self.prefix.page_tokens
+                upto = (target // pt) * pt
+                if upto > covered:
+                    self.prefix.extend(s.tokens[:upto], upto,
+                                       jax.device_get(lane), sid=s.sid)
+        s.pos = max(target, 0)
+        return lane
+
+    # -- admit / park ------------------------------------------------------- #
+
     def _admit(self, sid: int, slot: int) -> None:
         s = self.streams[sid]
         if s.state is StreamState.PARKED:
             assert self.pager is not None
-            self._set_lane(slot, self.pager.fetch(sid, self._lane_template))
+            # release=False retains the page table as the dirty-tracking
+            # baseline: the next park re-puts only pages that changed
+            self._set_lane(slot, self.pager.fetch(sid, self._lane_template,
+                                                  release=False))
             self.stats["resumed"] += 1
         else:
-            self._zero_lane(slot)
+            self._set_lane(slot, self._prefilled_lane(s))
             self.stats["joined"] += 1
         s.state, s.slot, s.ran = StreamState.ACTIVE, slot, 0
         self._slot_sid[slot] = sid
@@ -258,6 +368,10 @@ class ServeScheduler:
         s.state, s.slot = StreamState.DONE, None
         s.finished_step = self.step_count
         self.stats["finished"] += 1
+        if self.prefix is not None:
+            self.prefix.release_stream(s.sid)
+        if self.pager is not None:
+            self.pager.release(s.sid)   # retained baseline, if any
 
     def resident_streams(self) -> int:
         """Streams whose KV currently lives somewhere in the hierarchy:
@@ -324,17 +438,19 @@ class ServeScheduler:
     # -- checkpoint / restore ----------------------------------------------- #
     #
     # Fixed-shape state (the serializer cross-checks template shapes):
-    #   slots    stacked lane caches, exactly as resident
-    #   tokens   (S, cap) int32 token histories, zero-padded
-    #   meta     (S, 9) int32 per-stream cursors (see _META_COLS)
-    #   runq     (S,) int32 queue order, -1-padded
-    #   slot_sid (slots,) int32 slot ownership, -1 for free
-    #   parked   (P, lane_nbytes) uint8: parked lanes as their raw
-    #            serialized page bytes (only when any stream is parked)
-    # Variable facts (S, cap, parked sids, step counter) ride in the
-    # descriptor's JSON meta, which restore() reads *before* building the
-    # template — so a fresh process can restore with zero prior knowledge
-    # of the stream set.
+    #   slots        stacked lane caches, exactly as resident
+    #   tokens       (S, cap) int32 token histories, zero-padded
+    #   meta         (S, 9) int32 per-stream cursors (see _META_COLS)
+    #   runq         (S,) int32 queue order, -1-padded
+    #   slot_sid     (slots,) int32 slot ownership, -1 for free
+    #   pages        (P, page_bytes) uint8: the DEDUP'D pool of every
+    #                parked stream's pages — each unique page once, the
+    #                per-stream tables (references) ride in meta
+    #   prefix_pages (Q, max_nbytes) uint8: the prefix-cache payloads
+    # Variable facts (S, cap, page tables, trie records, stream refs,
+    # step counter) ride in the descriptor's JSON meta, which restore()
+    # reads *before* building the template — so a fresh process can
+    # restore with zero prior knowledge of the stream set.
 
     _META_COLS = 9  # plen, ntok, pos, state, slot, max_new, ran, sub, fin
 
@@ -363,24 +479,48 @@ class ServeScheduler:
             "runq": runq,
             "slot_sid": slot_sid,
         }
-        parked = self.pager.parked_sids() if self.pager is not None else []
-        if parked:
-            # parked lanes ride the checkpoint as their raw serialized
-            # page bytes — no deserialize/re-serialize round trip
-            state["parked"] = np.stack(
-                [np.frombuffer(self.pager.blob_bytes(sid), np.uint8)
-                 for sid in parked])
         meta = {
             "serve": {
                 "n_streams": len(sids),
                 "cap": int(cap),
-                "parked_sids": [int(s) for s in parked],
                 "step_count": int(self.step_count),
                 "next_sid": int(self._next_sid),
                 "slots": self.slots,
                 "max_len": self.max_len,
             }
         }
+        parked = self.pager.parked_sids() if self.pager is not None else []
+        if parked:
+            # the dedup'd page set: each unique page's bytes exactly once
+            # (shared pages — prefix-shaped or zero tails — are stored
+            # once no matter how many tables reference them), plus the
+            # per-stream tables as digest indices.  Refcounts are the
+            # reference structure itself: restore re-parks every table
+            # and the pool counts recover exactly.
+            digests = sorted({d for sid in parked
+                              for d in self.pager.page_table(sid)})
+            index = {d: i for i, d in enumerate(digests)}
+            payloads = [self.pager.page_payload(d) for d in digests]
+            state["pages"] = _pad_stack(payloads, self.pager.page_bytes)
+            meta["serve"]["pager"] = {
+                "page_bytes": self.pager.page_bytes,
+                "page_lens": [len(p) for p in payloads],
+                "tables": [[int(sid), int(self.pager.parked_nbytes(sid)),
+                            [index[d] for d in self.pager.page_table(sid)]]
+                           for sid in parked],
+            }
+        if self.prefix is not None and len(self.prefix):
+            records, payloads = self.prefix.export_nodes()
+            state["prefix_pages"] = _pad_stack(
+                payloads, max(len(p) for p in payloads))
+            meta["serve"]["prefix"] = {
+                "page_tokens": self.prefix.page_tokens,
+                "mode": self.prefix.mode,
+                "nodes": records,
+                "page_lens": [len(p) for p in payloads],
+                "stream_refs": {str(sid): digests for sid, digests
+                                in self.prefix.stream_refs().items()},
+            }
         return state, meta
 
     def save(self, session: Optional[ResilienceSession] = None):
@@ -398,10 +538,11 @@ class ServeScheduler:
     def restore(self, session: Optional[ResilienceSession] = None,
                 step: Optional[int] = None) -> int:
         """Rebuild the entire scheduler — stream set, token histories, run
-        queue, lane caches, parked pages — from the newest (or given)
-        checkpoint.  The stream set comes from the checkpoint itself; the
-        scheduler only needs to be constructed with the same model,
-        ``slots`` and ``max_len`` it was saved with."""
+        queue, lane caches, parked page tables over the dedup'd pool, and
+        the prefix-cache trie with its stream refcounts — from the newest
+        (or given) checkpoint.  The stream set comes from the checkpoint
+        itself; the scheduler only needs to be constructed with the same
+        model, ``slots`` and ``max_len`` it was saved with."""
         session = session or self.session
         assert session is not None, "no ResilienceSession attached"
         steps = session.available_steps()
@@ -417,7 +558,8 @@ class ServeScheduler:
                 f"max_len={sm['max_len']}, this scheduler has slots={self.slots} "
                 f"max_len={self.max_len}")
         n, cap = sm["n_streams"], sm["cap"]
-        parked_sids = [int(s) for s in sm["parked_sids"]]
+        pager_meta = sm.get("pager")
+        prefix_meta = sm.get("prefix")
         template: Dict[str, Any] = {
             "slots": jax.tree_util.tree_map(
                 lambda l: np.zeros((self.slots,) + l.shape, l.dtype),
@@ -427,9 +569,14 @@ class ServeScheduler:
             "runq": np.zeros((n,), np.int32),
             "slot_sid": np.zeros((self.slots,), np.int32),
         }
-        if parked_sids:
-            template["parked"] = np.zeros(
-                (len(parked_sids), self._lane_nbytes), np.uint8)
+        if pager_meta:
+            template["pages"] = np.zeros(
+                (len(pager_meta["page_lens"]), pager_meta["page_bytes"]),
+                np.uint8)
+        if prefix_meta:
+            template["prefix_pages"] = np.zeros(
+                (len(prefix_meta["page_lens"]),
+                 max(prefix_meta["page_lens"])), np.uint8)
         state, got = session.restore_latest(template, step=step)
 
         self.slots_cache = jax.tree_util.tree_map(jnp.asarray, state["slots"])
@@ -446,14 +593,29 @@ class ServeScheduler:
         self._slot_sid = [None if s < 0 else int(s)
                           for s in state["slot_sid"]]
         if self.pager is not None:
-            for sid in self.pager.parked_sids():
+            for sid in self.pager.table_sids():   # parked + retained
                 self.pager.release(sid)
-        if parked_sids:
+        if pager_meta:
             assert self.pager is not None, \
                 "checkpoint has parked streams but this scheduler has no pager"
-            for i, sid in enumerate(parked_sids):
-                self.pager.park_bytes(sid, state["parked"][i].tobytes(),
-                                      self._lane_manifest)
+            payloads = [state["pages"][i, :ln].tobytes()
+                        for i, ln in enumerate(pager_meta["page_lens"])]
+            for sid, nbytes, table in pager_meta["tables"]:
+                blob = b"".join(payloads[i] for i in table)[:nbytes]
+                # content addressing re-dedups: each unique page is put
+                # once, later tables only bump its refcount
+                self.pager.park_bytes(int(sid), blob, self._lane_manifest)
+        if prefix_meta:
+            assert self.prefix is not None, \
+                "checkpoint has prefix pages but this scheduler has no prefix cache"
+            payloads = [state["prefix_pages"][i, :ln].tobytes()
+                        for i, ln in enumerate(prefix_meta["page_lens"])]
+            self.prefix.restore_nodes(
+                prefix_meta["nodes"], payloads,
+                {int(sid): ds for sid, ds
+                 in prefix_meta["stream_refs"].items()})
+        elif self.prefix is not None:
+            self.prefix.clear()
         self.step_count = int(sm["step_count"])
         self._next_sid = int(sm["next_sid"])
         return got
@@ -463,3 +625,12 @@ class ServeScheduler:
     def close(self) -> None:
         if self.pager is not None:
             self.pager.close()
+
+
+def _pad_stack(payloads: List[bytes], width: int) -> np.ndarray:
+    """Stack variable-length byte strings into a (N, width) uint8 array
+    (checkpoint state must be fixed-shape; true lengths ride in meta)."""
+    out = np.zeros((len(payloads), width), np.uint8)
+    for i, p in enumerate(payloads):
+        out[i, :len(p)] = np.frombuffer(p, np.uint8)
+    return out

@@ -1,0 +1,141 @@
+"""Paged-attention decode kernel: Pallas (interpret) + jnp vs oracles.
+
+The contract fig11 leans on: the page-table-indexed gather is numerically
+a no-op — paged output == contiguous `decode_attention` == causal
+`flash_attention_pallas` with a length-1 query, including when sequences
+physically share prefix pages in the pool.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.paged_attention import (
+    paged_attention,
+    paged_attention_pallas,
+    paginate_cache,
+)
+from repro.models.layers import decode_attention
+
+
+def keys(seed, n):
+    return jax.random.split(jax.random.PRNGKey(seed), n)
+
+
+PAGED_CASES = [
+    # b, s, hq, hkv, d, page
+    (1, 16, 2, 2, 8, 8),
+    (2, 32, 4, 2, 16, 8),
+    (3, 24, 4, 1, 8, 8),        # GQA group 4
+    (2, 20, 2, 2, 8, 8),        # ragged: s not a page multiple
+    (1, 8, 2, 2, 8, 4),
+]
+
+
+def make_case(case, seed=0):
+    b, s, hq, hkv, d, page = case
+    ks = keys(seed + sum(case), 3)
+    q = jax.random.normal(ks[0], (b, hq, d))
+    kc = jax.random.normal(ks[1], (b, s, hkv, d))
+    vc = jax.random.normal(ks[2], (b, s, hkv, d))
+    rng = np.random.default_rng(sum(case))
+    lengths = jnp.asarray(rng.integers(1, s + 1, size=b), jnp.int32)
+    return q, kc, vc, lengths
+
+
+@pytest.mark.parametrize("case", PAGED_CASES)
+def test_paged_pallas_vs_contiguous(case):
+    q, kc, vc, lengths = make_case(case)
+    page = case[-1]
+    k_pages, v_pages, table = paginate_cache(kc, vc, page)
+    want = decode_attention(q, kc, vc, lengths)
+    got = paged_attention_pallas(q, k_pages, v_pages, table, lengths,
+                                 interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=3e-6, rtol=1e-5)
+
+
+@pytest.mark.parametrize("case", PAGED_CASES)
+def test_paged_jnp_vs_contiguous(case):
+    q, kc, vc, lengths = make_case(case, seed=7)
+    page = case[-1]
+    k_pages, v_pages, table = paginate_cache(kc, vc, page)
+    want = decode_attention(q, kc, vc, lengths)
+    got = paged_attention(q, k_pages, v_pages, table, lengths)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=3e-6, rtol=1e-5)
+
+
+def test_paged_matches_flash_length1_query():
+    """Full-length rows: paged decode == flash attention with tq=1 (the
+    causal frontier sits at the last key either way)."""
+    case = (2, 32, 4, 2, 16, 8)
+    q, kc, vc, _ = make_case(case, seed=3)
+    k_pages, v_pages, table = paginate_cache(kc, vc, case[-1])
+    full = jnp.full((case[0],), case[1], jnp.int32)
+    want = flash_attention_pallas(q[:, None], kc, vc, causal=True,
+                                  block_q=8, block_k=8, interpret=True)[:, 0]
+    got = paged_attention_pallas(q, k_pages, v_pages, table, full,
+                                 interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=3e-6, rtol=1e-5)
+
+
+def test_paged_with_physically_shared_prefix_pages():
+    """Several sequences point their leading table entries at the SAME
+    pool pages (the prefix-cache layout): each lane must read the shared
+    pages as its own prefix."""
+    b, s, hq, hkv, d, page = 4, 32, 4, 2, 8, 8
+    shared_pages = 2
+    ks = keys(11, 3)
+    q = jax.random.normal(ks[0], (b, hq, d))
+    kc = np.array(jax.random.normal(ks[1], (b, s, hkv, d)))
+    vc = np.array(jax.random.normal(ks[2], (b, s, hkv, d)))
+    kc[:, :shared_pages * page] = kc[0:1, :shared_pages * page]
+    vc[:, :shared_pages * page] = vc[0:1, :shared_pages * page]
+    k_pages, v_pages, table = paginate_cache(jnp.asarray(kc), jnp.asarray(vc),
+                                             page)
+    tbl = np.asarray(table).copy()
+    tbl[:, :shared_pages] = tbl[0, :shared_pages]   # one physical copy
+    lengths = jnp.asarray([20, 25, 30, 32], jnp.int32)
+    want = decode_attention(q, jnp.asarray(kc), jnp.asarray(vc), lengths)
+    got = paged_attention_pallas(q, k_pages, v_pages, jnp.asarray(tbl),
+                                 lengths, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=3e-6, rtol=1e-5)
+
+
+def test_sentinel_table_entries_are_safe():
+    """Unused table tail entries may be -1 (or any sentinel): they are
+    clamped before the index map, so the masked-out block DMA can never
+    address outside the pool."""
+    case = (2, 24, 2, 2, 8, 8)
+    q, kc, vc, _ = make_case(case, seed=9)
+    k_pages, v_pages, table = paginate_cache(kc, vc, case[-1])
+    lengths = jnp.asarray([8, 16], jnp.int32)   # last page(s) unused
+    tbl = np.asarray(table).copy()
+    tbl[0, 1:] = -1                             # sentinel past the length
+    tbl[1, 2:] = 10**6
+    want = decode_attention(q, kc, vc, lengths)
+    got = paged_attention_pallas(q, k_pages, v_pages, jnp.asarray(tbl),
+                                 lengths, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=3e-6, rtol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_dtypes(dtype):
+    case = (2, 16, 4, 2, 8, 8)
+    q, kc, vc, lengths = make_case(case, seed=5)
+    q, kc, vc = q.astype(dtype), kc.astype(dtype), vc.astype(dtype)
+    k_pages, v_pages, table = paginate_cache(kc, vc, case[-1])
+    got = paged_attention_pallas(q, k_pages, v_pages, table, lengths,
+                                 interpret=True)
+    want = decode_attention(q.astype(jnp.float32), kc.astype(jnp.float32),
+                            vc.astype(jnp.float32), lengths)
+    tol = 3e-6 if dtype == jnp.float32 else 3e-2
+    assert got.dtype == dtype
+    np.testing.assert_allclose(np.asarray(got, np.float32), np.asarray(want),
+                               atol=tol, rtol=tol)

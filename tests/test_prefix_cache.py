@@ -1,0 +1,298 @@
+"""PrefixCache: radix matching, refcount eviction, scheduler reuse, and
+kill/restore with shared pages live."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api.session import ResilienceSession
+from repro.cluster.topology import VirtualCluster
+from repro.configs import get_config
+from repro.core.scr import Strategy
+from repro.io.serialization import serialize_state
+from repro.memory.stack import TierStack
+from repro.memory.tiers import MemoryTier, TierKind, TierSpec
+from repro.models.registry import get_model
+from repro.serve.kvpage import KVPager
+from repro.serve.prefix import LaneLayout, PrefixCache, prefix_page_key
+from repro.serve.scheduler import ServeScheduler, StreamState
+
+
+# ---------------------------------------------------------------------- #
+# standalone trie over a toy attention-shaped lane
+# ---------------------------------------------------------------------- #
+
+
+def toy_layout(max_len=16):
+    """A two-leaf attention-style lane: every leaf has a kv_seq axis."""
+    template = {
+        "k": np.zeros((2, 1, max_len, 4), np.float32),
+        "v": np.zeros((2, 1, max_len, 4), np.float32),
+    }
+    axes = {
+        "k": ("layers", "batch", "kv_seq", None),
+        "v": ("layers", "batch", "kv_seq", None),
+    }
+    return LaneLayout(template, axes)
+
+
+def toy_stack(capacity=1 << 20):
+    tier = MemoryTier(TierSpec(TierKind.DRAM, capacity, 1e9, 1e9, 1e-6))
+    return TierStack([("fast", tier),
+                      ("global", MemoryTier(
+                          TierSpec(TierKind.GLOBAL, 1 << 30, 1e9, 1e9, 1e-4)))])
+
+
+def filled_lane(layout, upto, base=1.0):
+    lane = layout.zero_lane()
+    lane["k"][:, :, :upto] = base
+    lane["v"][:, :, :upto] = base * 2
+    return lane
+
+
+def test_match_and_fetch_roundtrip():
+    layout = toy_layout()
+    cache = PrefixCache(toy_stack(), layout, page_tokens=4)
+    tokens = list(range(10))            # 2 full pages + 2 leftover tokens
+    lane = filled_lane(layout, 10)
+    path = cache.extend(tokens[:8], 8, lane)
+    assert len(path) == 2 and path[-1].end == 8
+    covered, hit = cache.match(tokens)
+    assert covered == 8 and len(hit) == 2
+    fresh = layout.zero_lane()
+    got = cache.fetch_into(hit, fresh)
+    assert got == 8
+    assert np.array_equal(fresh["k"][:, :, :8], lane["k"][:, :, :8])
+    assert np.array_equal(fresh["v"][:, :, :8], lane["v"][:, :, :8])
+    assert not fresh["k"][:, :, 8:].any()   # beyond the prefix untouched
+
+    # a diverging prompt shares only the first page
+    other = tokens[:4] + [99, 98, 97, 96]
+    covered2, hit2 = cache.match(other)
+    assert covered2 == 4 and len(hit2) == 1
+    assert hit2[0].digest == hit[0].digest  # literally the same node
+
+
+def test_content_addressing_dedups_across_inserters():
+    layout = toy_layout()
+    cache = PrefixCache(toy_stack(), layout, page_tokens=4)
+    lane = filled_lane(layout, 8)
+    cache.extend(list(range(8)), 8, lane)
+    n = len(cache)
+    cache.extend(list(range(8)), 8, lane)   # same prefix again: no new nodes
+    assert len(cache) == n
+    assert cache.stats["pages_inserted"] == n
+
+
+def test_refcounted_shared_page_survives_stream_finish():
+    """THE eviction contract: a page shared by two streams must survive
+    one of them finishing — only fully-unreferenced leaves are evictable,
+    even when the cache is over its byte budget."""
+    layout = toy_layout()
+    cache = PrefixCache(toy_stack(), layout, page_tokens=4,
+                        capacity_bytes=1)   # everything is over budget
+    lane = filled_lane(layout, 8)
+    # stream A inserts and holds its path atomically (sid= acquires
+    # before the eviction sweep — an inserter's pages can't vanish)
+    path = cache.extend(list(range(8)), 8, lane, sid=101)
+    assert len(cache) == 2
+    cache.acquire(202, path)                # stream B shares the pages
+    cache.release_stream(101)               # A finishes
+    cache._maybe_evict()
+    assert len(cache) == 2, "shared pages evicted while stream B is live"
+    assert cache.stack.exists(prefix_page_key(path[0].digest))
+    cache.release_stream(202)               # B finishes: now evictable
+    cache._maybe_evict()
+    assert len(cache) == 0
+    assert not cache.stack.exists(prefix_page_key(path[0].digest))
+
+
+def test_eviction_is_leaf_first_and_lru():
+    layout = toy_layout()
+    stack = toy_stack()
+    cache = PrefixCache(stack, layout, page_tokens=4, capacity_bytes=None)
+    lane = filled_lane(layout, 12)
+    cache.extend(list(range(12)), 12, lane)     # chain of 3 nodes
+    assert len(cache) == 3
+    # shrink the budget to one node: only leaves may go, so the chain
+    # peels from the deepest node upward
+    cache.capacity_bytes = cache.stats["bytes_cached"] // 3
+    cache._maybe_evict()
+    assert len(cache) == 1
+    covered, hit = cache.match(list(range(12)))
+    assert covered == 4 and hit[0].end == 4, "interior node evicted first"
+
+
+def test_release_stream_is_idempotent():
+    layout = toy_layout()
+    cache = PrefixCache(toy_stack(), layout, page_tokens=4)
+    path = cache.extend(list(range(4)), 4, filled_lane(layout, 4))
+    cache.acquire(7, path)
+    cache.release_stream(7)
+    cache.release_stream(7)
+    assert cache.node(path[0].digest).refs == 0
+
+
+# ---------------------------------------------------------------------- #
+# scheduler integration (real model, slice + snapshot modes)
+# ---------------------------------------------------------------------- #
+
+
+@pytest.fixture(scope="module")
+def served_model():
+    cfg = get_config("phi3-mini-3.8b").reduced()
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0), cfg)
+    return cfg, model, params
+
+
+def make_prefix_scheduler(cfg, model, params, slots, max_len, session=None,
+                          quantum=3, fast_lanes=3, page_tokens=4,
+                          page_bytes=None):
+    lane_bytes = serialize_state(
+        jax.device_get(model.init_cache(cfg, 1, max_len))).nbytes
+    pager = KVPager.for_capacity(fast_bytes=fast_lanes * lane_bytes,
+                                 page_bytes=page_bytes
+                                 or max(1024, lane_bytes // 4))
+    prefix = PrefixCache.for_model(pager.stack, cfg, model, max_len,
+                                   page_tokens=page_tokens)
+    return ServeScheduler(cfg, model, params, slots=slots, max_len=max_len,
+                          pager=pager, session=session, quantum=quantum,
+                          prefix=prefix)
+
+
+def reference_decode(cfg, model, params, prompt, max_new, max_len):
+    cache = model.init_cache(cfg, 1, max_len)
+    toks = list(prompt)
+    pos = 0
+    out = []
+    while len(out) < max_new and pos < max_len:
+        tok = toks[pos]
+        logits, cache = model.decode_step(
+            params, cache, jnp.asarray([tok], jnp.int32), jnp.int32(pos), cfg)
+        pos += 1
+        if pos >= len(prompt):
+            nxt = int(np.asarray(logits.argmax(axis=-1))[0])
+            toks.append(nxt)
+            out.append(nxt)
+    return out
+
+
+def shared_prompts(cfg, n, shared_len=9, seed=3):
+    rng = np.random.default_rng(seed)
+    shared = rng.integers(0, cfg.vocab_size, size=shared_len).tolist()
+    return [shared + rng.integers(0, cfg.vocab_size,
+                                  size=int(rng.integers(2, 5))).tolist()
+            for _ in range(n)]
+
+
+def test_shared_prefix_streams_match_reference_and_save_prefill(served_model):
+    """Streams sharing a 9-token prefix: later joiners fetch the cached
+    pages (prefill_tokens_saved > 0) and every output still equals an
+    independent batch-1 decode — the cache is numerically transparent."""
+    cfg, model, params = served_model
+    max_len, max_new = 24, 4
+    sched = make_prefix_scheduler(cfg, model, params, slots=2, max_len=max_len)
+    prompts = shared_prompts(cfg, 6)
+    sids = [sched.submit(p, max_new=max_new) for p in prompts]
+    sched.run()
+    assert sched.stats["prefix_hits"] >= 5          # every joiner after #0
+    assert sched.stats["prefill_tokens_saved"] > 0
+    st = sched.pager.stats()
+    assert st["hits_hbm"] + st["hits_dram"] > 0     # pages read through tiers
+    for sid, p in zip(sids, prompts):
+        want = reference_decode(cfg, model, params, p, max_new, max_len)
+        assert sched.output(sid) == want, f"stream {sid} diverged"
+    sched.close()
+
+
+def test_snapshot_mode_for_recurrent_family():
+    """rwkv has no kv_seq axis: the prefix cache falls back to boundary
+    state snapshots, still saving prefill work and staying exact."""
+    cfg = get_config("rwkv6-3b").reduced()
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0), cfg)
+    max_len, max_new = 20, 3
+    sched = make_prefix_scheduler(cfg, model, params, slots=2, max_len=max_len)
+    assert sched.prefix.mode == "snapshot"
+    prompts = shared_prompts(cfg, 4, shared_len=9, seed=5)
+    sids = [sched.submit(p, max_new=max_new) for p in prompts]
+    sched.run()
+    assert sched.stats["prefill_tokens_saved"] > 0
+    for sid, p in zip(sids, prompts):
+        want = reference_decode(cfg, model, params, p, max_new, max_len)
+        assert sched.output(sid) == want, f"stream {sid} diverged"
+    sched.close()
+
+
+def test_kill_restore_with_shared_pages_live(served_model, tmp_path):
+    """Mid-decode kill while the prefix trie is populated and parked page
+    tables reference the dedup'd pool; a FRESH scheduler restores trie,
+    refcounts, and tables from the checkpoint alone and finishes every
+    stream byte-identically."""
+    cfg, model, params = served_model
+    max_len, max_new, slots = 24, 4, 2
+    prompts = shared_prompts(cfg, 8, seed=11)
+
+    ref = make_prefix_scheduler(cfg, model, params, slots, max_len)
+    for p in prompts:
+        ref.submit(p, max_new=max_new)
+    ref.run()
+    want = {sid: ref.output(sid) for sid in ref.streams}
+    ref.close()
+
+    cluster = VirtualCluster(4, 0, root=tmp_path)
+    with ResilienceSession.for_cluster(cluster, strategy=Strategy.XOR,
+                                       procs_per_node=2) as session:
+        s1 = make_prefix_scheduler(cfg, model, params, slots, max_len,
+                                   session=session)
+        for p in prompts:
+            s1.submit(p, max_new=max_new)
+        s1.run(max_steps=6)
+        assert len(s1.prefix) > 0, "kill point must have shared pages live"
+        assert StreamState.PARKED in {s.state for s in s1.streams.values()}
+        refs_before = s1.prefix.stream_refs()
+        nodes_before = len(s1.prefix)
+        s1.save()
+        saved_step = s1.step_count
+        s1.close()
+
+        s2 = make_prefix_scheduler(cfg, model, params, slots, max_len,
+                                   session=session)
+        got_step = s2.restore()
+        assert got_step == saved_step
+        assert len(s2.prefix) == nodes_before
+        assert s2.prefix.stream_refs() == refs_before
+        s2.run()
+        assert {sid: s2.output(sid) for sid in s2.streams} == want
+        s2.close()
+
+
+def test_checkpoint_pages_are_deduped(served_model, tmp_path):
+    """The checkpoint stores each unique parked page once: the summed
+    table sizes exceed the stored page payloads whenever streams share
+    content (zero tails at minimum)."""
+    cfg, model, params = served_model
+    max_len, slots = 24, 2
+    prompts = shared_prompts(cfg, 6, seed=13)
+    cluster = VirtualCluster(4, 0, root=tmp_path)
+    with ResilienceSession.for_cluster(cluster, strategy=Strategy.XOR,
+                                       procs_per_node=2) as session:
+        # fine pages so identical byte ranges across lanes (the shared
+        # prompt prefix, zero tails) actually coincide page-for-page
+        s1 = make_prefix_scheduler(cfg, model, params, slots, max_len,
+                                   session=session, page_bytes=256)
+        for p in prompts:
+            s1.submit(p, max_new=4)
+        s1.run(max_steps=5)
+        assert len(s1.pager.parked_sids()) >= 2
+        s1.save()
+        meta = session.checkpoint_meta(s1.step_count)["serve"]["pager"]
+        logical = sum(nbytes for _, nbytes, _ in meta["tables"])
+        stored = sum(meta["page_lens"])
+        assert stored < logical, (
+            f"checkpoint page set not dedup'd: stored {stored} >= "
+            f"logical {logical}")
+        assert s1.pager.pooled_bytes() < s1.pager.parked_bytes()
+        s1.close()

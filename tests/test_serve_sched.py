@@ -16,7 +16,7 @@ from repro.io.serialization import serialize_state
 from repro.memory.stack import HitRatePromotion, TierStack
 from repro.memory.tiers import CapacityError, MemoryTier, TierKind, TierSpec
 from repro.models.registry import get_model
-from repro.serve.kvpage import KVPager, kv_page_key
+from repro.serve.kvpage import KVPager
 from repro.serve.scheduler import ServeScheduler, StreamState
 
 
@@ -164,11 +164,84 @@ def test_pager_unpaged_park_is_all_or_nothing():
     pager = KVPager.for_capacity(fast_bytes=int(1.5 * nbytes), paged=False,
                                  page_bytes=max(1, nbytes // 4))
     pager.park(0, lane)
+    other = lane_like()
+    other["k"] = other["k"] + 1.0    # distinct content: no page dedups
+    before = pager.pooled_pages()
     with pytest.raises(CapacityError):
-        pager.park(1, lane)          # no lower tier to spill to
-    # the failed park left no partial pages behind
-    assert not any(pager.stack.exists(kv_page_key(1, j)) for j in range(8))
+        pager.park(1, other)         # no lower tier to spill to
+    # the failed park left no partial pages (or references) behind
+    assert pager.pooled_pages() == before
     assert pager.parked_sids() == [0]
+    pager.close()
+
+
+def test_pager_identical_content_parks_share_pages():
+    """Content-addressed pool: two streams with byte-identical lanes hold
+    references to ONE set of pooled pages — a second park moves no bytes
+    (and fits where a second copy would not)."""
+    lane = lane_like()
+    nbytes = serialize_state(lane).nbytes
+    pager = KVPager.for_capacity(fast_bytes=int(1.5 * nbytes), paged=False,
+                                 page_bytes=max(1, nbytes // 4))
+    pager.park(0, lane)
+    put_before = pager.stats()["kv_pages_put"]
+    pager.park(1, lane_like())       # same bytes: pure reference bump
+    assert pager.stats()["kv_pages_put"] == put_before
+    assert pager.stats()["kv_page_dedup_hits"] > 0
+    assert pager.pooled_bytes() < pager.parked_bytes()
+    # releasing one stream keeps the shared pages for the other
+    pager.release(0)
+    got = pager.fetch(1, lane_like())
+    for a, b in zip(jax.tree_util.tree_leaves(got),
+                    jax.tree_util.tree_leaves(lane)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    assert pager.pooled_pages() == 0  # last reference dropped on fetch
+    pager.close()
+
+
+def test_resume_retains_baseline_so_repark_skips_clean_pages():
+    """The round-robin cycle: park -> resume (release=False) -> park.
+    The resume retains the table as a dirty-tracking baseline, so the
+    second park re-puts nothing for unchanged bytes."""
+    pager = KVPager.for_capacity(fast_bytes=1 << 20, page_bytes=64)
+    lane = lane_like()
+    pager.park(5, lane)
+    got = pager.fetch(5, lane_like(), release=False)   # resume into a slot
+    assert not pager.is_parked(5)          # not parked: it is decoding
+    assert pager.parked_sids() == []
+    assert pager.table_sids() == [5]       # ...but the baseline is live
+    put_before = pager.stats()["kv_pages_put"]
+    pager.park(5, got)                     # quantum expired, nothing decoded
+    st = pager.stats()
+    assert st["kv_pages_put"] == put_before
+    assert st["kv_clean_page_skips"] > 0
+    assert pager.is_parked(5)
+    pager.release(5)
+    assert pager.pooled_pages() == 0
+    pager.close()
+
+
+def test_pager_repark_skips_clean_pages():
+    """Per-page dirty tracking: re-parking a stream whose bytes did not
+    change re-puts nothing (content hash compare), counted in stats()."""
+    pager = KVPager.for_capacity(fast_bytes=1 << 20, page_bytes=64)
+    lane = lane_like()
+    pager.park(5, lane)
+    put_before = pager.stats()["kv_pages_put"]
+    pager.park(5, lane_like())       # byte-identical re-park
+    st = pager.stats()
+    assert st["kv_pages_put"] == put_before
+    assert st["kv_clean_page_skips"] > 0
+    # a genuinely dirty page is re-put; clean neighbours still skip
+    # (only `pos` changes — it lives in the last page, `k`'s page is clean)
+    dirty = lane_like()
+    dirty["pos"] = np.int32(9)
+    pager.park(5, dirty)
+    st2 = pager.stats()
+    assert st2["kv_pages_put"] > put_before
+    assert st2["kv_clean_page_skips"] > st["kv_clean_page_skips"]
+    got = pager.fetch(5, lane_like())
+    assert int(got["pos"]) == 9
     pager.close()
 
 

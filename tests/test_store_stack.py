@@ -149,6 +149,26 @@ def test_promotion_on_read():
     assert stack.stats["hits_cache"] == 1
 
 
+def test_hit_windows_are_per_key_class():
+    """A burst of kv/ traffic must not age an OTHER-class key's sliding
+    window: each KeyClass has its own clock (one global clock used to
+    starve quiet classes of promotion whenever another class was noisy)."""
+    from repro.memory.stack import HitRatePromotion
+
+    cache, glob = mem_tier(10**6), mem_tier()
+    stack = TierStack([("cache", cache), ("global", glob)],
+                      promotion=HitRatePromotion(k=2, window=4))
+    glob.put("slow-key", b"v")              # class OTHER
+    for j in range(8):
+        glob.put(f"kv/page/{j}.bin", b"p")  # class KV
+    stack.get("slow-key")                   # 1st OTHER hit
+    for j in range(8):                      # 8 KV ticks: would age a
+        stack.get(f"kv/page/{j}.bin")       # global window clean past it
+    stack.get("slow-key")                   # 2nd OTHER hit, still in window
+    assert cache.exists("slow-key"), \
+        "kv traffic aged the OTHER-class window (clock must be per class)"
+
+
 def test_promotion_is_best_effort_under_pressure():
     policy = {KeyClass.OTHER: PlacementRule(evictable=False)}
     stack, cache, glob = two_level(cache_capacity=50, policy=policy)
