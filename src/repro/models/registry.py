@@ -29,6 +29,9 @@ class ModelApi:
     cache_axes: Callable
     cache_table: Callable
     decode_step: Callable
+    # families whose cache has a kv_seq axis can decode straight on the
+    # shared page pool (serve/pagepool.py); None for snapshot families
+    paged_decode_step: Optional[Callable] = None
 
 
 def get_model(cfg: ArchConfig) -> ModelApi:
@@ -56,6 +59,7 @@ def get_model(cfg: ArchConfig) -> ModelApi:
         cache_axes=m.cache_axes,
         cache_table=m.cache_table,
         decode_step=m.decode_step,
+        paged_decode_step=getattr(m, "paged_decode_step", None),
     )
 
 

@@ -408,6 +408,145 @@ def decode_step(
 
 
 # ---------------------------------------------------------------------- #
+# paged decode (pool-resident page tables)
+# ---------------------------------------------------------------------- #
+
+
+def paged_decode_step(
+    params: Dict[str, Any],
+    pools: Dict[str, jax.Array],  # cache leaves as (L, P, page_tokens, *rest)
+    tables: jax.Array,            # (B, nP) int32: logical page -> pool slot
+    pos: jax.Array,               # (B,) per-lane write cursor
+    tokens: jax.Array,            # (B, T) token ids to consume at pos..pos+T-1
+    cfg: ArchConfig,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Multi-token decode straight on the shared page pool.
+
+    The KV cache never exists contiguously: reads gather through each
+    lane's page-table row and writes scatter into ``pool[phys, offset]``,
+    so admitting / parking / resuming a stream moves table entries, not
+    KV bytes.  ``T > 1`` is the speculative-verification mode: the T
+    inputs are [next_token, candidate_1, ..] and row t's output is the
+    greedy token *after* consuming inputs ..t — the caller commits the
+    accepted prefix.
+
+    Exactness contract (the property the differential oracle tests pin):
+    the T tokens run as a ``lax.scan`` whose per-token body is the same
+    computation graph as :func:`decode_step` — the only difference is
+    scatter/gather data movement, which is bit-exact — so for any T the
+    emitted tokens equal single-token contiguous greedy decode bit for
+    bit.  Positions clamp to the last cache slot; tokens fed past a
+    lane's logical end write garbage into the lane's *own* pages beyond
+    its committed length, which later real writes overwrite and the
+    length mask never reads.
+
+    Returns ``(out (B, T) int32 argmax tokens, new_pools)``.
+    """
+    cd = jnp.dtype(cfg.compute_dtype)
+    b, t_total = tokens.shape
+    hq = cfg.padded_heads
+    dh = cfg.resolved_head_dim
+    first = next(iter(pools.values()))
+    page_tokens = first.shape[2]
+    s_pad = tables.shape[1] * page_tokens
+
+    def one_token(pools, tk_t):
+        tok, t = tk_t                          # (B,), scalar offset in T
+        p_t = pos + t                          # (B,)
+        wp = jnp.minimum(p_t, s_pad - 1)
+        phys = jnp.take_along_axis(tables, (wp // page_tokens)[:, None],
+                                   axis=1)[:, 0]
+        off = wp % page_tokens
+        x = L.embed_tokens(params["embed"], tok, cd)
+        cos, sin = _rope_tables(cfg, p_t)
+
+        def body(h, xs):
+            lp, pool = xs
+            xin = L.apply_norm(cfg, h[:, None], lp["ln1"])[:, 0]
+            p = lp["attn"]
+            if cfg.mla is not None:
+                m = cfg.mla
+                qk_dim = m.qk_nope_dim + m.qk_rope_dim
+                cq = L.rmsnorm(xin @ p["w_dq"].astype(cd), p["q_norm"],
+                               cfg.norm_eps)
+                q = (cq @ p["w_uq"].astype(cd)).reshape(b, hq, qk_dim)
+                q_nope = q[..., : m.qk_nope_dim]
+                q_rope = L.apply_rope(q[..., m.qk_nope_dim:][:, None],
+                                      cos[:, None], sin[:, None])[:, 0]
+                dkv = xin @ p["w_dkv"].astype(cd)
+                ckv_new = L.rmsnorm(dkv[..., : m.kv_lora_rank], p["kv_norm"],
+                                    cfg.norm_eps)
+                krope_new = L.apply_rope(dkv[:, None, None, m.kv_lora_rank:],
+                                         cos[:, None], sin[:, None])[:, 0, 0]
+                pool_ckv = pool["ckv"].at[phys, off].set(
+                    ckv_new.astype(pool["ckv"].dtype))
+                pool_kr = pool["k_rope"].at[phys, off].set(
+                    krope_new.astype(pool["k_rope"].dtype))
+                ckv_c = jnp.take(pool_ckv, tables, axis=0).reshape(
+                    b, s_pad, m.kv_lora_rank)
+                kr_c = jnp.take(pool_kr, tables, axis=0).reshape(
+                    b, s_pad, m.qk_rope_dim)
+                w_uk = p["w_uk"].astype(cd).reshape(
+                    m.kv_lora_rank, hq, m.qk_nope_dim)
+                q_abs = jnp.einsum("bhn,rhn->bhr", q_nope, w_uk)
+                s = jnp.einsum("bhr,bsr->bhs", q_abs, ckv_c.astype(cd))
+                s = s + jnp.einsum("bhp,bsp->bhs", q_rope, kr_c.astype(cd))
+                s = (s * (qk_dim ** -0.5)).astype(jnp.float32)
+                mask = jnp.arange(s_pad)[None, None, :] <= p_t[:, None, None]
+                s = jnp.where(mask, s, L._mask_value(s.dtype))
+                probs = jax.nn.softmax(s, axis=-1)
+                ctx = jnp.einsum("bhs,bsr->bhr", probs.astype(cd),
+                                 ckv_c.astype(cd))
+                w_uv = p["w_uv"].astype(cd).reshape(
+                    m.kv_lora_rank, hq, m.v_head_dim)
+                attn_out = jnp.einsum("bhr,rhv->bhv", ctx, w_uv).reshape(
+                    b, hq * m.v_head_dim)
+                attn_out = attn_out @ p["wo"].astype(cd)
+                new_pool = {"ckv": pool_ckv, "k_rope": pool_kr}
+            else:
+                q = (xin @ p["wq"].astype(cd)).reshape(b, hq, dh)
+                knew = (xin @ p["wk"].astype(cd)).reshape(
+                    b, cfg.padded_kv_heads, dh)
+                vnew = (xin @ p["wv"].astype(cd)).reshape(
+                    b, cfg.padded_kv_heads, dh)
+                if cfg.rope_theta > 0:
+                    q = L.apply_rope(q[:, None], cos[:, None],
+                                     sin[:, None])[:, 0]
+                    knew = L.apply_rope(knew[:, None], cos[:, None],
+                                        sin[:, None])[:, 0]
+                pool_k = pool["k"].at[phys, off].set(
+                    knew.astype(pool["k"].dtype))
+                pool_v = pool["v"].at[phys, off].set(
+                    vnew.astype(pool["v"].dtype))
+                kc = jnp.take(pool_k, tables, axis=0).reshape(
+                    b, s_pad, cfg.padded_kv_heads, dh)
+                vc = jnp.take(pool_v, tables, axis=0).reshape(
+                    b, s_pad, cfg.padded_kv_heads, dh)
+                attn_out = L.decode_attention(q, kc, vc, p_t + 1).reshape(
+                    b, hq * dh)
+                attn_out = attn_out.astype(cd) @ p["wo"].astype(cd)
+                new_pool = {"k": pool_k, "v": pool_v}
+            h = h + attn_out.astype(h.dtype)
+            xff = L.apply_norm(cfg, h[:, None], lp["ln2"])[:, 0]
+            h = h + ffn_block(lp["ffn"], xff[:, None], cfg)[:, 0]
+            return h, new_pool
+
+        x2, new_pools = jax.lax.scan(body, x, (params["layers"], pools),
+                                     unroll=cfg.scan_unroll)
+        x2 = L.apply_norm(cfg, x2[:, None], params["ln_f"])[:, 0]
+        head = params.get("lm_head")
+        if head is None:
+            head = params["embed"].T
+        logits = L.lm_logits(x2[:, None], head, cfg.vocab_size, cd)[:, 0]
+        return new_pools, logits.argmax(axis=-1).astype(jnp.int32)
+
+    pools, outs = jax.lax.scan(
+        one_token, pools,
+        (tokens.T, jnp.arange(t_total, dtype=jnp.int32)))
+    return outs.T, pools
+
+
+# ---------------------------------------------------------------------- #
 # Ulysses-style sequence-parallel MLA prefill (beyond-paper, §Perf)
 # ---------------------------------------------------------------------- #
 #

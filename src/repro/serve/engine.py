@@ -14,7 +14,8 @@ examples/serve.py).
 
 from __future__ import annotations
 
-from typing import Any, List, Optional
+from collections import deque
+from typing import Any, Deque, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -24,15 +25,26 @@ from repro.api.session import ResilienceSession
 from repro.configs.base import ArchConfig
 from repro.core.scr import SCRManager
 from repro.models.registry import ModelApi
-from repro.serve.scheduler import ServeScheduler, StreamState
+from repro.serve.scheduler import (PagedServeScheduler, ServeScheduler,
+                                   StreamState)
 
 
 class ServeEngine:
     def __init__(self, cfg: ArchConfig, model: ModelApi, params: Any,
-                 batch: int, max_len: int, scr=None):
+                 batch: int, max_len: int, scr=None, paged: bool = False,
+                 spec_k: int = 0, page_tokens: int = 8,
+                 pool_pages: Optional[int] = None):
         """``scr`` is a :class:`ResilienceSession` (the user API) or —
         compatibility shim — a raw :class:`SCRManager`, wrapped in an
-        engine-owned session; ``None`` disables checkpointing."""
+        engine-owned session; ``None`` disables checkpointing.
+
+        ``paged=True`` (or ``spec_k`` > 0, which implies it) serves
+        through the :class:`~repro.serve.scheduler.PagedServeScheduler`:
+        KV lives in one pool-resident page buffer and — with ``spec_k``
+        — each step verifies ``spec_k`` n-gram-proposed candidates, so a
+        single scheduler step may emit several tokens per row.  The
+        lockstep :meth:`decode` surface buffers those and still returns
+        one ``(batch,)`` vector per emitted position."""
         self.cfg = cfg
         self.model = model
         self.params = params
@@ -46,10 +58,17 @@ class ServeEngine:
             self.session = None
         self.scr: Optional[SCRManager] = (
             self.session.scr if self.session is not None else None)
-        self.scheduler = ServeScheduler(
-            cfg, model, params, slots=batch, max_len=max_len,
-            session=self.session)
+        if paged or spec_k:
+            self.scheduler: ServeScheduler = PagedServeScheduler(
+                cfg, model, params, slots=batch, max_len=max_len,
+                session=self.session, page_tokens=page_tokens,
+                pool_pages=pool_pages, spec_k=spec_k)
+        else:
+            self.scheduler = ServeScheduler(
+                cfg, model, params, slots=batch, max_len=max_len,
+                session=self.session)
         self._engine_sids: List[int] = []
+        self._pending: Dict[int, Deque[int]] = {}
         self.last: Optional[jax.Array] = None
 
     @classmethod
@@ -97,26 +116,37 @@ class ServeEngine:
             self.scheduler.submit(prompt[row], max_new=self.max_len)
             for row in range(self.batch)]
         self.scheduler.step()
-        nxt = np.asarray([s.tokens[s.plen] for s in self._engine_streams()],
-                         np.int32)
+        streams = self._engine_streams()
+        nxt = np.asarray([s.tokens[s.plen] for s in streams], np.int32)
+        # speculative decode may commit extra tokens in the very first
+        # step; they queue for decode() so no emission is ever dropped
+        self._pending = {s.sid: deque(s.tokens[s.plen + 1:]) for s in streams}
         self.last = jnp.asarray(nxt)
         return self.last
 
     def decode(self, n_tokens: int) -> List[np.ndarray]:
-        """Greedy lockstep decode: one (batch,) token vector per step,
-        clipped when the lanes hit ``max_len``.  The engine's rows share
-        one prompt length and lane budget, so they emit in lockstep until
-        they finish together."""
+        """Greedy lockstep decode: one (batch,) token vector per emitted
+        position, clipped when the lanes hit ``max_len``.  A speculative
+        scheduler step can emit several tokens per row at once; the
+        engine buffers them per stream and still hands them out one
+        lockstep row at a time."""
         assert self._engine_sids, "prefill first"
         out: List[np.ndarray] = []
-        for _ in range(n_tokens):
-            emitted = dict(self.scheduler.step())
-            if not all(sid in emitted for sid in self._engine_sids):
-                break    # the engine's rows are done (others may continue)
-            step_out = np.asarray(
-                [emitted[sid] for sid in self._engine_sids], np.int32)
-            out.append(step_out)
-            self.last = jnp.asarray(step_out)
+        while len(out) < n_tokens:
+            empty = [sid for sid in self._engine_sids
+                     if not self._pending[sid]]
+            if empty:
+                if all(self.scheduler.streams[sid].state is StreamState.DONE
+                       for sid in empty):
+                    break   # the engine's rows are done (others may continue)
+                for sid, tok in self.scheduler.step():
+                    if sid in self._pending:
+                        self._pending[sid].append(tok)
+                continue
+            row = np.asarray([self._pending[sid].popleft()
+                              for sid in self._engine_sids], np.int32)
+            out.append(row)
+            self.last = jnp.asarray(row)
         return out
 
     # -- serving-state checkpoint/restore -------------------------------- #
@@ -142,6 +172,10 @@ class ServeEngine:
         # the engine's rows are the first `batch` streams of the
         # restored set (prefill submits them first, in row order)
         self._engine_sids = sorted(self.scheduler.streams)[:self.batch]
+        # post-restore decode() emits only tokens committed after the
+        # checkpoint; compare full histories via scheduler.output() when
+        # speculative steps may have outrun the pre-kill decode() cursor
+        self._pending = {sid: deque() for sid in self._engine_sids}
         live = [s for s in self._engine_streams()
                 if s.state is not StreamState.DONE and s.pos > 0]
         if live:

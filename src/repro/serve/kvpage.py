@@ -91,7 +91,7 @@ class KVPager:
         self._pages: Dict[str, _PoolPage] = {}
         self._stats: Dict[str, int] = {
             "kv_clean_page_skips": 0, "kv_page_dedup_hits": 0,
-            "kv_pages_put": 0,
+            "kv_pages_put": 0, "kv_resume_bytes_moved": 0,
         }
 
     # -- construction ----------------------------------------------------- #
@@ -152,7 +152,11 @@ class KVPager:
         another stream, or unchanged since this stream's last park (the
         retained baseline a resume leaves behind) — are reference bumps,
         not writes."""
-        pages = list(self._page_iter(data))
+        return self._park_page_list(
+            sid, list(self._page_iter(data)), len(data), manifest)
+
+    def _park_page_list(self, sid: int, pages: List[bytes], nbytes: int,
+                        manifest: Dict[str, Any]) -> int:
         digests = [page_digest(p) for p in pages]
         old = self._tables.get(sid)
         old_digests = set(old.digests) if old is not None else set()
@@ -185,8 +189,8 @@ class KVPager:
             for digest in old.digests:
                 self._deref(digest)
         self._tables[sid] = _TableEntry(
-            nbytes=len(data), digests=digests, manifest=manifest)
-        return len(data)
+            nbytes=nbytes, digests=digests, manifest=manifest)
+        return nbytes
 
     def park(self, sid: int, lane_cache: Any) -> int:
         """Serialize one stream's lane cache and route its pages through
@@ -241,6 +245,49 @@ class KVPager:
         manifest["sha256"] = hashlib.sha256(blob).hexdigest()
         return self._park_pages(sid, blob, manifest)
 
+    # -- page-granular interchange (device page-pool spill/refill) -------- #
+
+    def park_pages(self, sid: int, blobs: List[bytes]) -> int:
+        """Park a stream as caller-cut pages (the device page pool's
+        spill path: each blob is one pool page's bytes, NOT a
+        ``page_bytes`` slice of a serialized lane).  Same all-or-nothing,
+        content-addressed, refcounted semantics as :meth:`park` — two
+        streams spilling a byte-identical page (a shared prefix page, a
+        zero page) pool one copy."""
+        if not blobs:
+            raise ValueError("nothing to park")
+        nbytes = sum(len(b) for b in blobs)
+        manifest = {"kind": "pool_pages", "page_lens": [len(b) for b in blobs],
+                    "total_bytes": nbytes}
+        try:
+            return self._park_page_list(sid, list(blobs), nbytes, manifest)
+        except CapacityError:
+            if not self._drop_retained(except_sid=sid):
+                raise
+            return self._park_page_list(sid, list(blobs), nbytes, manifest)
+
+    def fetch_pages(self, sid: int, release: bool = True,
+                    promote: Optional[bool] = None) -> List[bytes]:
+        """Read back a stream parked with :meth:`park_pages`, one blob
+        per page, counting the moved bytes (``kv_resume_bytes_moved``)."""
+        entry = self._tables.get(sid)
+        if entry is None or not entry.parked:
+            raise KeyError(f"stream {sid} is not parked")
+        if entry.manifest.get("kind") != "pool_pages":
+            raise ValueError(f"stream {sid} was not parked page-granular")
+        blobs = [self.stack.get(kv_page_key(d), promote=promote)
+                 for d in entry.digests]
+        got = sum(len(b) for b in blobs)
+        if got != entry.nbytes:
+            raise IOError(
+                f"stream {sid}: paged bytes {got} != parked {entry.nbytes}")
+        self._stats["kv_resume_bytes_moved"] += got
+        if release:
+            self.release(sid)
+        else:
+            entry.parked = False
+        return blobs
+
     def fetch(self, sid: int, like: Any, release: bool = True,
               promote: Optional[bool] = None) -> Any:
         """Read a parked stream's pages back through the stack (hit-rate
@@ -264,6 +311,7 @@ class KVPager:
         if len(data) != entry.nbytes:
             raise IOError(
                 f"stream {sid}: paged bytes {len(data)} != parked {entry.nbytes}")
+        self._stats["kv_resume_bytes_moved"] += len(data)
         lane = deserialize_state(StateBlob(data=data, manifest=entry.manifest), like)
         if release:
             self.release(sid)
@@ -304,6 +352,12 @@ class KVPager:
 
     def parked_nbytes(self, sid: int) -> int:
         return self._tables[sid].nbytes
+
+    def parked_kind(self, sid: int) -> str:
+        """How this stream's table was cut: ``"lane"`` (page_bytes slices
+        of one serialized lane) or ``"pool_pages"`` (caller-cut device
+        pool pages) — checkpoints re-park through the matching path."""
+        return self._tables[sid].manifest.get("kind", "lane")
 
     def page_payload(self, digest: str) -> bytes:
         """One pooled page's bytes, read as a pure observer."""

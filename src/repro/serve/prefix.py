@@ -169,6 +169,10 @@ class PrefixCache:
         self._nodes: Dict[str, _Node] = {}
         self._stream_refs: Dict[int, List[str]] = {}
         self._clock = 0
+        # notifier for pool-resident copies (serve/pagepool.py): called
+        # with the digest whenever a node leaves the trie, so the device
+        # page pool can release its pinned physical page
+        self.on_evict: Optional[Any] = None
         self.stats: Dict[str, int] = {
             "hits": 0, "misses": 0, "tokens_reused": 0, "pages_inserted": 0,
             "pages_evicted": 0, "insert_rejected": 0, "bytes_cached": 0,
@@ -276,7 +280,8 @@ class PrefixCache:
     # -- insertion --------------------------------------------------------- #
 
     def extend(self, tokens: Sequence[int], upto: int, lane: Any,
-               sid: Optional[int] = None) -> List[_Node]:
+               sid: Optional[int] = None,
+               payload_fn: Optional[Any] = None) -> List[_Node]:
         """Register pages covering ``tokens[:upto]`` (``upto`` a multiple
         of ``page_tokens``) from a lane holding KV for at least that
         range.  Existing path nodes are reused; missing ones are created
@@ -286,7 +291,10 @@ class PrefixCache:
         with the state *at* that boundary).  ``sid`` acquires the whole
         path for that stream *before* the eviction sweep runs — a freshly
         inserted page must never be evicted out from under its inserter.
-        Returns the full node path."""
+        ``payload_fn(end)`` — for callers whose KV never exists as a
+        contiguous lane (the device page pool) — returns the slice-mode
+        part pytree for the page ending at ``end`` instead of cutting it
+        from ``lane``.  Returns the full node path."""
         tokens = [int(t) for t in tokens]
         pt = self.page_tokens
         assert upto % pt == 0 and upto <= len(tokens)
@@ -303,7 +311,12 @@ class PrefixCache:
                     # no state for an intermediate boundary in hand; the
                     # page-by-page extend during prefill fills these in
                     break
-                payload, crc = self._payload(lane, end)
+                if payload_fn is not None:
+                    blob = serialize_state(
+                        jax.tree_util.tree_map(np.asarray, payload_fn(end)))
+                    payload, crc = blob.data, int(blob.manifest["crc32"])
+                else:
+                    payload, crc = self._payload(lane, end)
                 digest = chain_digest(parent.digest if parent else "", chunk)
                 try:
                     self.stack.put(prefix_page_key(digest), payload)
@@ -331,6 +344,15 @@ class PrefixCache:
         else:
             blob = serialize_state(jax.tree_util.tree_map(np.asarray, lane))
         return blob.data, int(blob.manifest["crc32"])
+
+    def read_node_part(self, node: _Node) -> Any:
+        """One node's payload as its part pytree (slice mode) — the
+        device page pool's load path when a prefix page lost pool
+        residency.  Raises KeyError/IOError like the fetch path if the
+        payload vanished under stack pressure; the caller prunes via
+        :meth:`match` on its next lookup."""
+        data = self.stack.get(prefix_page_key(node.digest))
+        return self._deserialize(data, node)
 
     # -- stream references -------------------------------------------------- #
 
@@ -392,6 +414,8 @@ class PrefixCache:
                     held.remove(node.digest)
         self.stats["bytes_cached"] -= node.nbytes
         self.stats["pages_evicted"] += 1
+        if self.on_evict is not None:
+            self.on_evict(node.digest)
 
     def _drop_subtree(self, node: _Node) -> None:
         for child in list(node.children.values()):

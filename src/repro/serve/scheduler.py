@@ -454,7 +454,9 @@ class ServeScheduler:
 
     _META_COLS = 9  # plen, ntok, pos, state, slot, max_new, ran, sub, fin
 
-    def _serving_state(self) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+    def _stream_state_arrays(self) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+        """The scheduler-core checkpoint pieces shared by the contiguous
+        and paged schedulers: stream table, run queue, slot map."""
         sids = sorted(self.streams)
         cap = max((len(self.streams[s].tokens) for s in sids), default=1)
         tokens = np.zeros((len(sids), cap), np.int32)
@@ -473,7 +475,6 @@ class ServeScheduler:
         slot_sid = np.asarray(
             [-1 if sid is None else sid for sid in self._slot_sid], np.int32)
         state: Dict[str, Any] = {
-            "slots": jax.device_get(self.slots_cache),
             "tokens": tokens,
             "meta": meta_arr,
             "runq": runq,
@@ -489,38 +490,73 @@ class ServeScheduler:
                 "max_len": self.max_len,
             }
         }
+        return state, meta
+
+    def _load_streams(self, state: Dict[str, Any], n: int) -> None:
+        """Rebuild the stream table / run queue / slot map from restored
+        checkpoint arrays (the inverse of :meth:`_stream_state_arrays`)."""
+        self.streams = {}
+        for row in range(n):
+            plen, ntok, pos, code, slot, max_new, ran, sub, fin = (
+                int(v) for v in state["meta"][row])
+            self.streams[row] = DecodeStream(
+                sid=row, tokens=[int(t) for t in state["tokens"][row, :ntok]],
+                plen=plen, max_new=max_new, submitted_step=sub, pos=pos,
+                state=_CODE_STATE[code], slot=None if slot < 0 else slot,
+                ran=ran, finished_step=None if fin < 0 else fin)
+        self._runq = deque(int(s) for s in state["runq"] if s >= 0)
+        self._slot_sid = [None if s < 0 else int(s)
+                          for s in state["slot_sid"]]
+
+    def _pager_state(self, state: Dict[str, Any],
+                     meta: Dict[str, Any]) -> None:
+        """Export the pager's parked streams: the dedup'd page set — each
+        unique page's bytes exactly once (shared pages — prefix-shaped,
+        zero tails, or pool pages spilled by several streams — are stored
+        once no matter how many tables reference them), plus the
+        per-stream tables as digest indices.  Refcounts are the reference
+        structure itself: restore re-parks every table and the pool
+        counts recover exactly."""
         parked = self.pager.parked_sids() if self.pager is not None else []
-        if parked:
-            # the dedup'd page set: each unique page's bytes exactly once
-            # (shared pages — prefix-shaped or zero tails — are stored
-            # once no matter how many tables reference them), plus the
-            # per-stream tables as digest indices.  Refcounts are the
-            # reference structure itself: restore re-parks every table
-            # and the pool counts recover exactly.
-            digests = sorted({d for sid in parked
-                              for d in self.pager.page_table(sid)})
-            index = {d: i for i, d in enumerate(digests)}
-            payloads = [self.pager.page_payload(d) for d in digests]
-            state["pages"] = _pad_stack(payloads, self.pager.page_bytes)
-            meta["serve"]["pager"] = {
-                "page_bytes": self.pager.page_bytes,
-                "page_lens": [len(p) for p in payloads],
-                "tables": [[int(sid), int(self.pager.parked_nbytes(sid)),
-                            [index[d] for d in self.pager.page_table(sid)]]
-                           for sid in parked],
-            }
-        if self.prefix is not None and len(self.prefix):
-            records, payloads = self.prefix.export_nodes()
-            state["prefix_pages"] = _pad_stack(
-                payloads, max(len(p) for p in payloads))
-            meta["serve"]["prefix"] = {
-                "page_tokens": self.prefix.page_tokens,
-                "mode": self.prefix.mode,
-                "nodes": records,
-                "page_lens": [len(p) for p in payloads],
-                "stream_refs": {str(sid): digests for sid, digests
-                                in self.prefix.stream_refs().items()},
-            }
+        if not parked:
+            return
+        digests = sorted({d for sid in parked
+                          for d in self.pager.page_table(sid)})
+        index = {d: i for i, d in enumerate(digests)}
+        payloads = [self.pager.page_payload(d) for d in digests]
+        # pool-page blobs can exceed the pager's lane-slice page size
+        width = max(self.pager.page_bytes, max(len(p) for p in payloads))
+        state["pages"] = _pad_stack(payloads, width)
+        meta["serve"]["pager"] = {
+            "page_bytes": width,
+            "page_lens": [len(p) for p in payloads],
+            "tables": [[int(sid), int(self.pager.parked_nbytes(sid)),
+                        [index[d] for d in self.pager.page_table(sid)],
+                        self.pager.parked_kind(sid)]
+                       for sid in parked],
+        }
+
+    def _prefix_state(self, state: Dict[str, Any],
+                      meta: Dict[str, Any]) -> None:
+        if self.prefix is None or not len(self.prefix):
+            return
+        records, payloads = self.prefix.export_nodes()
+        state["prefix_pages"] = _pad_stack(
+            payloads, max(len(p) for p in payloads))
+        meta["serve"]["prefix"] = {
+            "page_tokens": self.prefix.page_tokens,
+            "mode": self.prefix.mode,
+            "nodes": records,
+            "page_lens": [len(p) for p in payloads],
+            "stream_refs": {str(sid): digests for sid, digests
+                            in self.prefix.stream_refs().items()},
+        }
+
+    def _serving_state(self) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+        state, meta = self._stream_state_arrays()
+        state["slots"] = jax.device_get(self.slots_cache)
+        self._pager_state(state, meta)
+        self._prefix_state(state, meta)
         return state, meta
 
     def save(self, session: Optional[ResilienceSession] = None):
@@ -580,31 +616,38 @@ class ServeScheduler:
         state, got = session.restore_latest(template, step=step)
 
         self.slots_cache = jax.tree_util.tree_map(jnp.asarray, state["slots"])
-        self.streams = {}
-        for row in range(n):
-            plen, ntok, pos, code, slot, max_new, ran, sub, fin = (
-                int(v) for v in state["meta"][row])
-            self.streams[row] = DecodeStream(
-                sid=row, tokens=[int(t) for t in state["tokens"][row, :ntok]],
-                plen=plen, max_new=max_new, submitted_step=sub, pos=pos,
-                state=_CODE_STATE[code], slot=None if slot < 0 else slot,
-                ran=ran, finished_step=None if fin < 0 else fin)
-        self._runq = deque(int(s) for s in state["runq"] if s >= 0)
-        self._slot_sid = [None if s < 0 else int(s)
-                          for s in state["slot_sid"]]
+        self._load_streams(state, n)
+        self._restore_pager(state, pager_meta)
+        self._restore_prefix(state, prefix_meta)
+        self.step_count = int(sm["step_count"])
+        self._next_sid = int(sm["next_sid"])
+        return got
+
+    def _restore_pager(self, state: Dict[str, Any],
+                       pager_meta: Optional[Dict[str, Any]]) -> None:
         if self.pager is not None:
             for sid in self.pager.table_sids():   # parked + retained
                 self.pager.release(sid)
-        if pager_meta:
-            assert self.pager is not None, \
-                "checkpoint has parked streams but this scheduler has no pager"
-            payloads = [state["pages"][i, :ln].tobytes()
-                        for i, ln in enumerate(pager_meta["page_lens"])]
-            for sid, nbytes, table in pager_meta["tables"]:
+        if not pager_meta:
+            return
+        assert self.pager is not None, \
+            "checkpoint has parked streams but this scheduler has no pager"
+        payloads = [state["pages"][i, :ln].tobytes()
+                    for i, ln in enumerate(pager_meta["page_lens"])]
+        for rec in pager_meta["tables"]:
+            sid, nbytes, table = rec[0], rec[1], rec[2]
+            kind = rec[3] if len(rec) > 3 else "lane"
+            if kind == "pool_pages":
+                # caller-cut pool pages: each digest payload is one blob
+                self.pager.park_pages(int(sid), [payloads[i] for i in table])
+            else:
                 blob = b"".join(payloads[i] for i in table)[:nbytes]
                 # content addressing re-dedups: each unique page is put
                 # once, later tables only bump its refcount
                 self.pager.park_bytes(int(sid), blob, self._lane_manifest)
+
+    def _restore_prefix(self, state: Dict[str, Any],
+                        prefix_meta: Optional[Dict[str, Any]]) -> None:
         if prefix_meta:
             assert self.prefix is not None, \
                 "checkpoint has prefix pages but this scheduler has no prefix cache"
@@ -616,15 +659,475 @@ class ServeScheduler:
                  in prefix_meta["stream_refs"].items()})
         elif self.prefix is not None:
             self.prefix.clear()
-        self.step_count = int(sm["step_count"])
-        self._next_sid = int(sm["next_sid"])
-        return got
 
     # -- lifecycle ----------------------------------------------------------- #
 
     def close(self) -> None:
         if self.pager is not None:
             self.pager.close()
+
+
+class PagedServeScheduler(ServeScheduler):
+    """Continuous batching over one pool-resident paged KV buffer.
+
+    The contiguous :class:`ServeScheduler` keeps a lane cache per slot
+    and moves KV *bytes* on every park/resume cycle (serialize on park,
+    gather on resume).  This scheduler keeps every stream's KV in one
+    shared :class:`~repro.serve.pagepool.DevicePagePool` and hands the
+    jitted step (``model.paged_decode_step``) a page *table* per slot:
+
+    * **admit / park / resume move table entries, never KV bytes** — a
+      parked stream's pages simply stay where they are, and its resume
+      is a host-side row write into the table array
+      (``stats["kv_resume_bytes_moved"]`` stays 0);
+    * KV bytes move only when pool pressure forces a *spill* through the
+      :class:`~repro.serve.kvpage.KVPager` (page-granular, content-
+      addressed — byte-identical pages pool once) and on the matching
+      refill, which is the only path that counts resume bytes;
+    * shared prompt prefixes are shared *physically*: a prefix page
+      resident in the pool is referenced by every admitted stream's
+      table at zero copy and zero compute, and newly prefillled prompt
+      pages are registered back to the
+      :class:`~repro.serve.prefix.PrefixCache` with payloads cut from
+      the pool — byte-compatible with contiguous-lane insertions;
+    * **speculative multi-token decode**: with ``spec_k`` > 0 each step
+      feeds ``1 + spec_k`` tokens per stream — the committed next input
+      plus ``spec_k`` candidates from an :class:`~repro.serve.spec
+      .NGramProposer` — verified in ONE jitted call through the paged
+      kernel's multi-row capability.  The accepted prefix commits with
+      the same refcount/dirty-skip semantics as single-token decode, and
+      because ``paged_decode_step`` reproduces ``decode_step``'s exact
+      per-token computation graph, the emitted sequence is bit-identical
+      to single-token greedy decode for any ``spec_k``.
+
+    Inactive slots point their whole table at the pool's trash page, so
+    their discarded writes can never land in a live stream's KV.
+    """
+
+    def __init__(
+        self,
+        cfg: ArchConfig,
+        model: ModelApi,
+        params: Any,
+        slots: int,
+        max_len: int,
+        pager: Optional[KVPager] = None,
+        session: Optional[ResilienceSession] = None,
+        quantum: int = 0,
+        prefix: Optional[PrefixCache] = None,
+        page_tokens: int = 8,
+        pool_pages: Optional[int] = None,
+        spec_k: int = 0,
+        proposer: Optional[Any] = None,
+    ):
+        super().__init__(cfg, model, params, slots, max_len, pager=pager,
+                         session=session, quantum=quantum, prefix=prefix)
+        if model.paged_decode_step is None:
+            raise ValueError(
+                f"model family {model.family!r} has no paged_decode_step "
+                "(snapshot-state families cannot decode through page tables)")
+        if spec_k < 0:
+            raise ValueError("spec_k must be >= 0")
+        if prefix is not None:
+            if prefix.mode != "slice":
+                raise ValueError("paged decode needs a slice-mode prefix "
+                                 "cache (every leaf with a kv_seq axis)")
+            if prefix.page_tokens != page_tokens:
+                raise ValueError(
+                    f"prefix cache page_tokens {prefix.page_tokens} != pool "
+                    f"page_tokens {page_tokens}: pool-resident sharing needs "
+                    "one page geometry")
+        from repro.serve.pagepool import DevicePagePool
+        from repro.serve.spec import NGramProposer
+        if pool_pages is None:
+            # enough for 2x oversubscription before anything spills
+            pool_pages = 2 * self.slots * (self.max_len // page_tokens)
+        self.pool = DevicePagePool(
+            self._lane_template, model.cache_axes(cfg, 1, max_len),
+            page_tokens, pool_pages)
+        self.slots_cache = None         # lanes live in the pool
+        self.spec_k = int(spec_k)
+        self.proposer = proposer if proposer is not None else NGramProposer()
+        self._ptables: Dict[int, List[int]] = {}    # sid -> phys per page
+        from repro.serve.pagepool import TRASH_PAGE
+        self._trash = TRASH_PAGE
+        self._tables_arr = np.full(
+            (self.slots, self.pool.pages_per_lane), self._trash, np.int32)
+        self._paged_fn = jax.jit(
+            lambda p, pools, tables, pos, toks:
+                model.paged_decode_step(p, pools, tables, pos, toks, cfg))
+        if prefix is not None:
+            prefix.on_evict = self.pool.drop_digest
+        self.stats.update({
+            "kv_resume_bytes_moved": 0, "spec_proposed": 0,
+            "spec_accepted": 0, "spilled": 0, "refilled": 0,
+            "admit_deferred": 0, "prefix_pool_shared": 0,
+            "prefix_pool_loads": 0, "pool_prefix_dropped": 0,
+        })
+
+    # -- admission ---------------------------------------------------------- #
+
+    def _paged_prefill(self, table: List[int], tokens: List[int],
+                       t0: int, t1: int) -> None:
+        """Consume ``tokens[t0:t1]`` through the paged step in
+        :data:`PREFILL_BUCKET`-token chunks (one fixed-shape compile).
+        Chunk padding writes garbage KV past ``t1`` — always into this
+        stream's own pages at positions beyond its committed length, so
+        it is never attended and is overwritten by later real writes."""
+        tables = jnp.asarray(np.asarray(table, np.int32)[None])
+        i = t0
+        while i < t1:
+            m = min(PREFILL_BUCKET, t1 - i)
+            buf = np.zeros((1, PREFILL_BUCKET), np.int32)
+            buf[0, :m] = tokens[i:i + m]
+            _, self.pool.leaves = self._paged_fn(
+                self.params, self.pool.leaves, tables,
+                jnp.asarray([i], np.int32), jnp.asarray(buf))
+            self.stats["prefill_calls"] += 1
+            self.stats["prefill_tokens"] += m
+            i += m
+
+    def _admit_fresh(self, s: DecodeStream) -> List[int]:
+        """Build a joining stream's page table: pool-resident shared
+        prefix pages by *reference* (zero copy, zero compute), cached-
+        but-not-resident prefix pages loaded from the stack, fresh pages
+        for the rest, prompt suffix prefilled in place.  All-or-nothing:
+        a CapacityError rolls every reference back."""
+        pt = self.pool.page_tokens
+        target = s.plen - 1        # the last prompt token runs in the slot
+        table: List[int] = []
+        covered = 0
+        path: List[Any] = []
+        if self.prefix is not None and target > 0:
+            _, path = self.prefix.match(s.tokens[:target])
+        try:
+            for node in path:
+                phys = self.pool.lookup_digest(node.digest)
+                if phys is not None:
+                    self.pool.ref(phys)
+                    self.stats["prefix_pool_shared"] += 1
+                else:
+                    try:
+                        part = self.prefix.read_node_part(node)
+                    except (KeyError, IOError):
+                        break   # payload lost under stack pressure
+                    phys = self.pool.alloc(1)[0]
+                    self.pool.write_token_slice(phys, part)
+                    self.pool.bind_digest(node.digest, phys)
+                    self.stats["prefix_pool_loads"] += 1
+                table.append(phys)
+                covered = node.end
+            if covered:
+                self.prefix.acquire(s.sid, path[:covered // pt])
+                self.stats["prefix_hits"] += 1
+                self.stats["prefill_tokens_saved"] += covered
+            table.extend(self.pool.alloc(self.pool.pages_per_lane - len(table)))
+        except CapacityError:
+            for phys in table:
+                self.pool.deref(phys)
+            if self.prefix is not None:
+                self.prefix.release_stream(s.sid)
+            raise
+        self._paged_prefill(table, s.tokens, covered, target)
+        if self.prefix is not None and target > 0:
+            upto = (target // pt) * pt
+            if upto > covered:
+                new_path = self.prefix.extend(
+                    s.tokens[:upto], upto, None, sid=s.sid,
+                    payload_fn=lambda end:
+                        self.pool.read_token_slice(table[end // pt - 1]))
+                for node in new_path[covered // pt:]:
+                    # pin the freshly prefilled page as the pool-resident
+                    # copy; safe because the owner only ever writes at
+                    # positions >= upto (pages past the registered range)
+                    if self.pool.lookup_digest(node.digest) is None:
+                        self.pool.bind_digest(
+                            node.digest, table[node.end // pt - 1])
+        s.pos = max(target, 0)
+        return table
+
+    def _admit(self, sid: int, slot: int) -> None:
+        s = self.streams[sid]
+        if s.state is StreamState.PARKED:
+            if self.pager is not None and self.pager.is_parked(sid):
+                # spilled: the only resume path that moves KV bytes
+                phys = self.pool.alloc(self.pool.pages_per_lane)
+                try:
+                    blobs = self.pager.fetch_pages(sid, release=True)
+                except Exception:
+                    for p in phys:
+                        self.pool.deref(p)
+                    raise
+                for p, b in zip(phys, blobs):
+                    self.pool.write_blob(p, b)
+                self._ptables[sid] = phys
+                self.stats["refilled"] += 1
+                self.stats["kv_resume_bytes_moved"] += sum(
+                    len(b) for b in blobs)
+            # else: pages never left the pool — resume moves 0 KV bytes
+            self.stats["resumed"] += 1
+        else:
+            self._ptables[sid] = self._admit_fresh(s)
+            self.stats["joined"] += 1
+        s.state, s.slot, s.ran = StreamState.ACTIVE, slot, 0
+        self._slot_sid[slot] = sid
+        self._tables_arr[slot] = self._ptables[sid]
+
+    def _drop_pool_prefix(self) -> bool:
+        """Release one pool-resident prefix page held only by its digest
+        binding (no live stream table) — the payload stays cached in the
+        prefix stack, so this only costs the next admit a reload."""
+        for digest, phys in self.pool.resident_digests().items():
+            if self.pool.refcount(phys) == 1:
+                self.pool.drop_digest(digest)
+                self.stats["pool_prefix_dropped"] += 1
+                return True
+        return False
+
+    def _spill_one(self, protect: int) -> bool:
+        """Spill one pool-resident PARKED stream's pages through the
+        pager (content-addressed blobs: shared/zero pages pool once).
+        Victims run latest — the back of the run queue."""
+        if self.pager is None:
+            return False
+        for sid in reversed(self._runq):
+            if sid == protect or sid not in self._ptables:
+                continue
+            if self.streams[sid].state is not StreamState.PARKED:
+                continue
+            table = self._ptables.pop(sid)
+            try:
+                self.pager.park_pages(
+                    sid, [self.pool.page_blob(p) for p in table])
+            except CapacityError:
+                self._ptables[sid] = table
+                return False        # the tier stack is full too
+            for p in table:
+                self.pool.deref(p)
+            self.stats["spilled"] += 1
+            return True
+        return False
+
+    def _try_admit(self, sid: int, slot: int) -> bool:
+        while True:
+            try:
+                self._admit(sid, slot)
+                return True
+            except CapacityError:
+                if self._drop_pool_prefix() or self._spill_one(protect=sid):
+                    continue
+                self.stats["admit_deferred"] += 1
+                return False
+
+    def _park(self, sid: int) -> bool:
+        """Park = host bookkeeping: the stream's pages stay resident and
+        referenced, only its slot's table row is pointed at the trash
+        page.  Zero KV bytes move; spilling happens later, and only
+        under pool pressure."""
+        s = self.streams[sid]
+        assert s.state is StreamState.ACTIVE and s.slot is not None
+        self._tables_arr[s.slot] = self._trash
+        self._slot_sid[s.slot] = None
+        s.state, s.slot = StreamState.PARKED, None
+        self._runq.append(sid)
+        self.stats["parked"] += 1
+        return True
+
+    def _schedule(self) -> None:
+        for slot in range(self.slots):
+            if self._slot_sid[slot] is None and self._runq:
+                sid = self._runq.popleft()
+                if not self._try_admit(sid, slot):
+                    self._runq.appendleft(sid)
+                    return
+        if not self._runq or self.quantum <= 0:
+            return
+        for slot in range(self.slots):
+            if not self._runq:
+                return
+            sid = self._slot_sid[slot]
+            if sid is None or self.streams[sid].ran < self.quantum:
+                continue
+            self._park(sid)
+            nxt = self._runq.popleft()
+            if not self._try_admit(nxt, slot):
+                self._runq.appendleft(nxt)
+                return
+
+    def _finish(self, s: DecodeStream) -> None:
+        slot = s.slot
+        super()._finish(s)
+        self._tables_arr[slot] = self._trash
+        for phys in self._ptables.pop(s.sid, []):
+            self.pool.deref(phys)
+
+    def resident_streams(self) -> int:
+        """In paged mode every parked stream stays resident — in the
+        pool, or (spilled) in the pager's tier stack."""
+        active = sum(1 for sid in self._slot_sid if sid is not None)
+        parked = sum(1 for s in self.streams.values()
+                     if s.state is StreamState.PARKED)
+        return active + parked
+
+    # -- the decode loop ---------------------------------------------------- #
+
+    def step(self) -> List[Tuple[int, int]]:
+        """One batched paged decode step.  With ``spec_k`` > 0 each
+        active stream feeds its committed next input plus ``spec_k``
+        proposed candidates; the accepted prefix (argmax agreement,
+        exactly greedy semantics) commits, the rest is discarded — the
+        rejected positions' KV writes land beyond the committed length
+        and are overwritten by the next step's real writes.  May emit
+        several ``(sid, token)`` pairs per stream per step."""
+        self._schedule()
+        active = [(slot, self.streams[sid])
+                  for slot, sid in enumerate(self._slot_sid)
+                  if sid is not None]
+        if not active:
+            return []
+        T = self.spec_k + 1
+        feed = np.zeros((self.slots, T), np.int32)
+        pos = np.zeros((self.slots,), np.int32)
+        known = {}
+        for slot, s in active:
+            pos[slot] = s.pos
+            k = min(T, len(s.tokens) - s.pos)
+            feed[slot, :k] = s.tokens[s.pos:s.pos + k]
+            known[s.sid] = k
+            if k < T:
+                feed[slot, k:] = self.proposer.propose(s.tokens, T - k)
+                self.stats["spec_proposed"] += T - k
+        out, self.pool.leaves = self._paged_fn(
+            self.params, self.pool.leaves, jnp.asarray(self._tables_arr),
+            jnp.asarray(pos), jnp.asarray(feed))
+        out = np.asarray(out)
+        emitted: List[Tuple[int, int]] = []
+        for slot, s in active:
+            s.ran += 1
+            accepted = 0
+            i = 0
+            while True:
+                s.pos += 1
+                if s.pos >= len(s.tokens):
+                    tok = int(out[slot, i])
+                    s.tokens.append(tok)
+                    emitted.append((s.sid, tok))
+                if s.n_emitted >= s.max_new or s.pos >= self.max_len:
+                    self._finish(s)
+                    break
+                i += 1
+                if i >= T or feed[slot, i] != s.tokens[s.pos]:
+                    break       # candidate rejected: discard the rest
+                if i >= known[s.sid]:
+                    accepted += 1
+            self.stats["spec_accepted"] += accepted
+        self.step_count += 1
+        self.stats["steps"] += 1
+        self.stats["max_resident"] = max(self.stats["max_resident"],
+                                         self.resident_streams())
+        return emitted
+
+    # -- checkpoint / restore ----------------------------------------------- #
+    #
+    # Paged-mode fixed-shape state replaces the per-slot "slots" caches:
+    #   pool     every pool leaf, byte-identical (trash page and
+    #            unallocated slots included)
+    #   ptables  (R, pages_per_lane) int32 physical tables, -1-padded
+    # The allocator (refcounts, free list, digest residency) and the
+    # spilled streams' page-granular pager tables ride in meta.
+
+    def _serving_state(self) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+        state, meta = self._stream_state_arrays()
+        state["pool"] = self.pool.snapshot()
+        sids = sorted(self._ptables)
+        ptables = np.full((max(len(sids), 1), self.pool.pages_per_lane),
+                          -1, np.int32)
+        for row, sid in enumerate(sids):
+            ptables[row, :len(self._ptables[sid])] = self._ptables[sid]
+        state["ptables"] = ptables
+        meta["serve"]["paged"] = {
+            "page_tokens": self.pool.page_tokens,
+            "pool_pages": self.pool.n_pages,
+            "spec_k": self.spec_k,
+            "ptable_sids": [int(sid) for sid in sids],
+            "refs": {str(p): int(r)
+                     for p, r in self.pool.refcounts().items()},
+            "digest_phys": self.pool.resident_digests(),
+        }
+        self._pager_state(state, meta)
+        self._prefix_state(state, meta)
+        return state, meta
+
+    def restore(self, session: Optional[ResilienceSession] = None,
+                step: Optional[int] = None) -> int:
+        session = session or self.session
+        assert session is not None, "no ResilienceSession attached"
+        steps = session.available_steps()
+        if not steps:
+            raise RuntimeError("no checkpoint available to restore")
+        step = max(steps) if step is None else step
+        sm = session.checkpoint_meta(step).get("serve")
+        if not sm:
+            raise RuntimeError(f"checkpoint {step} carries no serving state")
+        pm = sm.get("paged")
+        if not pm:
+            raise RuntimeError(
+                "checkpoint was written by the contiguous scheduler; "
+                "restore it with ServeScheduler")
+        if sm["slots"] != self.slots or sm["max_len"] != self.max_len:
+            raise ValueError(
+                f"scheduler shape mismatch: checkpoint has slots={sm['slots']} "
+                f"max_len={sm['max_len']}, this scheduler has "
+                f"slots={self.slots} max_len={self.max_len}")
+        if (pm["page_tokens"] != self.pool.page_tokens
+                or pm["pool_pages"] != self.pool.n_pages):
+            raise ValueError(
+                f"pool geometry mismatch: checkpoint has page_tokens="
+                f"{pm['page_tokens']} pool_pages={pm['pool_pages']}, this "
+                f"pool has page_tokens={self.pool.page_tokens} "
+                f"pool_pages={self.pool.n_pages}")
+        n, cap = sm["n_streams"], sm["cap"]
+        pager_meta = sm.get("pager")
+        prefix_meta = sm.get("prefix")
+        template: Dict[str, Any] = {
+            "tokens": np.zeros((n, cap), np.int32),
+            "meta": np.zeros((n, self._META_COLS), np.int32),
+            "runq": np.zeros((n,), np.int32),
+            "slot_sid": np.zeros((self.slots,), np.int32),
+            "pool": {name: np.zeros(l.shape, l.dtype)
+                     for name, l in self.pool.leaves.items()},
+            "ptables": np.zeros(
+                (max(len(pm["ptable_sids"]), 1), self.pool.pages_per_lane),
+                np.int32),
+        }
+        if pager_meta:
+            template["pages"] = np.zeros(
+                (len(pager_meta["page_lens"]), pager_meta["page_bytes"]),
+                np.uint8)
+        if prefix_meta:
+            template["prefix_pages"] = np.zeros(
+                (len(prefix_meta["page_lens"]),
+                 max(prefix_meta["page_lens"])), np.uint8)
+        state, got = session.restore_latest(template, step=step)
+        self._load_streams(state, n)
+        self.pool.load(state["pool"],
+                       {int(p): int(r) for p, r in pm["refs"].items()},
+                       pm["digest_phys"])
+        self._ptables = {
+            int(sid): [int(p) for p in state["ptables"][row] if p >= 0]
+            for row, sid in enumerate(pm["ptable_sids"])}
+        self._tables_arr = np.full(
+            (self.slots, self.pool.pages_per_lane), self._trash, np.int32)
+        for slot, sid in enumerate(self._slot_sid):
+            if sid is not None:
+                self._tables_arr[slot] = self._ptables[sid]
+        self._restore_pager(state, pager_meta)
+        self._restore_prefix(state, prefix_meta)
+        if self.prefix is not None:
+            self.prefix.on_evict = self.pool.drop_digest
+        self.step_count = int(sm["step_count"])
+        self._next_sid = int(sm["next_sid"])
+        return got
 
 
 def _pad_stack(payloads: List[bytes], width: int) -> np.ndarray:

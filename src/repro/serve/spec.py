@@ -1,0 +1,57 @@
+"""N-gram speculative proposer (prompt-lookup decoding).
+
+Speculative multi-token decode needs candidate tokens that are cheap to
+produce and right often enough to amortize the k-row verification step.
+For serving, the cheapest useful draft model is the stream's *own
+history*: greedy decode loops and prompts echo (code completion repeats
+identifiers, chat repeats the user's phrasing), so the continuation of
+the most recent earlier occurrence of the current n-gram suffix is a
+strong proposal — "prompt lookup decoding", no draft network at all.
+
+The proposer is a pure function of the token history, which is exactly
+the state the scheduler already checkpoints — a restored scheduler
+proposes the same candidates and replays the same accept/reject
+sequence, preserving the kill/restore byte-identity guarantee.
+"""
+
+from __future__ import annotations
+
+from typing import List, Sequence
+
+
+class NGramProposer:
+    """Propose ``k`` candidate tokens by suffix lookup over the history.
+
+    Tries the longest suffix n-gram first (``max_n`` down to 1); on a
+    match at position j, proposes ``history[j+n : j+n+k]``.  Shortfall is
+    padded by repeating the last proposed (or last history) token — the
+    degenerate proposal that wins exactly when greedy decode is looping.
+    """
+
+    def __init__(self, max_n: int = 3, window: int = 256):
+        if max_n < 1:
+            raise ValueError("max_n must be >= 1")
+        self.max_n = int(max_n)
+        self.window = int(window)   # cap the scan for long histories
+
+    def propose(self, history: Sequence[int], k: int) -> List[int]:
+        if k <= 0:
+            return []
+        hist = [int(t) for t in history]
+        if not hist:
+            return [0] * k
+        lo = max(0, len(hist) - self.window)
+        out: List[int] = []
+        for n in range(min(self.max_n, len(hist)), 0, -1):
+            tail = hist[-n:]
+            # most recent earlier occurrence of the suffix n-gram
+            for j in range(len(hist) - n - 1, lo - 1, -1):
+                if hist[j:j + n] == tail:
+                    out = hist[j + n:j + n + k]
+                    break
+            if out:
+                break
+        last = out[-1] if out else hist[-1]
+        while len(out) < k:
+            out.append(last)
+        return out[:k]

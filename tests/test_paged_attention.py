@@ -139,3 +139,77 @@ def test_paged_dtypes(dtype):
     assert got.dtype == dtype
     np.testing.assert_allclose(np.asarray(got, np.float32), np.asarray(want),
                                atol=tol, rtol=tol)
+
+
+# ---------------------------------------------------------------------- #
+# multi-token verification rows (speculative decode)
+# ---------------------------------------------------------------------- #
+
+
+def test_multitok_jnp_vs_per_token_decode():
+    """(B, T) verification rows == T independent single-token calls at
+    positions pos..pos+T-1 — the property speculative decode stands on."""
+    from repro.kernels.paged_attention import paged_attention_multitok
+
+    b, s, hq, hkv, d, page, t = 2, 32, 4, 2, 8, 8, 3
+    ks = keys(21, 3)
+    q = jax.random.normal(ks[0], (b, t, hq, d))
+    kc = jax.random.normal(ks[1], (b, s, hkv, d))
+    vc = jax.random.normal(ks[2], (b, s, hkv, d))
+    k_pages, v_pages, table = paginate_cache(kc, vc, page)
+    base = np.asarray([10, 17], np.int32)
+    positions = jnp.asarray(base[:, None] + np.arange(t)[None], jnp.int32)
+    got = paged_attention_multitok(q, k_pages, v_pages, table, positions)
+    for i in range(t):
+        want = decode_attention(q[:, i], kc, vc,
+                                jnp.asarray(base + i + 1, jnp.int32))
+        np.testing.assert_allclose(np.asarray(got[:, i]), np.asarray(want),
+                                   atol=3e-6, rtol=1e-5)
+
+
+def test_multitok_pallas_folds_rows_into_batch():
+    """The Pallas multi-row path (fold (B,T) into the kernel batch axis)
+    == the jnp multi-token oracle, including ragged per-row positions."""
+    from repro.kernels.paged_attention import (
+        paged_attention_multitok, paged_attention_pallas_multitok)
+
+    b, s, hq, hkv, d, page, t = 3, 24, 4, 1, 8, 8, 4
+    ks = keys(23, 3)
+    q = jax.random.normal(ks[0], (b, t, hq, d))
+    kc = jax.random.normal(ks[1], (b, s, hkv, d))
+    vc = jax.random.normal(ks[2], (b, s, hkv, d))
+    k_pages, v_pages, table = paginate_cache(kc, vc, page)
+    base = np.asarray([3, 11, 19], np.int32)
+    positions = jnp.asarray(base[:, None] + np.arange(t)[None], jnp.int32)
+    want = paged_attention_multitok(q, k_pages, v_pages, table, positions)
+    got = paged_attention_pallas_multitok(q, k_pages, v_pages, table,
+                                          positions, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=3e-6, rtol=1e-5)
+
+
+def test_multitok_causal_within_the_candidate_window():
+    """Candidate i must see keys up to pos+i and NOT the later
+    candidates' keys: perturbing key pos+T-1 must not change row 0."""
+    from repro.kernels.paged_attention import paged_attention_multitok
+
+    b, s, hq, hkv, d, page, t = 1, 16, 2, 2, 8, 8, 3
+    ks = keys(29, 3)
+    q = jax.random.normal(ks[0], (b, t, hq, d))
+    kc = np.array(jax.random.normal(ks[1], (b, s, hkv, d)))
+    vc = np.array(jax.random.normal(ks[2], (b, s, hkv, d)))
+    positions = jnp.asarray([[4, 5, 6]], jnp.int32)
+    k_pages, v_pages, table = paginate_cache(jnp.asarray(kc),
+                                             jnp.asarray(vc), page)
+    base_out = paged_attention_multitok(q, k_pages, v_pages, table, positions)
+    kc[0, 6] += 100.0
+    vc[0, 6] -= 100.0
+    k_pages, v_pages, table = paginate_cache(jnp.asarray(kc),
+                                             jnp.asarray(vc), page)
+    pert_out = paged_attention_multitok(q, k_pages, v_pages, table, positions)
+    # rows 0 and 1 attend only keys <= 4 and 5: unchanged
+    np.testing.assert_array_equal(np.asarray(base_out[:, :2]),
+                                  np.asarray(pert_out[:, :2]))
+    # row 2 attends key 6: must change
+    assert not np.allclose(np.asarray(base_out[:, 2]),
+                           np.asarray(pert_out[:, 2]))

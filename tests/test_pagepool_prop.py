@@ -1,0 +1,249 @@
+"""Property harness for the device page pool allocator.
+
+The in-jit paged decode path stands on one host-side invariant: the
+allocator never leaks a page and never double-frees one, across any
+interleaving of admit / park / spill / resume / finish / kill.  These
+tests drive randomized operation sequences against a shadow model and
+check, after every operation:
+
+* conservation — ``free + used == n_pages``, the trash page is never
+  allocated, no physical page is both free and referenced;
+* exact refcounts — every page's refcount equals the number of live
+  stream tables referencing it plus its digest binding (a refcount is
+  zero iff no live stream and no resident prefix digest references it);
+* pager dedup never inflates — ``pooled_bytes <= parked_bytes``;
+* kill (snapshot/load) round-trips the allocator bit-exactly.
+
+With `hypothesis` installed (CI fast lane) the sequences are minimized
+counter-examples; without it the fixed-seed random fallback runs the
+same core.
+"""
+
+import numpy as np
+import pytest
+
+from hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+
+from repro.memory.tiers import CapacityError
+from repro.serve.kvpage import KVPager
+from repro.serve.pagepool import TRASH_PAGE, DevicePagePool
+
+N_PAGES = 10          # tiny on purpose: pressure paths fire constantly
+PAGE_TOKENS = 2
+MAX_LEN = 8           # -> 4 pages per lane
+PAGES_PER_LANE = MAX_LEN // PAGE_TOKENS
+
+
+def tiny_pool() -> DevicePagePool:
+    template = {
+        "k": np.zeros((2, 1, MAX_LEN, 2, 3), np.float32),
+        "v": np.zeros((2, 1, MAX_LEN, 2, 3), np.float32),
+    }
+    axes = {
+        "k": ("layers", "batch", "kv_seq", "heads", "head_dim"),
+        "v": ("layers", "batch", "kv_seq", "heads", "head_dim"),
+    }
+    return DevicePagePool(template, axes, PAGE_TOKENS, N_PAGES)
+
+
+class Harness:
+    """Drives pool + pager and mirrors them in a pure-python shadow."""
+
+    def __init__(self):
+        self.pool = tiny_pool()
+        self.pager = KVPager.for_capacity(fast_bytes=10**8, page_bytes=256)
+        self.tables = {}           # sid -> [phys] (pool-resident streams)
+        self.spilled = set()       # sids parked out through the pager
+        self.bound = {}            # digest -> phys (shadow of residency)
+        self.next_sid = 0
+
+    # -- operations (each mirrors one scheduler-side transition) -------- #
+
+    def admit(self, share_digest):
+        """A fresh stream allocates its table; with ``share_digest`` its
+        first page references the digest-bound page instead."""
+        sid, self.next_sid = self.next_sid, self.next_sid + 1
+        table = []
+        try:
+            if share_digest is not None and share_digest in self.bound:
+                phys = self.bound[share_digest]
+                self.pool.ref(phys)
+                table.append(phys)
+            table.extend(self.pool.alloc(PAGES_PER_LANE - len(table)))
+        except CapacityError:
+            for phys in table:
+                self.pool.deref(phys)
+            return
+        self.tables[sid] = table
+
+    def bind(self, digest):
+        """Pin a fresh page as a prefix digest's pool-resident copy."""
+        if digest in self.bound:
+            return
+        try:
+            phys = self.pool.alloc(1)[0]
+        except CapacityError:
+            return
+        self.pool.bind_digest(digest, phys)
+        self.pool.deref(phys)          # keep only the binding's reference
+        self.bound[digest] = phys
+
+    def drop(self, digest):
+        if digest in self.bound:
+            self.pool.drop_digest(digest)
+            del self.bound[digest]
+
+    def spill(self, pick):
+        """Park one resident stream's pages out through the pager."""
+        if not self.tables:
+            return
+        sid = sorted(self.tables)[pick % len(self.tables)]
+        table = self.tables.pop(sid)
+        self.pager.park_pages(sid, [self.pool.page_blob(p) for p in table])
+        for phys in table:
+            self.pool.deref(phys)
+        self.spilled.add(sid)
+
+    def resume(self, pick):
+        """Refill one spilled stream into freshly allocated pages."""
+        if not self.spilled:
+            return
+        sid = sorted(self.spilled)[pick % len(self.spilled)]
+        try:
+            phys = self.pool.alloc(PAGES_PER_LANE)
+        except CapacityError:
+            return
+        blobs = self.pager.fetch_pages(sid, release=True)
+        assert len(blobs) == PAGES_PER_LANE
+        for p, b in zip(phys, blobs):
+            self.pool.write_blob(p, b)
+        self.spilled.remove(sid)
+        self.tables[sid] = phys
+
+    def finish(self, pick):
+        if not self.tables:
+            return
+        sid = sorted(self.tables)[pick % len(self.tables)]
+        for phys in self.tables.pop(sid):
+            self.pool.deref(phys)
+
+    def kill(self):
+        """Process death: snapshot -> fresh pool -> load must round-trip
+        the allocator (refcounts, free list, digest map) bit-exactly."""
+        arrays = self.pool.snapshot()
+        refs = self.pool.refcounts()
+        digests = self.pool.resident_digests()
+        fresh = tiny_pool()
+        fresh.load(arrays, refs, digests)
+        assert fresh.refcounts() == refs
+        assert fresh.resident_digests() == digests
+        assert fresh.free_pages() == self.pool.free_pages()
+        self.pool = fresh
+
+    # -- invariants -------------------------------------------------------- #
+
+    def check(self):
+        pool = self.pool
+        assert pool.free_pages() + pool.used_pages() == N_PAGES
+        assert pool.refcount(TRASH_PAGE) == 0
+        # exact refcounts: table references + digest bindings, nothing else
+        want = {}
+        for table in self.tables.values():
+            for phys in table:
+                want[phys] = want.get(phys, 0) + 1
+        for phys in self.bound.values():
+            want[phys] = want.get(phys, 0) + 1
+        assert pool.refcounts() == want, (
+            f"leak or double-free: pool says {pool.refcounts()}, "
+            f"live references say {want}")
+        # dedup never inflates: the pager stores at most the logical bytes
+        assert self.pager.pooled_bytes() <= self.pager.parked_bytes()
+
+    def drain(self):
+        """Tear everything down; the pool must come back empty."""
+        for pick in range(len(self.tables)):
+            self.finish(0)
+        for digest in list(self.bound):
+            self.drop(digest)
+        for sid in list(self.spilled):
+            self.pager.release(sid)
+            self.spilled.remove(sid)
+        assert self.pool.used_pages() == 0, self.pool.refcounts()
+        assert self.pool.free_pages() == N_PAGES
+        assert self.pager.pooled_bytes() == 0
+
+
+DIGESTS = ["dA", "dB", "dC"]
+
+
+def run_sequence(ops):
+    """ops: list of (code, arg) pairs; the deterministic property core."""
+    h = Harness()
+    for code, arg in ops:
+        if code == 0:
+            h.admit(share_digest=DIGESTS[arg % len(DIGESTS)]
+                    if arg % 2 else None)
+        elif code == 1:
+            h.bind(DIGESTS[arg % len(DIGESTS)])
+        elif code == 2:
+            h.drop(DIGESTS[arg % len(DIGESTS)])
+        elif code == 3:
+            h.spill(arg)
+        elif code == 4:
+            h.resume(arg)
+        elif code == 5:
+            h.finish(arg)
+        elif code == 6:
+            h.kill()
+        h.check()
+    h.drain()
+
+
+def test_fixed_seed_random_sequences():
+    """Fallback property run: 40 random op sequences, fixed seed."""
+    rng = np.random.default_rng(1234)
+    for _ in range(40):
+        n = int(rng.integers(5, 30))
+        ops = [(int(rng.integers(0, 7)), int(rng.integers(0, 8)))
+               for _ in range(n)]
+        run_sequence(ops)
+
+
+def test_directed_share_then_kill_then_drain():
+    """Worst case by construction: share one digest page across several
+    streams, kill mid-flight, spill under pressure, then drain."""
+    ops = ([(1, 0)] + [(0, 1)] * 4      # bind dA, 4 streams sharing it
+           + [(6, 0)]                   # kill/restore
+           + [(3, 0), (3, 1)]           # spill two streams
+           + [(0, 3)] * 3               # admit more (pool now tight)
+           + [(4, 0), (6, 0), (2, 0)])  # resume, kill again, drop dA
+    run_sequence(ops)
+
+
+@given(st.lists(st.tuples(st.integers(min_value=0, max_value=6),
+                          st.integers(min_value=0, max_value=7)),
+                min_size=1, max_size=40))
+@settings(max_examples=60, deadline=None)
+def test_pool_never_leaks_or_double_frees(ops):
+    """Hypothesis property: ANY admit/park/resume/finish/kill sequence
+    keeps refcounts exactly equal to live references and drains to an
+    empty pool."""
+    run_sequence(ops)
+
+
+def test_trash_page_is_never_allocatable():
+    pool = tiny_pool()
+    seen = set()
+    while pool.free_pages():
+        seen.update(pool.alloc(1))
+    assert TRASH_PAGE not in seen
+    assert len(seen) == N_PAGES
+
+
+def test_alloc_is_all_or_nothing():
+    pool = tiny_pool()
+    pool.alloc(N_PAGES - 1)
+    free_before = pool.free_pages()
+    with pytest.raises(CapacityError):
+        pool.alloc(2)
+    assert pool.free_pages() == free_before

@@ -289,7 +289,7 @@ def test_checkpoint_pages_are_deduped(served_model, tmp_path):
         assert len(s1.pager.parked_sids()) >= 2
         s1.save()
         meta = session.checkpoint_meta(s1.step_count)["serve"]["pager"]
-        logical = sum(nbytes for _, nbytes, _ in meta["tables"])
+        logical = sum(nbytes for _, nbytes, _, _ in meta["tables"])
         stored = sum(meta["page_lens"])
         assert stored < logical, (
             f"checkpoint page set not dedup'd: stored {stored} >= "

