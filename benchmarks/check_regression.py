@@ -1,0 +1,124 @@
+"""Bench-regression gate: fresh fig10 artifact vs the committed baseline.
+
+Seeds the serving perf trajectory: CI regenerates
+``BENCH_fig10_serve_throughput.json`` every run, and this gate fails the
+build when a steady-state metric drops more than ``--max-drop`` (default
+20%) below the committed baseline.
+
+Absolute tokens/s are machine-bound — a CI runner is not the box that
+produced the committed artifact — so the gate compares machine-normalized
+ratios (same-host A/B pairs the bench itself measures) plus
+dimensionless rates:
+
+  paged_vs_unpaged      rwkv serving: tiered paging vs flat fast tier
+  pool_vs_contiguous    dense: in-jit page-pool decode vs lane serialize
+  spec_vs_contiguous    dense: speculative decode overhead drift
+  int8_vs_fp32          quant: int8 residency steady-state tokens/s
+  spec_acceptance_rate  dense: n-gram speculative acceptance
+  quant_resident_ratio  quant: resident streams at equal device bytes
+
+A metric fails when ``fresh < (1 - max_drop) * baseline``.  Metrics the
+baseline does not carry yet are seeded (reported, never failed), so new
+bench sections can land without a flag day.
+
+  PYTHONPATH=src python -m benchmarks.check_regression \
+      --baseline /tmp/fig10_baseline.json \
+      --fresh BENCH_fig10_serve_throughput.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+from typing import Optional
+
+# metric name -> (numerator path, denominator path or None for a rate)
+METRICS = [
+    ("paged_vs_unpaged",
+     "paged.tokens_per_s", "unpaged.tokens_per_s"),
+    ("pool_vs_contiguous",
+     "dense.pool.tokens_per_s", "dense.contiguous.tokens_per_s"),
+    ("spec_vs_contiguous",
+     "dense.pool_spec.tokens_per_s", "dense.contiguous.tokens_per_s"),
+    ("int8_vs_fp32",
+     "quant.int8.tokens_per_s", "quant.fp32.tokens_per_s"),
+    ("spec_acceptance_rate", "dense.spec_acceptance_rate", None),
+    ("quant_resident_ratio", "quant.resident_ratio", None),
+]
+
+
+def _get(doc: dict, path: str) -> Optional[float]:
+    node = doc
+    for part in path.split("."):
+        if not isinstance(node, dict) or part not in node:
+            return None
+        node = node[part]
+    try:
+        return float(node)
+    except (TypeError, ValueError):
+        return None
+
+
+def _metric(doc: dict, num: str, den: Optional[str]) -> Optional[float]:
+    a = _get(doc, num)
+    if a is None:
+        return None
+    if den is None:
+        return a
+    b = _get(doc, den)
+    if not b:
+        return None
+    return a / b
+
+
+def check(baseline: dict, fresh: dict, max_drop: float) -> int:
+    failures = []
+    print(f"{'metric':24s} {'baseline':>10s} {'fresh':>10s} {'floor':>10s}")
+    for name, num, den in METRICS:
+        base = _metric(baseline, num, den)
+        new = _metric(fresh, num, den)
+        if new is None:
+            # the fresh artifact must carry every metric the gate knows;
+            # a silently vanished section is itself a regression
+            failures.append(f"{name}: missing from fresh artifact")
+            print(f"{name:24s} {'-':>10s} {'MISSING':>10s}")
+            continue
+        if base is None:
+            print(f"{name:24s} {'-':>10s} {new:10.4f}   (seeded — "
+                  "baseline lacks it)")
+            continue
+        floor = (1.0 - max_drop) * base
+        status = "OK" if new >= floor else "FAIL"
+        print(f"{name:24s} {base:10.4f} {new:10.4f} {floor:10.4f}   {status}")
+        if new < floor:
+            failures.append(
+                f"{name}: {new:.4f} < floor {floor:.4f} "
+                f"(baseline {base:.4f}, max drop {max_drop:.0%})")
+    if failures:
+        print("\nREGRESSION:", file=sys.stderr)
+        for f in failures:
+            print(f"  {f}", file=sys.stderr)
+        return 1
+    print("\nOK: no metric dropped more than "
+          f"{max_drop:.0%} below the committed baseline")
+    return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", required=True,
+                    help="committed BENCH_fig10_serve_throughput.json")
+    ap.add_argument("--fresh", required=True,
+                    help="artifact the current run just produced")
+    ap.add_argument("--max-drop", type=float, default=0.2,
+                    help="max fractional drop before failing (default 0.2)")
+    args = ap.parse_args()
+    baseline = json.loads(Path(args.baseline).read_text())
+    fresh = json.loads(Path(args.fresh).read_text())
+    return check(baseline, fresh, args.max_drop)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -34,6 +34,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.flash_attention import NEG_INF, STATS_LANES
+from repro.memory.codecs import int8_quantize
 
 
 def _pa_kernel(
@@ -215,6 +216,179 @@ def paged_attention_pallas_multitok(
     lengths = positions.reshape(b * t).astype(jnp.int32) + 1
     out = paged_attention_pallas(q_rows, k_pages, v_pages, table_rows,
                                  lengths, scale=scale, interpret=interpret)
+    return out.reshape(b, t, hq, dv)
+
+
+# ---------------------------------------------------------------------- #
+# quantized pages: int8 payload + per-(page, kv-head) float32 scales
+# ---------------------------------------------------------------------- #
+
+
+def quantize_pages(pages: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Quantize a physical page pool (N, page, Hkv, D) to the kernel's
+    int8 layout: values int8, one float32 scale per (slot, token, head)
+    — i.e. per last-axis channel, the same granularity as the quantized
+    :class:`~repro.serve.pagepool.DevicePagePool`.  Returns
+    ``(q (N, page, Hkv, D) int8, scales (N, page, Hkv) f32)``."""
+    q, scale = int8_quantize(pages, axis=-1)
+    return q, scale[..., 0]
+
+
+def _pa_quant_kernel(
+    pt_ref, len_ref, q_ref, k_ref, ks_ref, v_ref, vs_ref, o_ref,
+    m_scr, l_scr, acc_scr, *, scale: float, page: int, npages: int,
+):
+    """The running-softmax body of :func:`_pa_kernel` over int8 pages:
+    the page's K/V blocks arrive in VMEM as int8 with their scale rows
+    prefetched alongside, and dequantize right before the dot — the
+    host never sees a decoded page on this path."""
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    length = len_ref[b]
+    run = (j * page) < length
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0, 0, :].astype(jnp.float32).reshape(1, -1)   # (1, d)
+        # in-VMEM dequant: int8 block * per-token-row scale
+        k = k_ref[0, :, 0, :].astype(jnp.float32) \
+            * ks_ref[0, :, 0].reshape(-1, 1)                    # (page, d)
+        v = v_ref[0, :, 0, :].astype(jnp.float32) \
+            * vs_ref[0, :, 0].reshape(-1, 1)                    # (page, dv)
+        v_rows = j * page + jax.lax.broadcasted_iota(jnp.int32, v.shape, 0)
+        v = jnp.where(v_rows < length, v, jnp.zeros_like(v))
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale                                               # (1, page)
+        k_pos = j * page + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(k_pos < length, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new[:, :1])
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, -1, keepdims=True)
+        m_scr[...] = m_new
+        pv = jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        acc_scr[...] = acc_scr[...] * corr[:, :1] + pv
+
+    @pl.when(j == npages - 1)
+    def _fin():
+        l = l_scr[..., :1]
+        o_ref[0] = (acc_scr[...] / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def paged_attention_pallas_quant(
+    q: jax.Array,           # (B, Hq, D) — one new token per sequence
+    k_pages: jax.Array,     # (N, page, Hkv, D) int8 key pool
+    k_scales: jax.Array,    # (N, page, Hkv) f32 per-channel scales
+    v_pages: jax.Array,     # (N, page, Hkv, Dv) int8 value pool
+    v_scales: jax.Array,    # (N, page, Hkv) f32
+    page_table: jax.Array,  # (B, nP) int32
+    lengths: jax.Array,     # (B,)
+    scale: Optional[float] = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """:func:`paged_attention_pallas` over a quantized pool: same grid,
+    same scalar-prefetched table, plus one (1, page, 1) scale block per
+    K/V block so dequantization happens in VMEM inside the running-
+    softmax loop.  Gated against the fp32 kernel by an allclose
+    tolerance derived from the int8 step (tests + fig10)."""
+    b, hq, d = q.shape
+    n, page, hkv, dv = v_pages.shape
+    assert hq % hkv == 0, (hq, hkv)
+    assert k_pages.dtype == jnp.int8 and v_pages.dtype == jnp.int8
+    g = hq // hkv
+    npages = page_table.shape[1]
+    scale = float(d ** -0.5) if scale is None else float(scale)
+    page_table = jnp.clip(page_table.astype(jnp.int32), 0, n - 1)
+
+    kernel = functools.partial(_pa_quant_kernel, scale=scale, page=page,
+                               npages=npages)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,      # page_table, lengths
+        grid=(b, hq, npages),
+        in_specs=[
+            pl.BlockSpec((1, 1, d), lambda bi, h, j, pt, ln: (bi, h, 0)),
+            pl.BlockSpec((1, page, 1, d),
+                         lambda bi, h, j, pt, ln: (pt[bi, j], 0, h // g, 0)),
+            pl.BlockSpec((1, page, 1),
+                         lambda bi, h, j, pt, ln: (pt[bi, j], 0, h // g)),
+            pl.BlockSpec((1, page, 1, dv),
+                         lambda bi, h, j, pt, ln: (pt[bi, j], 0, h // g, 0)),
+            pl.BlockSpec((1, page, 1),
+                         lambda bi, h, j, pt, ln: (pt[bi, j], 0, h // g)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, dv), lambda bi, h, j, pt, ln: (bi, h, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1, STATS_LANES), jnp.float32),
+            pltpu.VMEM((1, STATS_LANES), jnp.float32),
+            pltpu.VMEM((1, dv), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hq, dv), q.dtype),
+        interpret=interpret,
+    )(page_table, lengths.astype(jnp.int32), q,
+      k_pages, k_scales.astype(jnp.float32),
+      v_pages, v_scales.astype(jnp.float32))
+
+
+def paged_attention_quant(
+    q: jax.Array,           # (B, Hq, D)
+    k_pages: jax.Array,     # (N, page, Hkv, D) int8
+    k_scales: jax.Array,    # (N, page, Hkv) f32
+    v_pages: jax.Array,     # (N, page, Hkv, Dv) int8
+    v_scales: jax.Array,    # (N, page, Hkv) f32
+    page_table: jax.Array,  # (B, nP) int32
+    lengths: jax.Array,     # (B,)
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Pure-jnp fallback for the quantized kernel: dequantize the whole
+    pool and delegate — the oracle :func:`paged_attention_pallas_quant`
+    is tested against bit-for-bit (same dequant math, f32 throughout)."""
+    kf = k_pages.astype(jnp.float32) * k_scales[..., None]
+    vf = v_pages.astype(jnp.float32) * v_scales[..., None]
+    return paged_attention(q.astype(jnp.float32), kf, vf, page_table,
+                           lengths, scale=scale).astype(q.dtype)
+
+
+def paged_attention_pallas_quant_multitok(
+    q: jax.Array,           # (B, T, Hq, D)
+    k_pages: jax.Array,     # (N, page, Hkv, D) int8
+    k_scales: jax.Array,    # (N, page, Hkv) f32
+    v_pages: jax.Array,     # (N, page, Hkv, Dv) int8
+    v_scales: jax.Array,    # (N, page, Hkv) f32
+    page_table: jax.Array,  # (B, nP) int32
+    positions: jax.Array,   # (B, T)
+    scale: Optional[float] = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Speculative verification over a quantized pool: the same (B, T)
+    -> batch fold as :func:`paged_attention_pallas_multitok`, riding the
+    quantized single-token kernel."""
+    b, t, hq, d = q.shape
+    dv = v_pages.shape[-1]
+    q_rows = q.reshape(b * t, hq, d)
+    table_rows = jnp.repeat(page_table, t, axis=0)            # (B*T, nP)
+    lengths = positions.reshape(b * t).astype(jnp.int32) + 1
+    out = paged_attention_pallas_quant(
+        q_rows, k_pages, k_scales, v_pages, v_scales, table_rows,
+        lengths, scale=scale, interpret=interpret)
     return out.reshape(b, t, hq, dv)
 
 

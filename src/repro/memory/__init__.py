@@ -9,6 +9,15 @@ from repro.memory.tiers import (
     TPU_V5E_TIERS,
 )
 from repro.memory.store import BufferStore, NAMStore
+from repro.memory.codecs import (
+    Codec,
+    CodecRule,
+    Int8Codec,
+    ZlibCodec,
+    int8_dequantize,
+    int8_quantize,
+    make_codec,
+)
 from repro.memory.stack import (
     HitRatePromotion,
     KeyClass,
@@ -28,6 +37,13 @@ __all__ = [
     "TPU_V5E_TIERS",
     "BufferStore",
     "NAMStore",
+    "Codec",
+    "CodecRule",
+    "Int8Codec",
+    "ZlibCodec",
+    "int8_dequantize",
+    "int8_quantize",
+    "make_codec",
     "HitRatePromotion",
     "KeyClass",
     "PlacementRule",

@@ -1,0 +1,274 @@
+"""Tier codecs: trade compute for tier capacity (DEEP-ER follow-on).
+
+The persistent-memory line of work behind the DEEP-ER hierarchy ends at
+an obvious next step: once placement is policy, *representation* can be
+policy too.  A page demoted past the fast tier does not need its fast-
+tier byte layout — it needs to come back close enough, cheap enough.
+This module supplies the representation half:
+
+* :class:`Int8Codec` — symmetric per-channel int8 quantization of a raw
+  byte blob interpreted as a flat array of one float dtype; the encoded
+  frame carries the int8 payload plus one float32 scale per channel
+  block (lossy, ~4x for float32 KV pages, ~2x for bf16);
+* :class:`ZlibCodec` — lossless DEFLATE, for classes that must round-
+  trip bit-exactly (checkpoint fragments) but may still shrink;
+* :class:`CodecRule` — one key class's codec policy on a
+  :class:`~repro.memory.stack.TierStack`: which codec, and how many of
+  the fastest levels stay plaintext (encode happens when a value lands
+  *past* that boundary — the demotion/spill write — decode on any read).
+
+Encoded blobs are **framed** (magic + codec id + original length +
+codec-specific header), so the stack can tell encoded from plaintext
+bytes without tracking state, decode is fully self-describing
+(:func:`decode_blob`), and re-encoding an already-framed blob is a
+no-op.  Content addressing stays over the *decoded* bytes — the codec is
+invisible to dedup, refcounts, and checkpoint manifests.
+
+The quantization math (:func:`int8_quantize` / :func:`int8_dequantize`)
+is THE int8 implementation for the repo: the gradient compressor
+(optim/compression.py), the quantized device page pool
+(serve/pagepool.py), and the quantized paged-attention kernels all call
+these two functions, so tolerance analysis done once holds everywhere.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import struct
+import zlib
+from typing import Dict, Optional, Protocol, Tuple, runtime_checkable
+
+import jax.numpy as jnp
+import numpy as np
+
+EPS = 1e-12  # zero-page guard; matches the historical gradient quantizer
+
+# companion-buffer naming for quantized device pools: leaf "k" holds int8
+# values, "k__scale" the per-channel float32 scales (serve/pagepool.py
+# allocates them; models/transformer.py's paged decode reads/writes both)
+SCALE_SUFFIX = "__scale"
+
+# frame: MAGIC (6) | codec id (2) | original length u64 LE | codec payload
+_MAGIC = b"\xc5\x0d\xec\x17\x9a\x3b"
+_HEADER = struct.Struct("<6s2sQ")
+
+
+# ---------------------------------------------------------------------- #
+# the shared int8 quantization math
+# ---------------------------------------------------------------------- #
+
+
+def int8_quantize(x, axis: Optional[int] = None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Symmetric int8 quantization: ``q = round(x / scale)`` with
+    ``scale = max(|x|) / 127`` over the whole tensor (``axis=None`` — the
+    gradient-compression mode, scalar scale) or per channel along
+    ``axis`` (keepdims, so ``q * scale`` broadcasts back).
+
+    jnp-traceable: safe inside jit (the quantized decode step and the
+    kernel tests quantize under trace).  Returns ``(q int8, scale f32)``.
+    """
+    xf = jnp.asarray(x).astype(jnp.float32)
+    if axis is None:
+        scale = jnp.maximum(jnp.max(jnp.abs(xf)), EPS) / 127.0
+    else:
+        scale = jnp.maximum(jnp.max(jnp.abs(xf), axis=axis, keepdims=True),
+                            EPS) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def int8_dequantize(q, scale) -> jnp.ndarray:
+    """Inverse of :func:`int8_quantize` (float32 result).  Idempotence
+    note: dequantized values are fixed points of the round trip — the
+    max survives quantization exactly (``round(127) = 127``), so
+    re-encoding a decoded blob reproduces the same scale, the same q,
+    and therefore the same bytes.  Dirty-tracking by content hash stays
+    stable across park/resume cycles under a lossy tier."""
+    return jnp.asarray(q).astype(jnp.float32) * scale
+
+
+# ---------------------------------------------------------------------- #
+# byte-blob codecs
+# ---------------------------------------------------------------------- #
+
+
+@runtime_checkable
+class Codec(Protocol):
+    """One tier codec: framed bytes in, framed bytes out."""
+
+    cid: bytes        # 2-byte frame id
+    lossless: bool
+
+    def encode(self, data: bytes) -> bytes: ...
+    def decode(self, blob: bytes) -> bytes: ...
+
+
+def is_encoded(data: bytes) -> bool:
+    """True when ``data`` is a framed codec blob (magic + known id)."""
+    return (len(data) >= _HEADER.size and data[:6] == _MAGIC
+            and data[6:8] in _CODECS)
+
+
+def decode_blob(data: bytes) -> bytes:
+    """Decode any framed blob, self-describing (no codec instance needed:
+    the frame header carries the codec id and its parameters)."""
+    if len(data) < _HEADER.size or data[:6] != _MAGIC:
+        raise ValueError("not a framed codec blob")
+    cid = data[6:8]
+    codec = _CODECS.get(cid)
+    if codec is None:
+        raise ValueError(f"unknown codec id {cid!r}")
+    return codec.decode(data)
+
+
+def maybe_decode(data: bytes) -> bytes:
+    """Decode if framed, pass plaintext through unchanged."""
+    return decode_blob(data) if is_encoded(data) else data
+
+
+def _frame(cid: bytes, orig_len: int, payload: bytes) -> bytes:
+    return _HEADER.pack(_MAGIC, cid, orig_len) + payload
+
+
+def _unframe(cid: bytes, blob: bytes) -> Tuple[int, bytes]:
+    magic, got, orig_len = _HEADER.unpack_from(blob)
+    if magic != _MAGIC or got != cid:
+        raise ValueError(f"blob is not a {cid!r} frame")
+    return orig_len, blob[_HEADER.size:]
+
+
+class ZlibCodec:
+    """Lossless DEFLATE of the raw bytes — the policy for classes that
+    must stay bit-identical (checkpoint fragments, descriptors)."""
+
+    cid = b"zl"
+    lossless = True
+
+    def __init__(self, level: int = 1):
+        self.level = int(level)
+
+    def encode(self, data: bytes) -> bytes:
+        if is_encoded(data):
+            return data
+        return _frame(self.cid, len(data), zlib.compress(data, self.level))
+
+    def decode(self, blob: bytes) -> bytes:
+        orig_len, payload = _unframe(self.cid, blob)
+        out = zlib.decompress(payload)
+        if len(out) != orig_len:
+            raise ValueError(
+                f"zlib frame decoded to {len(out)} bytes, expected {orig_len}")
+        return out
+
+
+# int8 frame payload: dtype name (16 bytes, NUL-padded) | block u32 |
+# q int8[nblocks*block] | scales f32[nblocks] | raw tail (len % itemsize)
+_I8_HEAD = struct.Struct("<16sI")
+
+
+class Int8Codec:
+    """Symmetric per-channel int8 over a byte blob viewed as a flat array
+    of ``dtype``.  ``block`` is the channel width — one float32 scale per
+    ``block`` consecutive elements (default 128; KV page callers pass the
+    head_dim so a channel is one head's slice of one token).  Bytes past
+    the last whole element (blob length not divisible by itemsize) ride
+    along raw.  Lossy: decode returns ``q * scale`` cast back to
+    ``dtype`` — within ``scale / 2`` per element of the original.
+    """
+
+    cid = b"i8"
+    lossless = False
+
+    def __init__(self, dtype: str = "float32", block: int = 128):
+        if block < 1:
+            raise ValueError("block must be >= 1")
+        self.dtype = np.dtype(jnp.dtype(dtype))  # jnp resolves bfloat16
+        if not jnp.issubdtype(self.dtype, jnp.floating):
+            raise ValueError(f"Int8Codec needs a float dtype, got {dtype}")
+        self.block = int(block)
+
+    def encode(self, data: bytes) -> bytes:
+        if is_encoded(data):
+            return data
+        isz = self.dtype.itemsize
+        n = len(data) // isz
+        body, tail = data[:n * isz], data[n * isz:]
+        nblocks = -(-n // self.block) if n else 0
+        if n:
+            x = np.frombuffer(body, self.dtype).astype(np.float32)
+            if nblocks * self.block != n:       # pad the ragged last block
+                x = np.concatenate(
+                    [x, np.zeros(nblocks * self.block - n, np.float32)])
+            q, scale = int8_quantize(x.reshape(nblocks, self.block), axis=-1)
+            payload = (np.asarray(q).tobytes()
+                       + np.asarray(scale, np.float32).tobytes())
+        else:
+            payload = b""
+        head = _I8_HEAD.pack(self.dtype.name.encode()[:16], self.block)
+        return _frame(self.cid, len(data), head + payload + tail)
+
+    def decode(self, blob: bytes) -> bytes:
+        orig_len, payload = _unframe(self.cid, blob)
+        dt_raw, block = _I8_HEAD.unpack_from(payload)
+        dtype = np.dtype(jnp.dtype(dt_raw.rstrip(b"\x00").decode()))
+        body = payload[_I8_HEAD.size:]
+        isz = dtype.itemsize
+        n = orig_len // isz
+        tail_len = orig_len - n * isz
+        nblocks = -(-n // block) if n else 0
+        q_len, s_len = nblocks * block, nblocks * 4
+        if len(body) != q_len + s_len + tail_len:
+            raise ValueError(
+                f"int8 frame payload of {len(body)} bytes inconsistent with "
+                f"header (expected {q_len + s_len + tail_len})")
+        if n:
+            q = np.frombuffer(body[:q_len], np.int8).reshape(nblocks, block)
+            scale = np.frombuffer(
+                body[q_len:q_len + s_len], np.float32).reshape(nblocks, 1)
+            x = np.asarray(int8_dequantize(q, scale)).reshape(-1)[:n]
+            out = x.astype(dtype).tobytes()
+        else:
+            out = b""
+        return out + body[q_len + s_len:]
+
+
+# decode registry: one canonical instance per codec id (Int8Codec.decode
+# reads its parameters from the frame, so any instance decodes any frame)
+_CODECS: Dict[bytes, Codec] = {
+    ZlibCodec.cid: ZlibCodec(),
+    Int8Codec.cid: Int8Codec(),
+}
+
+
+# ---------------------------------------------------------------------- #
+# stack policy
+# ---------------------------------------------------------------------- #
+
+
+@dataclasses.dataclass(frozen=True)
+class CodecRule:
+    """One key class's codec policy on a TierStack: values encode when
+    they land on level index >= ``fast_levels`` (a put routed past the
+    fast tier, a demotion, a spill) and decode on every read — the
+    ``fast_levels`` fastest levels always hold plaintext."""
+
+    codec: Codec
+    fast_levels: int = 1
+
+    def __post_init__(self):
+        if self.fast_levels < 0:
+            raise ValueError("fast_levels must be >= 0")
+
+
+def make_codec(name: Optional[str], dtype: str = "float32",
+               block: int = 128) -> Optional[Codec]:
+    """Resolve a codec knob string (the ``kv_codec=`` surface): ``None``
+    / ``"none"`` -> no codec, ``"zlib"`` -> lossless, ``"int8"`` ->
+    per-channel quantization of blobs holding ``dtype`` elements."""
+    if name is None or name == "none":
+        return None
+    if name == "zlib":
+        return ZlibCodec()
+    if name == "int8":
+        return Int8Codec(dtype=dtype, block=block)
+    raise ValueError(f"unknown codec {name!r} (want none|zlib|int8)")

@@ -44,6 +44,7 @@ import threading
 from collections import OrderedDict
 from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
+from repro.memory.codecs import CodecRule, decode_blob, is_encoded
 from repro.memory.store import BufferStore, NAMStore, OffloadOp
 from repro.memory.tiers import CapacityError, MemoryHierarchy
 
@@ -178,6 +179,7 @@ class TierStack:
         hierarchy: Optional[MemoryHierarchy] = None,
         admission_fraction: Optional[float] = None,
         promotion: Optional[HitRatePromotion] = None,
+        codecs: Optional[Dict[KeyClass, CodecRule]] = None,
     ):
         if not levels:
             raise ValueError("TierStack needs at least one level")
@@ -198,6 +200,14 @@ class TierStack:
         # hit-rate-driven promotion: the default (k=1) promotes on the
         # first below-home hit; see :class:`HitRatePromotion`
         self.promotion = promotion if promotion is not None else HitRatePromotion()
+        # per-key-class codec policy: values of a class with a
+        # :class:`~repro.memory.codecs.CodecRule` encode when they land
+        # on level index >= rule.fast_levels (spill/demotion writes) and
+        # decode on every read — the fast level(s) stay plaintext.
+        # Content addressing and manifests live ABOVE this layer, over
+        # the decoded bytes (the DAOS stance: object identity is
+        # independent of on-media encoding).
+        self.codecs: Dict[KeyClass, CodecRule] = dict(codecs or {})
         self.beeond = None       # set by for_hierarchy when a cache domain exists
         self.nam_device = None   # set by for_hierarchy when a NAM level exists
         self._lock = threading.RLock()
@@ -222,6 +232,13 @@ class TierStack:
             "admission_routed": 0, "offloads": 0,
             **{f"hits_{n}": 0 for n in names},
             **{f"misses_{n}": 0 for n in names},
+            # codec traffic per encoded class: plaintext bytes through
+            # encode, encoded output bytes, decoded bytes served, and the
+            # running compression ratio (encoded / plaintext; 0.25 for
+            # int8-over-float32) — these flow into the BENCH artifacts
+            **{f"{c.value}_{s}": 0 for c in self.codecs
+               for s in ("bytes_encoded", "bytes_encoded_out",
+                         "bytes_decoded", "codec_ratio")},
         })
 
     # -- construction ---------------------------------------------------- #
@@ -318,6 +335,62 @@ class TierStack:
         cap = self.levels[idx][1].capacity_bytes()
         return nbytes <= self.admission_fraction * cap
 
+    # -- codec policy ------------------------------------------------------ #
+
+    def _codec_rule(self, key: str) -> Optional[CodecRule]:
+        if not self.codecs:
+            return None
+        return self.codecs.get(classify_key(key))
+
+    def codec_for(self, cls: KeyClass) -> Optional[CodecRule]:
+        """The codec rule (if any) governing one key class — callers that
+        carry integrity metadata over plaintext (the KV pager's manifest
+        CRCs) use this to know whether reads are decode-exact."""
+        return self.codecs.get(cls)
+
+    def set_codec(self, cls: KeyClass, rule: Optional[CodecRule]) -> None:
+        """Install (or clear, ``rule=None``) one key class's codec rule
+        after construction, registering its stats counters — the serving
+        wiring installs the ``kv`` rule on an existing pager stack this
+        way.  Only affects writes from here on; bytes already resident
+        keep their current representation (frames are self-describing,
+        so mixed levels decode fine)."""
+        with self._lock:
+            if rule is None:
+                self.codecs.pop(cls, None)
+                return
+            self.codecs[cls] = rule
+            for s in ("bytes_encoded", "bytes_encoded_out",
+                      "bytes_decoded", "codec_ratio"):
+                self.stats.setdefault(f"{cls.value}_{s}", 0)
+
+    def _encode_for(self, idx: int, key: str, data: bytes) -> bytes:
+        """Encode ``data`` for a landing at level ``idx`` per the key's
+        codec rule; plaintext below the boundary, already-framed blobs
+        (a demotion re-put of encoded bytes) pass through untouched."""
+        rule = self._codec_rule(key)
+        if rule is None or idx < rule.fast_levels or is_encoded(data):
+            return data
+        blob = rule.codec.encode(data)
+        cls = classify_key(key).value
+        with self._lock:
+            self.stats[f"{cls}_bytes_encoded"] += len(data)
+            self.stats[f"{cls}_bytes_encoded_out"] += len(blob)
+            self.stats[f"{cls}_codec_ratio"] = round(
+                self.stats[f"{cls}_bytes_encoded_out"]
+                / max(1, self.stats[f"{cls}_bytes_encoded"]), 4)
+        return blob
+
+    def _decode_for(self, key: str, data: bytes) -> bytes:
+        """Decode a framed blob read back from any level (plaintext
+        passes through) — every external read returns decoded bytes."""
+        if self.codecs and is_encoded(data) and self._codec_rule(key) is not None:
+            out = decode_blob(data)
+            with self._lock:
+                self.stats[f"{classify_key(key).value}_bytes_decoded"] += len(out)
+            return out
+        return data
+
     # -- LRU bookkeeping -------------------------------------------------- #
 
     def _touch(self, idx: int, key: str, size: int) -> None:
@@ -365,15 +438,31 @@ class TierStack:
         start = self._home_idx(rule)
         targets = list(self._spill_targets(start))
         last_exc: Optional[CapacityError] = None
+        # encode once per put, lazily: admission control must judge the
+        # bytes a level would actually hold (the encoded blob past the
+        # codec boundary), and every candidate past the boundary reuses
+        # the same encoding
+        enc: Optional[bytes] = None
+        crule = self._codec_rule(key)
+
+        def payload(i: int) -> bytes:
+            nonlocal enc
+            if crule is None or i < crule.fast_levels:
+                return data
+            if enc is None:
+                enc = self._encode_for(i, key, data)
+            return enc
+
         for i in targets:
+            p = payload(i)
             # admission control: route an oversized value straight to the
             # next level (the last candidate always admits)
-            if i != targets[-1] and rule.spill and not self._admits(i, len(data)):
+            if i != targets[-1] and rule.spill and not self._admits(i, len(p)):
                 with self._lock:
                     self.stats["admission_routed"] += 1
                 continue
             try:
-                t = self._put_at(i, key, data, streams)
+                t = self._put_at(i, key, p, streams)
             except CapacityError as e:
                 last_exc = e
                 if not rule.spill:
@@ -388,6 +477,7 @@ class TierStack:
 
     def _put_at(self, idx: int, key: str, data: bytes, streams: int = 1) -> float:
         name, store = self.levels[idx]
+        data = self._encode_for(idx, key, data)
         while True:
             try:
                 t = store.put(key, data, streams=streams)
@@ -407,6 +497,12 @@ class TierStack:
         ``size_hint`` (total bytes, when the caller knows it) lets
         admission control route an oversized stream past a level without
         consuming it first."""
+        if self._codec_rule(key) is not None:
+            # codec-classed keys take the blob path: encoding needs the
+            # whole value, and _ReplayableChunks would hold a full
+            # transient copy anyway — same memory profile, one code path
+            return self.put(key, b"".join(bytes(c) for c in chunks),
+                            streams=streams)
         rule = self.rule_for(key)
         start = self._home_idx(rule)
         targets = list(self._spill_targets(start))
@@ -542,6 +638,9 @@ class TierStack:
                 with self._lock:
                     self.stats[f"misses_{name}"] += 1
                 continue
+            # reads always return decoded bytes: a demoted/spilled value
+            # comes back through its class codec transparently
+            data = self._decode_for(key, data)
             hot = False if observer else self._record_hit(key, tick)
             want = do_promote and (hot or promote is True)
             with self._lock:
@@ -554,7 +653,8 @@ class TierStack:
                     self.stats[f"hits_{self.levels[-1][0]}"] += 1
             if held:
                 self._touch(i, key, len(data))
-            elif want and self._admits(i, len(data)) and store.fill(key, data):
+            elif (want and self._admits(i, len(data))
+                  and store.fill(key, self._encode_for(i, key, data))):
                 # the read-through fill IS this level's promotion
                 with self._lock:
                     self.stats["promotions"] += 1

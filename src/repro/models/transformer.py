@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
+from repro.memory.codecs import SCALE_SUFFIX, int8_dequantize, int8_quantize
 from repro.models import layers as L
 
 
@@ -440,15 +441,40 @@ def paged_decode_step(
     its committed length, which later real writes overwrite and the
     length mask never reads.
 
+    Quantized pools (``DevicePagePool(quantized=True)``) carry an int8
+    buffer per KV leaf plus a ``<leaf>__scale`` float32 companion; the
+    step quantizes each new row per channel on write and dequantizes the
+    gathered pages before attention — the tolerance story lives in the
+    int8 codec gate, the exactness contract above applies to the
+    plain-dtype pools only.
+
     Returns ``(out (B, T) int32 argmax tokens, new_pools)``.
     """
     cd = jnp.dtype(cfg.compute_dtype)
     b, t_total = tokens.shape
     hq = cfg.padded_heads
     dh = cfg.resolved_head_dim
+    quantized = any(k.endswith(SCALE_SUFFIX) for k in pools)
     first = next(iter(pools.values()))
     page_tokens = first.shape[2]
     s_pad = tables.shape[1] * page_tokens
+
+    def pool_write_read(pool, name, new_row, phys, off):
+        """Scatter one decoded (B, *rest) row into ``pool[name]`` at
+        [phys, off] and gather the (B, s_pad, *rest) view back through
+        the tables — through the int8 + scale pair in quantized pools."""
+        if not quantized:
+            buf = pool[name].at[phys, off].set(
+                new_row.astype(pool[name].dtype))
+            out = jnp.take(buf, tables, axis=0)
+            return {name: buf}, out.reshape((b, s_pad) + out.shape[3:])
+        qv, sv = int8_quantize(new_row, axis=-1)
+        buf = pool[name].at[phys, off].set(qv)
+        sbuf = pool[name + SCALE_SUFFIX].at[phys, off].set(sv[..., 0])
+        out = int8_dequantize(jnp.take(buf, tables, axis=0),
+                              jnp.take(sbuf, tables, axis=0)[..., None])
+        return ({name: buf, name + SCALE_SUFFIX: sbuf},
+                out.reshape((b, s_pad) + out.shape[3:]))
 
     def one_token(pools, tk_t):
         tok, t = tk_t                          # (B,), scalar offset in T
@@ -478,14 +504,10 @@ def paged_decode_step(
                                     cfg.norm_eps)
                 krope_new = L.apply_rope(dkv[:, None, None, m.kv_lora_rank:],
                                          cos[:, None], sin[:, None])[:, 0, 0]
-                pool_ckv = pool["ckv"].at[phys, off].set(
-                    ckv_new.astype(pool["ckv"].dtype))
-                pool_kr = pool["k_rope"].at[phys, off].set(
-                    krope_new.astype(pool["k_rope"].dtype))
-                ckv_c = jnp.take(pool_ckv, tables, axis=0).reshape(
-                    b, s_pad, m.kv_lora_rank)
-                kr_c = jnp.take(pool_kr, tables, axis=0).reshape(
-                    b, s_pad, m.qk_rope_dim)
+                upd_ckv, ckv_c = pool_write_read(
+                    pool, "ckv", ckv_new, phys, off)
+                upd_kr, kr_c = pool_write_read(
+                    pool, "k_rope", krope_new, phys, off)
                 w_uk = p["w_uk"].astype(cd).reshape(
                     m.kv_lora_rank, hq, m.qk_nope_dim)
                 q_abs = jnp.einsum("bhn,rhn->bhr", q_nope, w_uk)
@@ -502,7 +524,7 @@ def paged_decode_step(
                 attn_out = jnp.einsum("bhr,rhv->bhv", ctx, w_uv).reshape(
                     b, hq * m.v_head_dim)
                 attn_out = attn_out @ p["wo"].astype(cd)
-                new_pool = {"ckv": pool_ckv, "k_rope": pool_kr}
+                new_pool = {**upd_ckv, **upd_kr}
             else:
                 q = (xin @ p["wq"].astype(cd)).reshape(b, hq, dh)
                 knew = (xin @ p["wk"].astype(cd)).reshape(
@@ -514,18 +536,12 @@ def paged_decode_step(
                                      sin[:, None])[:, 0]
                     knew = L.apply_rope(knew[:, None], cos[:, None],
                                         sin[:, None])[:, 0]
-                pool_k = pool["k"].at[phys, off].set(
-                    knew.astype(pool["k"].dtype))
-                pool_v = pool["v"].at[phys, off].set(
-                    vnew.astype(pool["v"].dtype))
-                kc = jnp.take(pool_k, tables, axis=0).reshape(
-                    b, s_pad, cfg.padded_kv_heads, dh)
-                vc = jnp.take(pool_v, tables, axis=0).reshape(
-                    b, s_pad, cfg.padded_kv_heads, dh)
+                upd_k, kc = pool_write_read(pool, "k", knew, phys, off)
+                upd_v, vc = pool_write_read(pool, "v", vnew, phys, off)
                 attn_out = L.decode_attention(q, kc, vc, p_t + 1).reshape(
                     b, hq * dh)
                 attn_out = attn_out.astype(cd) @ p["wo"].astype(cd)
-                new_pool = {"k": pool_k, "v": pool_v}
+                new_pool = {**upd_k, **upd_v}
             h = h + attn_out.astype(h.dtype)
             xff = L.apply_norm(cfg, h[:, None], lp["ln2"])[:, 0]
             h = h + ffn_block(lp["ffn"], xff[:, None], cfg)[:, 0]

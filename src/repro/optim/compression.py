@@ -8,6 +8,11 @@ next step's grads, keeping the optimizer unbiased in expectation).
 
 4x less cross-pod traffic; the residual state is checkpointed with the
 optimizer state so restarts stay exact.
+
+The quantization itself is :func:`repro.memory.codecs.int8_quantize` in
+its per-tensor mode (``axis=None`` — one scalar scale, numerically
+identical to the historical inline implementation); this module owns
+only the error-feedback residual wrapper around it.
 """
 
 from __future__ import annotations
@@ -17,15 +22,16 @@ from typing import Any, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.memory.codecs import int8_dequantize, int8_quantize
+
 
 def compress_grads(grads: Any, residual: Any) -> Tuple[Any, Any, Any]:
     """-> (int8 grads, scales, new residual carried to next step)."""
 
     def comp(g, r):
         g32 = g.astype(jnp.float32) + r
-        scale = jnp.maximum(jnp.max(jnp.abs(g32)), 1e-12) / 127.0
-        q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
-        new_r = g32 - q.astype(jnp.float32) * scale
+        q, scale = int8_quantize(g32)
+        new_r = g32 - int8_dequantize(q, scale)
         return q, scale, new_r
 
     out = jax.tree_util.tree_map(comp, grads, residual)
@@ -36,9 +42,7 @@ def compress_grads(grads: Any, residual: Any) -> Tuple[Any, Any, Any]:
 
 
 def decompress_grads(qs: Any, ss: Any) -> Any:
-    return jax.tree_util.tree_map(
-        lambda q, s: q.astype(jnp.float32) * s, qs, ss
-    )
+    return jax.tree_util.tree_map(int8_dequantize, qs, ss)
 
 
 def init_residual(grads_like: Any) -> Any:

@@ -33,7 +33,8 @@ class ServeEngine:
     def __init__(self, cfg: ArchConfig, model: ModelApi, params: Any,
                  batch: int, max_len: int, scr=None, paged: bool = False,
                  spec_k: int = 0, page_tokens: int = 8,
-                 pool_pages: Optional[int] = None):
+                 pool_pages: Optional[int] = None,
+                 kv_codec: Optional[str] = None):
         """``scr`` is a :class:`ResilienceSession` (the user API) or —
         compatibility shim — a raw :class:`SCRManager`, wrapped in an
         engine-owned session; ``None`` disables checkpointing.
@@ -44,7 +45,13 @@ class ServeEngine:
         — each step verifies ``spec_k`` n-gram-proposed candidates, so a
         single scheduler step may emit several tokens per row.  The
         lockstep :meth:`decode` surface buffers those and still returns
-        one ``(batch,)`` vector per emitted position."""
+        one ``(batch,)`` vector per emitted position.
+
+        ``kv_codec`` (paged only) picks the KV representation policy:
+        ``"zlib"`` keeps decode bit-exact and compresses spilled pages;
+        ``"int8"`` additionally holds pool-resident KV as int8 +
+        per-channel scales (~2-4x more resident streams at equal HBM,
+        tolerance-gated instead of bit-exact)."""
         self.cfg = cfg
         self.model = model
         self.params = params
@@ -62,8 +69,11 @@ class ServeEngine:
             self.scheduler: ServeScheduler = PagedServeScheduler(
                 cfg, model, params, slots=batch, max_len=max_len,
                 session=self.session, page_tokens=page_tokens,
-                pool_pages=pool_pages, spec_k=spec_k)
+                pool_pages=pool_pages, spec_k=spec_k, kv_codec=kv_codec)
         else:
+            if kv_codec not in (None, "none"):
+                raise ValueError(
+                    "kv_codec needs the paged scheduler (paged=True)")
             self.scheduler = ServeScheduler(
                 cfg, model, params, slots=batch, max_len=max_len,
                 session=self.session)

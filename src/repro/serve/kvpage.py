@@ -37,10 +37,12 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import zlib
 from typing import Any, Dict, Iterator, List, Optional, Tuple
 
 from repro.io.serialization import StateBlob, deserialize_state, serialize_state
-from repro.memory.stack import HitRatePromotion, TierStack
+from repro.memory.codecs import CodecRule, make_codec
+from repro.memory.stack import HitRatePromotion, KeyClass, TierStack
 from repro.memory.tiers import CapacityError, MemoryTier, TierKind, TierSpec
 
 KV_PAGE_BYTES = 64 * 1024  # default paging granularity
@@ -105,6 +107,9 @@ class KVPager:
         admission_fraction: Optional[float] = 0.5,
         promotion: Optional[HitRatePromotion] = None,
         page_bytes: int = KV_PAGE_BYTES,
+        kv_codec: Optional[str] = None,
+        codec_dtype: str = "float32",
+        codec_block: int = 128,
     ) -> "KVPager":
         """A serving KV stack sized by its fast tier.
 
@@ -114,6 +119,15 @@ class KVPager:
         must fit in the fast tier or :meth:`park` raises
         :class:`CapacityError` — which is exactly the resident-stream
         ceiling fig10 measures against.
+
+        ``kv_codec`` installs a tier codec on the ``kv`` key class
+        (``"zlib"`` lossless, ``"int8"`` per-channel quantization of
+        ``codec_dtype`` elements in ``codec_block``-wide channels): pages
+        demoted past the fast tier encode on the way down and decode on
+        read.  Content addressing stays over decoded bytes; a lossy
+        codec makes :meth:`fetch` tolerance-gated instead of bit-exact
+        (the manifest integrity digests are recomputed over the decoded
+        bytes — see :meth:`fetch`).
         """
         def tier(kind: TierKind, cap: int, bw: float, lat: float) -> MemoryTier:
             return MemoryTier(TierSpec(kind, cap, bw, bw, lat))
@@ -124,15 +138,24 @@ class KVPager:
             levels.append(("dram", tier(TierKind.DRAM, slow_bytes, 80e9, 1e-7)))
             levels.append(("global", tier(TierKind.GLOBAL, 16 * slow_bytes,
                                           5e9, 5e-4)))
+        codec = make_codec(kv_codec, dtype=codec_dtype, block=codec_block)
         stack = TierStack(
             levels,
             admission_fraction=admission_fraction if paged else None,
             promotion=promotion if promotion is not None
             else HitRatePromotion(k=2, window=256),
+            codecs={KeyClass.KV: CodecRule(codec)} if codec else None,
         )
         return cls(stack, page_bytes=page_bytes, own_stack=True)
 
     # -- paging ----------------------------------------------------------- #
+
+    def kv_lossy(self) -> bool:
+        """True when the stack's ``kv`` codec rule is lossy (int8): page
+        reads are then tolerance-gated, not bit-exact, and :meth:`fetch`
+        re-anchors the manifest integrity digests to the decoded bytes."""
+        rule = self.stack.codec_for(KeyClass.KV)
+        return rule is not None and not rule.codec.lossless
 
     def _page_iter(self, data: bytes) -> Iterator[bytes]:
         view = memoryview(data)
@@ -234,8 +257,6 @@ class KVPager:
         ``layout_manifest`` describes the lane template's leaf layout —
         identical for every lane — and the integrity digests are
         recomputed over ``blob``."""
-        import zlib
-
         if len(blob) != layout_manifest["total_bytes"]:
             raise ValueError(
                 f"stream {sid}: blob of {len(blob)} bytes does not match the "
@@ -312,7 +333,16 @@ class KVPager:
             raise IOError(
                 f"stream {sid}: paged bytes {len(data)} != parked {entry.nbytes}")
         self._stats["kv_resume_bytes_moved"] += len(data)
-        lane = deserialize_state(StateBlob(data=data, manifest=entry.manifest), like)
+        manifest = entry.manifest
+        if self.kv_lossy():
+            # a lossy kv codec returns decoded (not original) bytes for
+            # any page that spilled past the fast tier, so the park-time
+            # integrity digests no longer apply — lengths and layout are
+            # still exact, only the values are tolerance-gated
+            manifest = dict(manifest)
+            manifest["crc32"] = zlib.crc32(data) & 0xFFFFFFFF
+            manifest["sha256"] = hashlib.sha256(data).hexdigest()
+        lane = deserialize_state(StateBlob(data=data, manifest=manifest), like)
         if release:
             self.release(sid)
         else:

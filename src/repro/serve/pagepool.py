@@ -32,6 +32,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.memory.codecs import SCALE_SUFFIX, int8_dequantize, int8_quantize
 from repro.memory.tiers import CapacityError
 
 TRASH_PAGE = 0
@@ -45,10 +46,22 @@ class DevicePagePool:
     kv_seq, *rest)`` (``model.cache_axes``) — the transformer-family
     layout.  ``n_pages`` is the physical capacity *excluding* the trash
     page.
+
+    ``quantized=True`` is the int8 residency mode: each K/V leaf is held
+    on device as int8 with one float32 scale per last-axis channel in a
+    parallel ``<name>__scale`` buffer (both live in :attr:`leaves`, so
+    the jitted decode step, checkpoint snapshot/load, and shape
+    templates see them like any other leaf).  The byte interchange with
+    the KVPager (:meth:`page_blob` / :meth:`write_blob`) stays in
+    *decoded* template-dtype bytes — content addressing and spill
+    plumbing never see the quantized representation — while the device
+    cost per page (:attr:`page_device_nbytes`) drops to roughly a
+    quarter (float32) / half (bf16) of :attr:`page_nbytes`, which is the
+    capacity win fig10's equal-HBM section measures.
     """
 
     def __init__(self, lane_template: Any, axes: Any, page_tokens: int,
-                 n_pages: int):
+                 n_pages: int, quantized: bool = False):
         if page_tokens < 1:
             raise ValueError("page_tokens must be >= 1")
         if n_pages < 1:
@@ -61,7 +74,11 @@ class DevicePagePool:
         if len(names) != len(flat_t):
             raise ValueError("pool requires a flat dict cache layout")
         max_len = None
+        dtypes: Dict[str, np.dtype] = {}
         for name, leaf, ax in zip(names, flat_t, flat_a):
+            if name.endswith(SCALE_SUFFIX):
+                raise ValueError(
+                    f"leaf name {name} collides with the scale-buffer suffix")
             if len(ax) < 3 or ax[0] != "layers" or ax[2] != "kv_seq":
                 raise ValueError(
                     f"leaf {name}: pool needs (layers, batch, kv_seq, ...) "
@@ -75,16 +92,37 @@ class DevicePagePool:
                     f"max_len {s} not a multiple of page_tokens {page_tokens}")
             if max_len is not None and s != max_len:
                 raise ValueError("cache leaves disagree on kv_seq length")
+            if quantized and len(arr.shape) < 4:
+                raise ValueError(
+                    f"leaf {name}: quantized mode needs a channel axis "
+                    f"after kv_seq, got shape {arr.shape}")
             max_len = s
-            leaves[name] = jnp.zeros(
-                (n_layers, 1 + n_pages, page_tokens) + arr.shape[3:],
-                arr.dtype)
+            dtypes[name] = arr.dtype
+            shape = (n_layers, 1 + n_pages, page_tokens) + arr.shape[3:]
+            if quantized:
+                leaves[name] = jnp.zeros(shape, jnp.int8)
+                leaves[name + SCALE_SUFFIX] = jnp.zeros(
+                    shape[:-1], jnp.float32)
+            else:
+                leaves[name] = jnp.zeros(shape, arr.dtype)
         self.leaves: Dict[str, jax.Array] = leaves
+        self.quantized = bool(quantized)
+        # the decoded (template) dtypes and leaf names, scale buffers
+        # excluded — the byte-interchange layout
+        self.dtypes = dtypes
+        self.data_names = sorted(dtypes)
         self.page_tokens = int(page_tokens)
         self.n_pages = int(n_pages)
         self.max_len = int(max_len)
         self.pages_per_lane = self.max_len // self.page_tokens
+        # logical page size: decoded bytes, the KVPager interchange unit
         self.page_nbytes = sum(
+            int(np.prod(leaves[n].shape[2:], dtype=np.int64))
+            * dtypes[n].itemsize * leaves[n].shape[0]
+            for n in self.data_names)
+        # physical page size: what one page actually costs on device
+        # (int8 payload + float32 scales in quantized mode)
+        self.page_device_nbytes = sum(
             int(np.prod(l.shape[2:], dtype=np.int64)) * l.dtype.itemsize
             * l.shape[0] for l in leaves.values())
         self._refs: Dict[int, int] = {}            # phys -> refcount
@@ -150,22 +188,45 @@ class DevicePagePool:
 
     # -- page I/O (park/spill paths only — never the decode hot loop) ------ #
 
+    def _store_decoded(self, phys: int, name: str, arr: np.ndarray) -> None:
+        """Write one leaf's decoded page slice (L, pt, *rest) into slot
+        ``phys`` — quantizing per channel (last axis) in quantized mode."""
+        leaf = self.leaves[name]
+        if self.quantized:
+            q, scale = int8_quantize(np.asarray(arr), axis=-1)
+            self.leaves[name] = leaf.at[:, phys].set(q)
+            sleaf = self.leaves[name + SCALE_SUFFIX]
+            self.leaves[name + SCALE_SUFFIX] = sleaf.at[:, phys].set(
+                scale[..., 0])
+        else:
+            self.leaves[name] = leaf.at[:, phys].set(
+                jnp.asarray(arr, leaf.dtype))
+
     def read_page(self, phys: int) -> Dict[str, np.ndarray]:
-        """One physical page's per-leaf host arrays, each (L, pt, *rest)."""
-        return {name: np.asarray(jax.device_get(l[:, phys]))
-                for name, l in self.leaves.items()}
+        """One physical page's per-leaf host arrays, each (L, pt, *rest),
+        always in the *decoded* template dtype."""
+        out = {}
+        for name in self.data_names:
+            arr = np.asarray(jax.device_get(self.leaves[name][:, phys]))
+            if self.quantized:
+                scale = np.asarray(jax.device_get(
+                    self.leaves[name + SCALE_SUFFIX][:, phys]))
+                arr = np.asarray(int8_dequantize(
+                    arr, scale[..., None])).astype(self.dtypes[name])
+            out[name] = arr
+        return out
 
     def page_blob(self, phys: int) -> bytes:
         """One physical page as bytes (leaves concatenated in sorted
-        name order) — the interchange unit with the KVPager."""
-        return b"".join(self.read_page(phys)[n].tobytes()
-                        for n in sorted(self.leaves))
+        name order) — the interchange unit with the KVPager.  Decoded
+        bytes even in quantized mode: the pager's content addressing and
+        the tier codecs operate above the pool's device representation."""
+        page = self.read_page(phys)
+        return b"".join(page[n].tobytes() for n in self.data_names)
 
     def write_page(self, phys: int, page: Dict[str, np.ndarray]) -> None:
         for name, arr in page.items():
-            leaf = self.leaves[name]
-            self.leaves[name] = leaf.at[:, phys].set(
-                jnp.asarray(arr, leaf.dtype))
+            self._store_decoded(phys, name, np.asarray(arr))
 
     def write_blob(self, phys: int, blob: bytes) -> None:
         if len(blob) != self.page_nbytes:
@@ -174,23 +235,21 @@ class DevicePagePool:
                 f"{self.page_nbytes}")
         off = 0
         page = {}
-        for name in sorted(self.leaves):
+        for name in self.data_names:
             leaf = self.leaves[name]
+            dtype = self.dtypes[name]
             shape = (leaf.shape[0], self.page_tokens) + leaf.shape[3:]
-            n = int(np.prod(shape, dtype=np.int64)) * leaf.dtype.itemsize
+            n = int(np.prod(shape, dtype=np.int64)) * dtype.itemsize
             page[name] = np.frombuffer(
-                blob[off:off + n], leaf.dtype).reshape(shape)
+                blob[off:off + n], dtype).reshape(shape)
             off += n
         self.write_page(phys, page)
 
     def write_token_slice(self, phys: int, part: Any) -> None:
         """Scatter a prefix-cache payload slice — leaves (L, 1,
         page_tokens, *rest) — into one physical page."""
-        for name in sorted(self.leaves):
-            leaf = self.leaves[name]
-            arr = np.asarray(part[name])[:, 0]
-            self.leaves[name] = leaf.at[:, phys].set(
-                jnp.asarray(arr, leaf.dtype))
+        for name in self.data_names:
+            self._store_decoded(phys, name, np.asarray(part[name])[:, 0])
 
     def read_token_slice(self, phys: int) -> Any:
         """The inverse of :meth:`write_token_slice`: a prefix-cache

@@ -39,10 +39,17 @@ Payload modes, chosen by the lane-cache layout (:class:`LaneLayout`):
 
 Refcounting: a stream *acquires* every node on its matched/inserted
 path at admit and *releases* at finish (`ServeScheduler` drives this).
-Eviction (LRU over the cache's byte budget) only considers leaf nodes
-with zero stream references — a page shared with a still-running stream
-survives its sibling finishing, and interior nodes survive their
-children (a child slice is useless without its ancestors).
+Eviction over the cache's byte budget is **cost-aware**: the victim is
+the zero-reference leaf maximizing ``age * bytes / recompute_cost``
+(recompute cost proxied by ``node.end`` — the prefill tokens needed to
+rebuild that page's KV from scratch), so a stale 1-page system-prompt
+slice deep in a long prefix outlives a same-age shallow page of equal
+size.  An optional ``ttl_ticks`` bound additionally expires unreferenced
+leaves untouched for that many cache operations even under budget.
+Only leaf nodes with zero stream references are ever candidates — a
+page shared with a still-running stream survives its sibling finishing,
+and interior nodes survive their children (a child slice is useless
+without its ancestors).
 """
 
 from __future__ import annotations
@@ -157,13 +164,17 @@ class PrefixCache:
 
     def __init__(self, stack: TierStack, layout: LaneLayout,
                  page_tokens: int = 8,
-                 capacity_bytes: Optional[int] = None):
+                 capacity_bytes: Optional[int] = None,
+                 ttl_ticks: Optional[int] = None):
         if page_tokens < 1:
             raise ValueError("page_tokens must be >= 1")
+        if ttl_ticks is not None and ttl_ticks < 1:
+            raise ValueError("ttl_ticks must be >= 1")
         self.stack = stack
         self.layout = layout
         self.page_tokens = int(page_tokens)
         self.capacity_bytes = capacity_bytes
+        self.ttl_ticks = ttl_ticks
         self.mode = "slice" if layout.sliceable else "snapshot"
         self._root: Dict[Tuple[int, ...], _Node] = {}
         self._nodes: Dict[str, _Node] = {}
@@ -197,9 +208,11 @@ class PrefixCache:
     def for_model(cls, stack: TierStack, cfg, model, max_len: int,
                   page_tokens: int = 8,
                   capacity_bytes: Optional[int] = DEFAULT_CAPACITY_BYTES,
+                  ttl_ticks: Optional[int] = None,
                   ) -> "PrefixCache":
         return cls(stack, LaneLayout.for_model(cfg, model, max_len),
-                   page_tokens=page_tokens, capacity_bytes=capacity_bytes)
+                   page_tokens=page_tokens, capacity_bytes=capacity_bytes,
+                   ttl_ticks=ttl_ticks)
 
     # -- lookup ------------------------------------------------------------ #
 
@@ -384,16 +397,34 @@ class PrefixCache:
 
     # -- eviction ------------------------------------------------------------ #
 
+    def _evict_score(self, node: _Node) -> float:
+        """Cost-aware victim ranking (higher = evict sooner): stale,
+        byte-heavy, cheap-to-recompute pages go first.  Recompute cost is
+        proxied by ``node.end`` — the prefill tokens needed to rebuild
+        this page's KV from an empty lane (every ancestor page must be
+        recomputed before it)."""
+        age = (self._clock - node.last_used) + 1
+        return age * node.nbytes / max(node.end, 1)
+
     def _maybe_evict(self) -> None:
+        if self.ttl_ticks is not None:
+            expired = [n for n in self._nodes.values()
+                       if not n.children and n.refs == 0
+                       and self._clock - n.last_used > self.ttl_ticks]
+            for node in expired:
+                if node.digest in self._nodes:   # not dropped via a parent
+                    self._drop_node(node)
         if self.capacity_bytes is None:
             return
         while self.stats["bytes_cached"] > self.capacity_bytes:
             victim = None
+            best = -1.0
             for node in self._nodes.values():
                 if node.children or node.refs > 0:
                     continue
-                if victim is None or node.last_used < victim.last_used:
-                    victim = node
+                score = self._evict_score(node)
+                if score > best:
+                    best, victim = score, node
             if victim is None:
                 return      # everything left is referenced or interior
             self._drop_node(victim)

@@ -52,6 +52,8 @@ import numpy as np
 
 from repro.api.session import ResilienceSession
 from repro.configs.base import ArchConfig
+from repro.memory.codecs import CodecRule, make_codec
+from repro.memory.stack import KeyClass
 from repro.memory.tiers import CapacityError
 from repro.models.registry import ModelApi
 from repro.serve.kvpage import KVPager
@@ -719,6 +721,7 @@ class PagedServeScheduler(ServeScheduler):
         pool_pages: Optional[int] = None,
         spec_k: int = 0,
         proposer: Optional[Any] = None,
+        kv_codec: Optional[str] = None,
     ):
         super().__init__(cfg, model, params, slots, max_len, pager=pager,
                          session=session, quantum=quantum, prefix=prefix)
@@ -739,12 +742,27 @@ class PagedServeScheduler(ServeScheduler):
                     "one page geometry")
         from repro.serve.pagepool import DevicePagePool
         from repro.serve.spec import NGramProposer
+        if kv_codec not in (None, "none", "zlib", "int8"):
+            raise ValueError(
+                f"unknown kv_codec {kv_codec!r} (want none|zlib|int8)")
+        self.kv_codec = "none" if kv_codec is None else str(kv_codec)
         if pool_pages is None:
             # enough for 2x oversubscription before anything spills
             pool_pages = 2 * self.slots * (self.max_len // page_tokens)
         self.pool = DevicePagePool(
             self._lane_template, model.cache_axes(cfg, 1, max_len),
-            page_tokens, pool_pages)
+            page_tokens, pool_pages, quantized=(self.kv_codec == "int8"))
+        if (self.kv_codec != "none" and pager is not None
+                and pager.stack.codec_for(KeyClass.KV) is None):
+            # wire the knob end-to-end: pool spill blobs encode on
+            # demotion too.  Channel width = gcd of the leaves' last
+            # axes, so quantization blocks never straddle a channel.
+            import math
+            dims = [int(np.asarray(l).shape[-1])
+                    for l in self._lane_template.values()]
+            pager.stack.set_codec(KeyClass.KV, CodecRule(make_codec(
+                self.kv_codec, dtype=cfg.compute_dtype,
+                block=math.gcd(*dims))))
         self.slots_cache = None         # lanes live in the pool
         self.spec_k = int(spec_k)
         self.proposer = proposer if proposer is not None else NGramProposer()
@@ -994,9 +1012,16 @@ class PagedServeScheduler(ServeScheduler):
             k = min(T, len(s.tokens) - s.pos)
             feed[slot, :k] = s.tokens[s.pos:s.pos + k]
             known[s.sid] = k
-            if k < T:
-                feed[slot, k:] = self.proposer.propose(s.tokens, T - k)
-                self.stats["spec_proposed"] += T - k
+            # draft only what the commit loop can still accept: a
+            # proposal past the stream's remaining max_new budget (or
+            # the lane's max_len) finishes the stream before its row is
+            # ever verified, so proposing it only burns acceptance rate
+            want = max(0, min(T - k, s.max_new - s.n_emitted - 1,
+                              self.max_len - s.pos - k))
+            if want:
+                feed[slot, k:k + want] = self.proposer.propose(
+                    s.tokens, want)
+                self.stats["spec_proposed"] += want
         out, self.pool.leaves = self._paged_fn(
             self.params, self.pool.leaves, jnp.asarray(self._tables_arr),
             jnp.asarray(pos), jnp.asarray(feed))
@@ -1048,6 +1073,7 @@ class PagedServeScheduler(ServeScheduler):
         meta["serve"]["paged"] = {
             "page_tokens": self.pool.page_tokens,
             "pool_pages": self.pool.n_pages,
+            "kv_codec": self.kv_codec,
             "spec_k": self.spec_k,
             "ptable_sids": [int(sid) for sid in sids],
             "refs": {str(p): int(r)
@@ -1086,6 +1112,12 @@ class PagedServeScheduler(ServeScheduler):
                 f"{pm['page_tokens']} pool_pages={pm['pool_pages']}, this "
                 f"pool has page_tokens={self.pool.page_tokens} "
                 f"pool_pages={self.pool.n_pages}")
+        ck_codec = pm.get("kv_codec", "none")
+        if ck_codec != self.kv_codec:
+            raise ValueError(
+                f"kv_codec mismatch: checkpoint was written with "
+                f"{ck_codec!r}, this scheduler runs {self.kv_codec!r} — "
+                "the pool snapshots are not layout-compatible")
         n, cap = sm["n_streams"], sm["cap"]
         pager_meta = sm.get("pager")
         prefix_meta = sm.get("prefix")

@@ -20,12 +20,21 @@ from typing import List, Sequence
 
 
 class NGramProposer:
-    """Propose ``k`` candidate tokens by suffix lookup over the history.
+    """Propose ``k`` candidate tokens by suffix lookup over the history
+    (prompt + generated tokens alike).
 
     Tries the longest suffix n-gram first (``max_n`` down to 1); on a
-    match at position j, proposes ``history[j+n : j+n+k]``.  Shortfall is
-    padded by repeating the last proposed (or last history) token — the
-    degenerate proposal that wins exactly when greedy decode is looping.
+    match at position j, proposes ``history[j+n : j+n+k]``.  When a
+    match lands near the end of the history and yields fewer than ``k``
+    tokens, the shortfall is filled by *re-proposing* against the
+    virtually extended history (history + tokens proposed so far) — a
+    period-p loop then fills all ``k`` slots with the loop continuation
+    instead of a repeated last token, which is what lifts the acceptance
+    rate on repetitive decode.  Only when no n-gram matches at all does
+    the proposal degrade to repeating the last token — the degenerate
+    draft that wins exactly when greedy decode is emitting one token
+    forever.  Pure function of the history: a restored scheduler replays
+    identical proposals.
     """
 
     def __init__(self, max_n: int = 3, window: int = 256):
@@ -34,24 +43,32 @@ class NGramProposer:
         self.max_n = int(max_n)
         self.window = int(window)   # cap the scan for long histories
 
+    def _lookup(self, hist: List[int], k: int) -> List[int]:
+        """Longest-suffix match (``max_n`` down to 1), most recent
+        earlier occurrence; up to ``k`` continuation tokens, [] on miss."""
+        lo = max(0, len(hist) - self.window)
+        for n in range(min(self.max_n, len(hist)), 0, -1):
+            tail = hist[-n:]
+            for j in range(len(hist) - n - 1, lo - 1, -1):
+                if hist[j:j + n] == tail:
+                    got = hist[j + n:j + n + k]
+                    if got:
+                        return got
+                    break
+        return []
+
     def propose(self, history: Sequence[int], k: int) -> List[int]:
         if k <= 0:
             return []
         hist = [int(t) for t in history]
         if not hist:
             return [0] * k
-        lo = max(0, len(hist) - self.window)
         out: List[int] = []
-        for n in range(min(self.max_n, len(hist)), 0, -1):
-            tail = hist[-n:]
-            # most recent earlier occurrence of the suffix n-gram
-            for j in range(len(hist) - n - 1, lo - 1, -1):
-                if hist[j:j + n] == tail:
-                    out = hist[j + n:j + n + k]
-                    break
-            if out:
-                break
-        last = out[-1] if out else hist[-1]
         while len(out) < k:
-            out.append(last)
+            got = self._lookup(hist + out, k - len(out))
+            if not got:
+                last = out[-1] if out else hist[-1]
+                out.extend([last] * (k - len(out)))
+                break
+            out.extend(got)
         return out[:k]

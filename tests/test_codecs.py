@@ -1,0 +1,383 @@
+"""Tier codecs: round-trips, stack policy, and the int8 KV paths.
+
+Three layers of guarantees, matching docs/architecture.md's codec table:
+
+* **byte level** — ZlibCodec round-trips any blob exactly; Int8Codec
+  round-trips within ``scale/2`` per element (scale = per-block
+  ``max|x|/127``) and is a *fixed point*: re-encoding a decoded blob
+  reproduces the same bytes, so content addressing stays stable across
+  park/resume cycles under a lossy tier;
+* **stack level** — a ``kv`` codec rule encodes exactly the writes that
+  land past the fast tier (demotion/spill) and decodes every read;
+  classes without a rule (checkpoint fragments) stay plaintext;
+* **serving level** — park -> demote -> promote -> resume through an
+  int8 stack keeps KV within quantization tolerance, the zlib path
+  stays token-identical to the uncompressed baseline, and the quantized
+  Pallas kernel matches the fp32 kernel within the allclose gate.
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+
+from repro.memory.codecs import (CodecRule, Int8Codec, ZlibCodec, decode_blob,
+                                 int8_quantize, is_encoded, make_codec)
+from repro.memory.stack import HitRatePromotion, KeyClass, TierStack
+from repro.memory.tiers import MemoryTier, TierKind, TierSpec
+
+
+def _stack(fast_bytes, codecs=None):
+    def tier(kind, cap):
+        return MemoryTier(TierSpec(kind, cap, 1e9, 1e9, 1e-6))
+
+    return TierStack(
+        [("hbm", tier(TierKind.HBM, fast_bytes)),
+         ("dram", tier(TierKind.DRAM, 1 << 26))],
+        admission_fraction=0.5,
+        promotion=HitRatePromotion(k=2, window=64),
+        codecs=codecs,
+    )
+
+
+# ---------------------------------------------------------------------- #
+# byte-level round-trips
+# ---------------------------------------------------------------------- #
+
+
+@given(st.binary(max_size=4096))
+@settings(max_examples=60, deadline=None)
+def test_zlib_roundtrip_exact(data):
+    codec = ZlibCodec()
+    blob = codec.encode(data)
+    assert is_encoded(blob)
+    assert not is_encoded(data) or data[:6] == blob[:6]
+    assert decode_blob(blob) == data
+    # encoding a framed blob is a no-op (demotion can't double-encode)
+    assert codec.encode(blob) == blob
+
+
+@given(st.lists(st.floats(-1e4, 1e4, allow_nan=False, width=32),
+                min_size=1, max_size=300),
+       st.integers(1, 48))
+@settings(max_examples=60, deadline=None)
+def test_int8_roundtrip_tolerance_and_fixed_point(vals, block):
+    codec = Int8Codec(dtype="float32", block=block)
+    x = np.asarray(vals, np.float32)
+    blob = codec.encode(x.tobytes())
+    back = np.frombuffer(decode_blob(blob), np.float32)
+    assert back.shape == x.shape
+    # per-block error bound: |x - q*s| <= s/2, s = max|block|/127
+    n = x.size
+    nblocks = -(-n // block)
+    pad = np.zeros(nblocks * block, np.float32)
+    pad[:n] = x
+    s = np.abs(pad.reshape(nblocks, block)).max(axis=1) / 127.0
+    bound = np.repeat(np.maximum(s, 1e-12), block)[:n] * 0.5 + 1e-6
+    assert np.all(np.abs(back - x) <= bound)
+    # fixed point: re-encoding decoded values reproduces them (up to a
+    # couple of float32 ulps when the recomputed scale rounds differently)
+    back2 = np.frombuffer(decode_blob(codec.encode(back.tobytes())),
+                          np.float32)
+    np.testing.assert_allclose(back2, back, rtol=1e-6, atol=0)
+
+
+def test_int8_ragged_tail_and_empty():
+    codec = Int8Codec(dtype="float32", block=8)
+    # 10 bytes = 2 float32 + 2 raw tail bytes
+    data = np.asarray([1.5, -3.25], np.float32).tobytes() + b"\x07\x09"
+    back = decode_blob(codec.encode(data))
+    assert len(back) == len(data) and back[-2:] == b"\x07\x09"
+    assert decode_blob(codec.encode(b"")) == b""
+    assert decode_blob(ZlibCodec().encode(b"")) == b""
+
+
+def test_make_codec_knob():
+    assert make_codec(None) is None and make_codec("none") is None
+    assert make_codec("zlib").lossless
+    c = make_codec("int8", dtype="bfloat16", block=16)
+    assert not c.lossless and c.block == 16
+    with pytest.raises(ValueError):
+        make_codec("lz4")
+
+
+@pytest.mark.parametrize("name", ["starcoder2-7b", "minicpm3-4b"])
+def test_int8_on_model_family_kv_leaves(name):
+    """Each family's KV cache leaves (their real dtype/shape) round-trip
+    within tolerance, with one scale per last-axis channel."""
+    from repro.configs import get_config
+    from repro.models.registry import get_model
+
+    cfg = get_config(name).reduced()
+    model = get_model(cfg)
+    cache = jax.device_get(model.init_cache(cfg, 1, 16))
+    rng = np.random.default_rng(3)
+    for leaf_name, leaf in sorted(cache.items()):
+        arr = np.asarray(leaf)
+        vals = rng.normal(size=arr.shape).astype(np.float32)
+        arr = jnp.asarray(vals).astype(arr.dtype)
+        host = np.asarray(arr)
+        ch = int(arr.shape[-1])
+        codec = Int8Codec(dtype=cfg.compute_dtype, block=ch)
+        blob = codec.encode(host.tobytes())
+        assert is_encoded(blob)
+        # scale-shape check: one f32 scale per channel, no ragged pad
+        n = host.size
+        assert n % ch == 0
+        payload = blob[16 + 20:]    # frame header + int8 head
+        assert len(payload) == n + (n // ch) * 4
+        back = np.frombuffer(decode_blob(blob),
+                             host.dtype).reshape(host.shape)
+        xf = np.asarray(jnp.asarray(host).astype(jnp.float32))
+        bf = np.asarray(jnp.asarray(back).astype(jnp.float32))
+        s = np.abs(xf.reshape(-1, ch)).max(axis=1, keepdims=True) / 127.0
+        bound = np.maximum(s, 1e-12) * 0.5 + 2.0 ** -7 * np.abs(
+            xf.reshape(-1, ch)) + 1e-6
+        assert np.all(np.abs(bf.reshape(-1, ch) - xf.reshape(-1, ch))
+                      <= bound), leaf_name
+
+
+# ---------------------------------------------------------------------- #
+# stack policy
+# ---------------------------------------------------------------------- #
+
+
+def test_stack_encodes_only_past_the_fast_tier():
+    """A kv value admitted to the fast tier stays plaintext; one routed
+    (or demoted) past it is stored encoded and decodes on read; classes
+    without a rule never encode."""
+    stack = _stack(4096, codecs={KeyClass.KV: CodecRule(ZlibCodec())})
+    small = bytes(range(256)) * 4                     # 1 KiB: admitted fast
+    big = b"\x11" * 8192                              # routed past hbm
+    stack.put("kv/page/aa.bin", small)
+    stack.put("kv/page/bb.bin", big)
+    stack.put("ckpt/frag/cc.bin", big)                # no rule: plaintext
+    raw = dict(stack.levels)
+    assert not is_encoded(raw["hbm"].get("kv/page/aa.bin"))
+    assert is_encoded(raw["dram"].get("kv/page/bb.bin"))
+    assert not is_encoded(raw["dram"].get("ckpt/frag/cc.bin"))
+    assert stack.get("kv/page/aa.bin") == small
+    assert stack.get("kv/page/bb.bin") == big
+    st_ = stack.stats()
+    assert st_["kv_bytes_encoded"] == len(big)
+    assert st_["kv_bytes_decoded"] == len(big)
+    assert 0 < st_["kv_codec_ratio"] < 1
+    stack.close()
+
+
+def test_stack_lossy_rule_decodes_within_tolerance():
+    vals = np.linspace(-2, 2, 4096, dtype=np.float32)
+    stack = _stack(1024, codecs={
+        KeyClass.KV: CodecRule(Int8Codec(dtype="float32", block=64))})
+    stack.put("kv/page/dd.bin", vals.tobytes())       # too big for hbm
+    back = np.frombuffer(stack.get("kv/page/dd.bin"), np.float32)
+    assert np.max(np.abs(back - vals)) <= (2.0 / 127.0) * 0.5 + 1e-6
+    stack.close()
+
+
+def test_set_codec_after_construction():
+    stack = _stack(1024)
+    stack.set_codec(KeyClass.KV, CodecRule(ZlibCodec()))
+    stack.put("kv/page/ee.bin", b"\x00" * 4096)
+    assert stack.get("kv/page/ee.bin") == b"\x00" * 4096
+    assert stack.stats()["kv_bytes_encoded"] == 4096
+    stack.close()
+
+
+# ---------------------------------------------------------------------- #
+# quantized paged-attention kernel gates
+# ---------------------------------------------------------------------- #
+
+
+def _quant_case(b=2, s=32, hq=4, hkv=2, d=16, page=8, seed=31):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (b, hq, d))
+    kc = jax.random.normal(ks[1], (b, s, hkv, d))
+    vc = jax.random.normal(ks[2], (b, s, hkv, d))
+    rng = np.random.default_rng(seed)
+    lengths = jnp.asarray(rng.integers(1, s + 1, size=b), jnp.int32)
+    return q, kc, vc, lengths, page
+
+
+def test_quant_kernel_matches_jnp_quant_oracle():
+    from repro.kernels.paged_attention import (
+        paged_attention_pallas_quant, paged_attention_quant, paginate_cache,
+        quantize_pages)
+
+    q, kc, vc, lengths, page = _quant_case()
+    k_pages, v_pages, table = paginate_cache(kc, vc, page)
+    kq, ks_ = quantize_pages(k_pages)
+    vq, vs_ = quantize_pages(v_pages)
+    want = paged_attention_quant(q, kq, ks_, vq, vs_, table, lengths)
+    got = paged_attention_pallas_quant(q, kq, ks_, vq, vs_, table, lengths,
+                                       interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=3e-6, rtol=1e-5)
+
+
+def test_quant_kernel_allclose_gate_vs_fp32_kernel():
+    """THE acceptance gate: in-kernel dequant attention within 0.05 of
+    the fp32 paged kernel on unit-normal KV."""
+    from repro.kernels.paged_attention import (
+        paged_attention_pallas, paged_attention_pallas_quant, paginate_cache,
+        quantize_pages)
+
+    q, kc, vc, lengths, page = _quant_case(seed=37)
+    k_pages, v_pages, table = paginate_cache(kc, vc, page)
+    kq, ks_ = quantize_pages(k_pages)
+    vq, vs_ = quantize_pages(v_pages)
+    want = paged_attention_pallas(q, k_pages, v_pages, table, lengths,
+                                  interpret=True)
+    got = paged_attention_pallas_quant(q, kq, ks_, vq, vs_, table, lengths,
+                                       interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=0.05, rtol=0.05)
+
+
+def test_quant_multitok_matches_per_row():
+    from repro.kernels.paged_attention import (
+        paged_attention_pallas_quant, paged_attention_pallas_quant_multitok,
+        paginate_cache, quantize_pages)
+
+    b, s, t, page = 2, 24, 3, 8
+    ks = jax.random.split(jax.random.PRNGKey(41), 3)
+    q = jax.random.normal(ks[0], (b, t, 4, 8))
+    kc = jax.random.normal(ks[1], (b, s, 2, 8))
+    vc = jax.random.normal(ks[2], (b, s, 2, 8))
+    k_pages, v_pages, table = paginate_cache(kc, vc, page)
+    kq, ks_ = quantize_pages(k_pages)
+    vq, vs_ = quantize_pages(v_pages)
+    base = np.asarray([5, 12], np.int32)
+    positions = jnp.asarray(base[:, None] + np.arange(t)[None], jnp.int32)
+    got = paged_attention_pallas_quant_multitok(
+        q, kq, ks_, vq, vs_, table, positions, interpret=True)
+    for i in range(t):
+        want = paged_attention_pallas_quant(
+            q[:, i], kq, ks_, vq, vs_, table,
+            jnp.asarray(base + i + 1, jnp.int32), interpret=True)
+        np.testing.assert_allclose(np.asarray(got[:, i]), np.asarray(want),
+                                   atol=3e-6, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------- #
+# serving: park -> demote -> promote -> resume under a kv codec
+# ---------------------------------------------------------------------- #
+
+
+@pytest.fixture(scope="module")
+def arch():
+    from repro.configs import get_config
+    from repro.models.registry import get_model
+
+    cfg = get_config("starcoder2-7b").reduced()
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0), cfg)
+    return cfg, model, params
+
+
+MAX_LEN, MAX_NEW, PT = 24, 6, 4
+
+
+def _serve(arch, kv_codec, pager=None, pool_pages=None):
+    from repro.serve.scheduler import PagedServeScheduler
+
+    cfg, model, params = arch
+    sched = PagedServeScheduler(
+        cfg, model, params, slots=2, max_len=MAX_LEN, page_tokens=PT,
+        pool_pages=pool_pages, pager=pager, kv_codec=kv_codec, quantum=3)
+    rng = np.random.default_rng(11)
+    prompts = [list(map(int, rng.integers(0, cfg.vocab_size,
+                                          size=int(rng.integers(2, 10)))))
+               for _ in range(5)]
+    sids = [sched.submit(p, max_new=MAX_NEW) for p in prompts]
+    sched.run()
+    return sched, [sched.output(sid) for sid in sids]
+
+
+def test_zlib_spill_path_is_token_identical(arch):
+    """Lossless codec end-to-end: spill -> demote-encode -> promote ->
+    refill emits the exact baseline tokens, and the codec counters prove
+    pages really crossed the codec boundary."""
+    from repro.serve.kvpage import KVPager
+
+    _, base = _serve(arch, None)
+    pager = KVPager.for_capacity(fast_bytes=2048, kv_codec="zlib")
+    sched, got = _serve(arch, "zlib", pager=pager,
+                        pool_pages=3 * (MAX_LEN // PT))
+    assert got == base
+    assert sched.stats["spilled"] > 0
+    st_ = pager.stats()
+    assert st_["kv_bytes_encoded"] > 0 and st_["kv_bytes_decoded"] > 0
+
+
+def test_int8_spill_path_matches_greedy_within_tolerance(arch):
+    """Lossy codec end-to-end (park -> demote -> promote -> resume
+    through the int8 stack, int8 pool residency): the emitted tokens
+    stay in high agreement with the fp32 baseline — quantization noise
+    may flip near-tie argmaxes but must not derail decode."""
+    from repro.memory.stack import KeyClass as KC
+    from repro.serve.kvpage import KVPager
+
+    _, base = _serve(arch, None)
+    pager = KVPager.for_capacity(fast_bytes=2048)
+    sched, got = _serve(arch, "int8", pager=pager,
+                        pool_pages=3 * (MAX_LEN // PT))
+    assert sched.stats["spilled"] > 0
+    # the scheduler auto-installed a lossy kv rule on the pager's stack
+    rule = pager.stack.codec_for(KC.KV)
+    assert rule is not None and not rule.codec.lossless
+    assert pager.kv_lossy()
+    assert pager.stats()["kv_bytes_encoded"] > 0
+    agree = np.mean([a == b for x, y in zip(base, got)
+                     for a, b in zip(x, y)])
+    assert agree >= 0.8, f"token agreement {agree:.2f} under int8"
+
+
+def test_int8_pager_lane_roundtrip_within_tolerance(arch):
+    """Lane-level: park a real KV lane through an int8 stack small
+    enough to demote every page, fetch it back, and check per-channel
+    quantization tolerance on every leaf."""
+    from repro.serve.kvpage import KVPager
+
+    cfg, model, params = arch
+    cache = model.init_cache(cfg, 1, MAX_LEN)
+    pos = 0
+    for tok in [3, 1, 4, 1, 5, 9, 2, 6]:
+        _, cache = model.decode_step(
+            params, cache, jnp.asarray([tok], jnp.int32),
+            jnp.int32(pos), cfg)
+        pos += 1
+    lane = jax.device_get(cache)
+    dims = [int(np.asarray(l).shape[-1]) for l in lane.values()]
+    pager = KVPager.for_capacity(
+        fast_bytes=512, kv_codec="int8", codec_dtype=cfg.compute_dtype,
+        codec_block=math.gcd(*dims), page_bytes=1024)
+    pager.park(7, lane)
+    assert pager.stats()["kv_bytes_encoded"] > 0, "no page demoted"
+    back = pager.fetch(7, like=lane)
+    for name in sorted(lane):
+        orig = np.asarray(jnp.asarray(lane[name]).astype(jnp.float32))
+        got = np.asarray(jnp.asarray(back[name]).astype(jnp.float32))
+        ch = orig.shape[-1]
+        xf = orig.reshape(-1, ch)
+        s = np.abs(xf).max(axis=1, keepdims=True) / 127.0
+        bound = np.maximum(s, 1e-12) * 0.5 + 2.0 ** -7 * np.abs(xf) + 1e-5
+        assert np.all(np.abs(got.reshape(-1, ch) - xf) <= bound), name
+    pager.close()
+
+
+def test_kv_codec_recorded_in_checkpoint_meta(arch):
+    """The paged checkpoint meta carries the kv_codec, so restore can
+    refuse a scheduler whose pool layout is incompatible."""
+    from repro.serve.scheduler import PagedServeScheduler
+
+    cfg, model, params = arch
+    sched = PagedServeScheduler(cfg, model, params, slots=1,
+                                max_len=MAX_LEN, page_tokens=PT,
+                                kv_codec="int8")
+    _, meta = sched._serving_state()
+    assert meta["serve"]["paged"]["kv_codec"] == "int8"
