@@ -1,9 +1,11 @@
-"""Bench-regression gate: fresh fig10 artifact vs the committed baseline.
+"""Bench-regression gate: fresh bench artifact vs the committed baseline.
 
-Seeds the serving perf trajectory: CI regenerates
-``BENCH_fig10_serve_throughput.json`` every run, and this gate fails the
-build when a steady-state metric drops more than ``--max-drop`` (default
-20%) below the committed baseline.
+Seeds the serving perf trajectory: CI regenerates each serving
+``BENCH_*.json`` every run, and this gate fails the build when a
+steady-state metric drops more than ``--max-drop`` (default 20%) below
+the committed baseline.  The metric table is selected by the fresh
+artifact's ``bench`` field (``METRICS_BY_BENCH``), so one gate serves
+every figure that carries a trajectory.
 
 Absolute tokens/s are machine-bound — a CI runner is not the box that
 produced the committed artifact — so the gate compares machine-normalized
@@ -48,6 +50,21 @@ METRICS = [
     ("quant_resident_ratio", "quant.resident_ratio", None),
 ]
 
+# per-bench metric tables, selected by the fresh artifact's "bench"
+# field; artifacts from before the field (or unknown benches) fall back
+# to the fig10 serving table above
+METRICS_BY_BENCH = {
+    "fig10_serve_throughput": METRICS,
+    "fig12_fleet_scaling": [
+        # scale-out: 2-worker aggregate over 1-worker aggregate, both
+        # critical-path normalized inside the bench — dimensionless
+        ("fleet_2w_scaling", "scaling.speedup_2w", None),
+        # cross-worker sharing: fraction of worker B's prefill the
+        # shared tier absorbed (deterministic at fixed prompt geometry)
+        ("fleet_prefix_saved_frac", "shared_prefix.saved_fraction", None),
+    ],
+}
+
 
 def _get(doc: dict, path: str) -> Optional[float]:
     node = doc
@@ -75,8 +92,9 @@ def _metric(doc: dict, num: str, den: Optional[str]) -> Optional[float]:
 
 def check(baseline: dict, fresh: dict, max_drop: float) -> int:
     failures = []
+    metrics = METRICS_BY_BENCH.get(fresh.get("bench", ""), METRICS)
     print(f"{'metric':24s} {'baseline':>10s} {'fresh':>10s} {'floor':>10s}")
-    for name, num, den in METRICS:
+    for name, num, den in metrics:
         base = _metric(baseline, num, den)
         new = _metric(fresh, num, den)
         if new is None:

@@ -1,0 +1,333 @@
+"""Fig 12 (serving fleet): cross-process prefix sharing + scale-out.
+
+DEEP-ER's shared cache domains (BeeOND, §II-B) pay off when several
+nodes reuse each other's staged data.  This figure measures the serving
+analogue — a fleet of worker processes over one
+:class:`~repro.memory.shared.SharedTier` domain — with three asserted
+claims:
+
+  (a) **cross-worker prefix reuse** — with two workers sharing a system
+      prompt, worker B's prefill skips the shared prefix entirely: B
+      adopts the trie nodes worker A published, reads the KV pages out
+      of the shared tier (kv shared-level hits > 0), and computes only
+      its own suffix (``prefill_tokens == target - saved``, saved > 0);
+  (b) **fleet scaling** — aggregate decode throughput at 2 workers is at
+      least 1.5x a single worker on the same workload.  Machine-
+      normalized like every serving claim: throughput is tokens over the
+      fleet's critical path (max per-worker CPU seconds), which equals
+      the wall on a core-per-worker box and is the modelled parallel
+      wall on an oversubscribed one (raw wall rides along in the
+      artifact);
+  (c) **tenant isolation** — a tenant submitting far beyond its
+      in-flight quota is throttled (throttle events > 0, its requests
+      serialize) while an under-quota tenant's p99 admission latency
+      stays bounded; every request still completes.
+
+  PYTHONPATH=src python -m benchmarks.fig12_fleet_scaling [--smoke]
+
+Emits ``BENCH_fig12_fleet_scaling.json`` with every worker's
+``TierStack.stats()`` snapshot under ``tier_stats`` (the
+benchmarks/common.py artifact contract).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import tempfile
+import time
+from pathlib import Path
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks.common import bench_json, row
+from repro.serve.fleet import (
+    FleetFrontend,
+    TenantQuota,
+    WorkerHandle,
+    WorkerSpec,
+)
+
+ARCH = "phi3-mini-3.8b"
+PAGE_TOKENS = 4
+MAX_LEN = 32
+
+
+def _spec(root: Path) -> WorkerSpec:
+    return WorkerSpec(shared_root=str(root), arch=ARCH, slots=2,
+                      max_len=MAX_LEN, page_tokens=PAGE_TOKENS, quantum=3)
+
+
+def _prompts(n: int, shared_len: int, rng, lo=3, hi=7) -> List[List[int]]:
+    sysp = rng.integers(0, 1000, size=shared_len).tolist()
+    return [sysp + rng.integers(0, 1000,
+                                size=int(rng.integers(lo, hi))).tolist()
+            for _ in range(n)]
+
+
+def _run_direct(w: WorkerHandle, rid: str, prompt: List[int],
+                max_new: int = 4, timeout: float = 300.0) -> List[int]:
+    w.submit(rid, prompt, max_new=max_new)
+    deadline = time.time() + timeout
+    while time.time() < deadline:
+        for m in w.messages():
+            if m.get("op") == "done" and m["rid"] == rid:
+                return m["tokens"]
+        time.sleep(0.01)
+    raise TimeoutError(f"request {rid} never finished")
+
+
+# ---------------------------------------------------------------------- #
+# (a) cross-worker prefix reuse through the shared tier
+# ---------------------------------------------------------------------- #
+
+
+def check_cross_worker_reuse(tmp: Path) -> Dict:
+    """Sequenced by construction: A computes the shared prefix, then B
+    admits a same-prefix prompt — B must reuse, never recompute."""
+    root = tmp / "criterion"
+    a, b = WorkerHandle.launch(_spec(root)), WorkerHandle.launch(_spec(root))
+    try:
+        a.wait_ready()
+        b.wait_ready()
+        rng = np.random.default_rng(3)
+        sysp = rng.integers(0, 1000, size=12).tolist()   # 3 full pages
+        _run_direct(a, "a1", sysp + rng.integers(0, 1000, size=4).tolist())
+        # "done" from A implies its trie nodes are on the board
+        out_b = _run_direct(b, "b1",
+                            sysp + rng.integers(0, 1000, size=5).tolist())
+        sa, sb = a.stats(), b.stats()
+    finally:
+        a.stop()
+        b.stop()
+
+    sched_b, tier_b = sb["scheduler"], sb["tier"]
+    target = 12 + 5 - 1                 # B prefills plen-1 tokens
+    saved = sched_b["prefill_tokens_saved"]
+    assert saved == 12, f"B saved {saved}, wanted the full 12-token prefix"
+    assert sched_b["prefill_tokens"] == target - saved, (
+        f"B computed {sched_b['prefill_tokens']} prefill tokens, "
+        f"wanted only its own {target - saved}-token suffix")
+    assert tier_b["hits_shared"] > 0, \
+        f"B never read the shared tier: {tier_b}"
+    assert sb["prefix"]["nodes_adopted"] > 0
+    assert len(out_b) == 4
+    return {
+        "prefix_tokens": 12,
+        "b_prefill_tokens_saved": saved,
+        "b_prefill_tokens_computed": sched_b["prefill_tokens"],
+        "b_shared_tier_hits": tier_b["hits_shared"],
+        "b_nodes_adopted": sb["prefix"]["nodes_adopted"],
+        "a_board_published": sa["shared"]["board_published"],
+        "_tier_stats": {"criterion_worker_a": sa["tier"],
+                        "criterion_worker_b": sb["tier"]},
+    }
+
+
+# ---------------------------------------------------------------------- #
+# (b) aggregate throughput vs worker count
+# ---------------------------------------------------------------------- #
+
+
+def measure_fleet(tmp: Path, n_workers: int, n_requests: int,
+                  max_new: int) -> Dict:
+    """Aggregate fleet throughput over one worker count.
+
+    ``agg_tokens_per_s`` is machine-normalized: tokens over the fleet's
+    *critical path* — the max per-worker CPU seconds spent in the timed
+    window.  On hardware with a core per worker that IS the wall; on an
+    oversubscribed box (this container runs single-core, CI runners are
+    2-core) the OS time-slices the workers and raw wall cannot show
+    scale-out, while the critical path still does — and still catches
+    every real regression (broken sharing inflates a worker's CPU,
+    broken routing piles the whole load onto one worker's path).  Raw
+    wall is reported alongside as ``wall_s``."""
+    root = tmp / f"fleet{n_workers}"
+    rng = np.random.default_rng(7)
+    prompts = _prompts(n_requests, shared_len=9, rng=rng)
+    fe = FleetFrontend.launch([_spec(root) for _ in range(n_workers)])
+    try:
+        # warmup: one request per worker compiles prefill+decode and
+        # publishes the shared prefix; excluded from the timed window
+        warm = [fe.submit(prompts[i % len(prompts)], max_new=1)
+                for i in range(n_workers)]
+        fe.wait(warm, timeout=600)
+        cpu0 = [s["cpu_s"] for s in fe.worker_stats()]
+
+        t0 = time.perf_counter()
+        rids = [fe.submit(p, max_new=max_new) for p in prompts]
+        fe.wait(rids, timeout=600)
+        wall = time.perf_counter() - t0
+        emitted = sum(len(fe.result(r)) for r in rids)
+        stats = fe.worker_stats()
+    finally:
+        fe.stop()
+    assert emitted == n_requests * max_new
+    worker_cpu = [s["cpu_s"] - c0 for s, c0 in zip(stats, cpu0)]
+    critical_path_s = max(worker_cpu)
+    return {
+        "workers": n_workers,
+        "requests": n_requests,
+        "tokens": emitted,
+        "wall_s": wall,
+        "worker_cpu_s": worker_cpu,
+        "critical_path_s": critical_path_s,
+        "agg_tokens_per_s": emitted / critical_path_s,
+        "wall_tokens_per_s": emitted / wall,
+        "prefill_tokens_saved": sum(
+            s["scheduler"]["prefill_tokens_saved"] for s in stats),
+        "prefill_tokens": sum(
+            s["scheduler"]["prefill_tokens"] for s in stats),
+        "_tier_stats": {f"fleet{n_workers}_worker{i}": s["tier"]
+                        for i, s in enumerate(stats)},
+    }
+
+
+# ---------------------------------------------------------------------- #
+# (c) tenant quotas + priority admission
+# ---------------------------------------------------------------------- #
+
+
+def check_quota_isolation(tmp: Path, max_new: int) -> Dict:
+    root = tmp / "quota"
+    rng = np.random.default_rng(11)
+    fe = FleetFrontend.launch(
+        [_spec(root)],
+        quotas={"noisy": TenantQuota(1), "quiet": TenantQuota(4)})
+    try:
+        noisy = [fe.submit(p, max_new=max_new, tenant="noisy")
+                 for p in _prompts(6, shared_len=9, rng=rng)]
+        quiet = [fe.submit(p, max_new=max_new, tenant="quiet",
+                           prio="interactive")
+                 for p in _prompts(3, shared_len=9, rng=rng)]
+        fe.wait(noisy + quiet, timeout=600)
+        p99_quiet = fe.admission_latency_p99("quiet")
+        p99_noisy = fe.admission_latency_p99("noisy")
+        stats = dict(fe.stats)
+    finally:
+        fe.stop()
+    assert stats["throttle_events"] > 0, \
+        "the over-quota tenant was never throttled"
+    assert stats["completed"] == 9, "throttling must delay, not drop"
+    # the under-quota tenant is admitted promptly even while the noisy
+    # tenant's backlog is being rationed
+    assert p99_quiet < 1.0, \
+        f"quiet tenant p99 admission latency {p99_quiet:.3f}s"
+    return {
+        "noisy_requests": 6, "noisy_quota": 1,
+        "quiet_requests": 3, "quiet_quota": 4,
+        "throttle_events": stats["throttle_events"],
+        "completed": stats["completed"],
+        "p99_admission_latency_quiet_s": p99_quiet,
+        "p99_admission_latency_noisy_s": p99_noisy,
+    }
+
+
+# ---------------------------------------------------------------------- #
+# harness
+# ---------------------------------------------------------------------- #
+
+
+def bench(smoke: bool, worker_counts: List[int], n_requests: int,
+          max_new: int) -> Dict:
+    tmp = Path(tempfile.mkdtemp(prefix="deeper_fig12_"))
+    tier_stats: Dict[str, Dict] = {}
+
+    criterion = check_cross_worker_reuse(tmp)
+    tier_stats.update(criterion.pop("_tier_stats"))
+
+    scaling: Dict[str, Dict] = {}
+    for n in worker_counts:
+        m = measure_fleet(tmp, n, n_requests=n_requests, max_new=max_new)
+        tier_stats.update(m.pop("_tier_stats"))
+        scaling[f"{n}w"] = m
+    speedup_2w = (scaling["2w"]["agg_tokens_per_s"]
+                  / scaling["1w"]["agg_tokens_per_s"])
+    assert speedup_2w >= 1.5, (
+        f"2-worker aggregate only {speedup_2w:.2f}x a single worker "
+        f"({scaling['2w']['agg_tokens_per_s']:.0f} vs "
+        f"{scaling['1w']['agg_tokens_per_s']:.0f} tok/s)")
+
+    quota = check_quota_isolation(tmp, max_new=max_new)
+
+    saved_fraction = (criterion["b_prefill_tokens_saved"]
+                      / (criterion["b_prefill_tokens_saved"]
+                         + criterion["b_prefill_tokens_computed"]))
+    return {
+        "bench": "fig12_fleet_scaling",
+        "arch": ARCH,
+        "smoke": smoke,
+        "page_tokens": PAGE_TOKENS,
+        "max_len": MAX_LEN,
+        "requests_per_fleet": n_requests,
+        "max_new": max_new,
+        "shared_prefix": dict(criterion, saved_fraction=saved_fraction),
+        "scaling": dict(scaling, speedup_2w=speedup_2w),
+        "quota": quota,
+        "_tier_stats": tier_stats,
+    }
+
+
+def _emit_json(res: Dict) -> Path:
+    tier_stats = res.pop("_tier_stats")
+    return bench_json("fig12_fleet_scaling", res, tier_stats=tier_stats)
+
+
+def run(smoke: bool = True):
+    """Harness entry (benchmarks/run.py CSV contract)."""
+    counts = [1, 2] if smoke else [1, 2, 4]
+    res = bench(smoke=smoke, worker_counts=counts,
+                n_requests=8 if smoke else 16, max_new=4 if smoke else 8)
+    _emit_json(res)
+    sp = res["shared_prefix"]
+    sc = res["scaling"]
+    q = res["quota"]
+    out = [
+        row("fleet_prefix_reuse", 0.0,
+            f"worker B adopted {sp['b_nodes_adopted']} nodes; skipped "
+            f"{sp['b_prefill_tokens_saved']} prefix tokens "
+            f"({sp['b_shared_tier_hits']} shared-tier hits); CLAIM B "
+            "computed only its suffix: OK"),
+    ]
+    for key, m in sc.items():
+        if key == "speedup_2w":
+            continue
+        out.append(row(f"fleet_{key}", m["wall_s"] * 1e6,
+                       f"{m['agg_tokens_per_s']:.0f} tok/s aggregate over "
+                       f"{m['workers']} worker(s)"))
+    out.append(row("fleet_scaling_2w", 0.0,
+                   f"CLAIM 2w >= 1.5x 1w: {sc['speedup_2w']:.2f}x OK"))
+    out.append(row("fleet_quota", 0.0,
+                   f"{q['throttle_events']} throttle events, quiet p99 "
+                   f"admission {q['p99_admission_latency_quiet_s'] * 1e3:.1f}"
+                   "ms; CLAIM throttled-not-dropped + bounded p99: OK"))
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run (2 workers max, short streams)")
+    ap.add_argument("--workers", type=int, nargs="*", default=None,
+                    help="worker counts to sweep (must include 1 and 2)")
+    ap.add_argument("--requests", type=int, default=None)
+    ap.add_argument("--max-new", type=int, default=None)
+    args = ap.parse_args()
+    counts = args.workers or ([1, 2] if args.smoke else [1, 2, 4])
+    res = bench(smoke=args.smoke, worker_counts=counts,
+                n_requests=args.requests or (8 if args.smoke else 16),
+                max_new=args.max_new or (4 if args.smoke else 8))
+    out_path = _emit_json(res)
+    print(json.dumps({k: v for k, v in res.items()}, indent=1))
+    sp, sc, q = res["shared_prefix"], res["scaling"], res["quota"]
+    print(f"OK: worker B skipped {sp['b_prefill_tokens_saved']} shared "
+          f"prefix tokens through the shared tier; 2-worker aggregate "
+          f"{sc['speedup_2w']:.2f}x one worker; noisy tenant throttled "
+          f"{q['throttle_events']} times with quiet p99 admission "
+          f"{q['p99_admission_latency_quiet_s'] * 1e3:.1f}ms "
+          f"-> {out_path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -24,6 +24,7 @@ def modules():
         fig10_task_resilience,
         fig10_serve_throughput,
         fig11_prefix_reuse,
+        fig12_fleet_scaling,
         roofline,
     )
 
@@ -38,6 +39,7 @@ def modules():
         "fig10": fig10_task_resilience,
         "fig10serve": fig10_serve_throughput,
         "fig11prefix": fig11_prefix_reuse,
+        "fig12fleet": fig12_fleet_scaling,
         "roofline": roofline,
     }
 

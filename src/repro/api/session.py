@@ -96,6 +96,32 @@ class ResilienceSession:
         scr = SCRManager.for_cluster(cluster, strategy=strategy, **scr_kw)
         return cls(scr, policy=policy, own_engine=True)
 
+    @classmethod
+    def for_shared_tier(
+        cls,
+        shared_root,
+        n_cluster: int = 2,
+        n_booster: int = 0,
+        strategy: Strategy = Strategy.BUDDY,
+        policy: Optional[CheckpointPolicy] = None,
+        **scr_kw,
+    ) -> "ResilienceSession":
+        """A session whose whole storage hierarchy lives under a serving
+        fleet's shared domain root (``<shared_root>/scr``).  Checkpoints
+        land on the fleet's shared filesystem, so a *fresh process*
+        opening a session over the same root discovers and restores them
+        (``available_steps`` scans committed descriptors from disk) —
+        the fleet-worker analogue of restarting onto BeeOND-cached
+        checkpoints instead of re-pulling from global storage."""
+        from pathlib import Path
+
+        from repro.cluster.topology import VirtualCluster
+
+        cluster = VirtualCluster(n_cluster=n_cluster, n_booster=n_booster,
+                                 root=Path(shared_root) / "scr")
+        return cls.for_cluster(cluster, strategy=strategy, policy=policy,
+                               **scr_kw)
+
     # -- lifecycle -------------------------------------------------------- #
 
     def __enter__(self) -> "ResilienceSession":

@@ -229,7 +229,7 @@ class TierStack:
         self._hit_log: Dict[str, List[int]] = {}
         self.stats = _Stats({
             "evictions": 0, "promotions": 0, "spills": 0,
-            "admission_routed": 0, "offloads": 0,
+            "admission_routed": 0, "offloads": 0, "direct_puts": 0,
             **{f"hits_{n}": 0 for n in names},
             **{f"misses_{n}": 0 for n in names},
             # codec traffic per encoded class: plaintext bytes through
@@ -532,6 +532,23 @@ class TierStack:
                 break
         assert last_exc is not None
         raise last_exc
+
+    def put_at(self, level_name: str, key: str, data: bytes,
+               streams: int = 1) -> float:
+        """Direct write at one named level, bypassing home-level routing —
+        the serving fleet's *publish* path: a worker pushes a prefix page
+        straight to the shared level so peer processes can read it
+        immediately, instead of waiting for demotion to carry it there.
+        Codec policy still applies (the write encodes iff the level sits
+        past the codec boundary), so published bytes match what a
+        demotion of the same key would have produced."""
+        for i, (name, _) in enumerate(self.levels):
+            if name == level_name:
+                t = self._put_at(i, key, data, streams)
+                with self._lock:
+                    self.stats["direct_puts"] += 1
+                return t
+        raise KeyError(level_name)
 
     # -- eviction ----------------------------------------------------------- #
 

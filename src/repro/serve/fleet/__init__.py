@@ -1,0 +1,40 @@
+"""Serving fleet: multi-worker serving over one shared cache domain.
+
+The single-process serving stack (PagedServeScheduler over DevicePagePool
++ KVPager + PrefixCache) scales out here the way DEEP-ER's hierarchy
+scales out — through a *shared level*, not shared memory:
+
+* :class:`~repro.memory.shared.SharedTier` (memory/shared.py) is the
+  cross-process store every worker mounts as the bottom level of its own
+  TierStack (``KVPager.for_fleet``);
+* :class:`PrefixBoard` (board.py) is the append-only journal through
+  which workers publish/subscribe prefix-trie node records — chain
+  digests are process-independent, so a record plus the payload in the
+  shared tier is enough for any peer to adopt the node;
+* :mod:`worker` runs one ``PagedServeScheduler`` per process behind a
+  pipe protocol (submit / tokens / done / stats / drain / stop),
+  designed so a ``drain`` returns re-admissible stream descriptors (the
+  elastic-resilience follow-up re-admits them on survivors);
+* :class:`FleetFrontend` (frontend.py) is the traffic-facing admission
+  router: per-tenant quotas, priority classes mapped onto the
+  scheduler's weighted quanta, least-loaded routing, incremental token
+  streaming back.
+
+Measured by benchmarks/fig12_fleet_scaling.py.
+"""
+
+from repro.memory.shared import SharedTier
+from repro.serve.fleet.board import PrefixBoard
+from repro.serve.fleet.frontend import FleetFrontend, PriorityClass, TenantQuota
+from repro.serve.fleet.worker import WorkerHandle, WorkerSpec, worker_main
+
+__all__ = [
+    "FleetFrontend",
+    "PrefixBoard",
+    "PriorityClass",
+    "SharedTier",
+    "TenantQuota",
+    "WorkerHandle",
+    "WorkerSpec",
+    "worker_main",
+]

@@ -1,0 +1,71 @@
+"""PrefixBoard: the fleet's prefix-trie publish/subscribe journal.
+
+An append-only JSONL file in the shared domain root.  Publishers append
+node records (the ``PrefixCache.export_records`` schema) under the
+domain's advisory lock; subscribers poll by byte offset — a reader
+consumes only whole lines up to the last newline, so a concurrent append
+can never hand it a torn record.  The journal is strictly ordered, and
+each publisher emits parents before children, so ``adopt_nodes`` on the
+consumer side never sees an orphan from a complete feed.
+
+The board carries *records only*; payload bytes travel through the
+:class:`~repro.memory.shared.SharedTier` under the ordinary
+``kv/prefix/<digest>.bin`` key (see ``publish_nodes`` in worker.py).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from pathlib import Path
+from typing import Any, Dict, List
+
+from repro.memory.shared import _DomainLock
+
+
+class PrefixBoard:
+    """One process's cursor over the shared prefix journal."""
+
+    def __init__(self, root):
+        self.root = Path(root)
+        self.root.mkdir(parents=True, exist_ok=True)
+        self.path = self.root / "prefix_board.jsonl"
+        self._lock_path = self.root / ".board_lock"
+        self._offset = 0
+        self.published = 0
+        self.adopt_seen = 0
+
+    def publish(self, records: List[Dict[str, Any]]) -> int:
+        """Append records atomically (one locked write).  Returns the
+        number appended."""
+        if not records:
+            return 0
+        data = "".join(
+            json.dumps(rec, sort_keys=True) + "\n" for rec in records
+        ).encode()
+        with _DomainLock(self._lock_path):
+            with open(self.path, "ab") as f:
+                f.write(data)
+        self.published += len(records)
+        return len(records)
+
+    def poll(self) -> List[Dict[str, Any]]:
+        """New records since this cursor's last poll (possibly its own —
+        consumers dedup by digest).  Lock-free: reads only whole lines."""
+        try:
+            size = os.path.getsize(self.path)
+        except FileNotFoundError:
+            return []
+        if size <= self._offset:
+            return []
+        with open(self.path, "rb") as f:
+            f.seek(self._offset)
+            data = f.read()
+        cut = data.rfind(b"\n")
+        if cut < 0:
+            return []       # partial line in flight; next poll gets it
+        self._offset += cut + 1
+        records = [json.loads(line) for line in data[:cut + 1].splitlines()
+                   if line]
+        self.adopt_seen += len(records)
+        return records

@@ -1,0 +1,232 @@
+"""Fleet front-end: admission control + routing over a worker pool.
+
+The traffic-facing half of the serving fleet.  Requests arrive tagged
+with a *tenant* and a *priority class*; the front-end enforces
+per-tenant in-flight quotas (a tenant over quota queues in its own
+backlog — it is throttled, it never blocks anyone else), maps the
+priority class onto the scheduler's weighted round-robin quanta
+(``quantum_weight``), routes each admitted request to the least-loaded
+worker by outstanding-token estimate, and streams tokens back
+incrementally as workers emit them.
+
+The front-end is single-threaded and cooperative: callers drive it by
+calling :meth:`pump` (or :meth:`wait`, which pumps).  Every pump drains
+worker pipes first — so completions free quota before admission runs —
+then admits from the backlogs in arrival order per tenant.
+
+Admission latency (submit -> dispatch-to-worker) is recorded per
+tenant; :meth:`admission_latency_p99` is the metric the fig12 benchmark
+gates on — an under-quota tenant's p99 must stay bounded while a noisy
+tenant is throttled.
+"""
+
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Deque, Dict, List, Optional, Sequence
+
+from repro.serve.fleet.worker import WorkerHandle, WorkerSpec
+
+
+@dataclass(frozen=True)
+class PriorityClass:
+    """A named priority level, expressed as a quantum multiplier: a
+    weight-``w`` stream decodes ``w * quantum`` consecutive steps before
+    the scheduler's round-robin parks it."""
+    name: str
+    quantum_weight: int = 1
+
+
+@dataclass(frozen=True)
+class TenantQuota:
+    """Per-tenant admission limit: at most ``max_inflight`` requests
+    dispatched-but-unfinished at once.  Excess requests wait in the
+    tenant's own backlog."""
+    max_inflight: int = 4
+
+
+DEFAULT_CLASSES = {
+    "batch": PriorityClass("batch", 1),
+    "interactive": PriorityClass("interactive", 2),
+}
+
+
+@dataclass
+class _Request:
+    rid: int
+    tenant: str
+    prompt: List[int]
+    max_new: int
+    weight: int
+    submitted_s: float
+    dispatched_s: Optional[float] = None
+    worker: Optional[int] = None
+    tokens: List[int] = field(default_factory=list)
+    done: bool = False
+
+    @property
+    def cost(self) -> int:
+        # outstanding-work estimate for least-loaded routing
+        return len(self.prompt) + self.max_new
+
+
+class FleetFrontend:
+    """Admission + routing over ``workers`` (WorkerHandle list)."""
+
+    def __init__(
+        self,
+        workers: Sequence[WorkerHandle],
+        quotas: Optional[Dict[str, TenantQuota]] = None,
+        classes: Optional[Dict[str, PriorityClass]] = None,
+        default_quota: TenantQuota = TenantQuota(),
+    ):
+        if not workers:
+            raise ValueError("need at least one worker")
+        self.workers = list(workers)
+        self.quotas = dict(quotas or {})
+        self.classes = dict(classes or DEFAULT_CLASSES)
+        self.default_quota = default_quota
+        self._requests: Dict[int, _Request] = {}
+        self._backlog: Dict[str, Deque[int]] = {}
+        self._inflight: Dict[str, int] = {}
+        self._load = [0] * len(self.workers)    # outstanding cost / worker
+        self._rid_worker: Dict[int, int] = {}
+        self._lat: Dict[str, List[float]] = {}
+        self._next_rid = 0
+        self.stats: Dict[str, int] = {
+            "submitted": 0, "dispatched": 0, "completed": 0,
+            "throttle_events": 0,
+        }
+
+    # -- lifecycle --------------------------------------------------------- #
+
+    @classmethod
+    def launch(cls, specs: Sequence[WorkerSpec],
+               ready_timeout: float = 600.0, **kw) -> "FleetFrontend":
+        """Spawn a worker per spec (in parallel — jit warm-up dominates)
+        and wait until every one is ready."""
+        workers = [WorkerHandle.launch(s) for s in specs]
+        for w in workers:
+            w.wait_ready(ready_timeout)
+        return cls(workers, **kw)
+
+    def stop(self) -> None:
+        for w in self.workers:
+            w.stop()
+
+    def __enter__(self) -> "FleetFrontend":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # -- submission --------------------------------------------------------- #
+
+    def submit(self, prompt: Sequence[int], max_new: int,
+               tenant: str = "default", prio: str = "batch") -> int:
+        """Queue a request; returns its rid.  Dispatch happens on the
+        next :meth:`pump` (quota and load decide when and where)."""
+        klass = self.classes.get(prio)
+        if klass is None:
+            raise ValueError(f"unknown priority class {prio!r}")
+        rid = self._next_rid
+        self._next_rid += 1
+        self._requests[rid] = _Request(
+            rid=rid, tenant=tenant, prompt=[int(t) for t in prompt],
+            max_new=int(max_new), weight=klass.quantum_weight,
+            submitted_s=time.monotonic())
+        self._backlog.setdefault(tenant, deque()).append(rid)
+        self.stats["submitted"] += 1
+        return rid
+
+    # -- the pump ----------------------------------------------------------- #
+
+    def pump(self) -> None:
+        """One cooperative cycle: collect worker output, then admit."""
+        self._collect()
+        self._admit()
+
+    def _collect(self) -> None:
+        for wi, w in enumerate(self.workers):
+            for msg in w.messages():
+                op = msg.get("op")
+                req = self._requests.get(msg.get("rid"))
+                if req is None:
+                    continue
+                if op == "tokens":
+                    req.tokens.extend(msg["tokens"])
+                elif op == "done":
+                    req.tokens = list(msg["tokens"])    # authoritative
+                    if not req.done:
+                        req.done = True
+                        self.stats["completed"] += 1
+                        self._inflight[req.tenant] = (
+                            self._inflight.get(req.tenant, 1) - 1)
+                        if req.worker is not None:
+                            self._load[req.worker] -= req.cost
+
+    def _quota(self, tenant: str) -> TenantQuota:
+        return self.quotas.get(tenant, self.default_quota)
+
+    def _admit(self) -> None:
+        for tenant in sorted(self._backlog):
+            q = self._backlog[tenant]
+            limit = self._quota(tenant).max_inflight
+            throttled = False
+            while q:
+                if self._inflight.get(tenant, 0) >= limit:
+                    throttled = True
+                    break
+                self._dispatch(q.popleft())
+            if throttled:
+                self.stats["throttle_events"] += 1
+
+    def _dispatch(self, rid: int) -> None:
+        req = self._requests[rid]
+        wi = min(range(len(self.workers)), key=lambda i: self._load[i])
+        self.workers[wi].submit(rid, req.prompt, req.max_new,
+                                weight=req.weight)
+        req.worker = wi
+        req.dispatched_s = time.monotonic()
+        self._load[wi] += req.cost
+        self._inflight[req.tenant] = self._inflight.get(req.tenant, 0) + 1
+        self._lat.setdefault(req.tenant, []).append(
+            req.dispatched_s - req.submitted_s)
+        self.stats["dispatched"] += 1
+
+    # -- completion --------------------------------------------------------- #
+
+    def wait(self, rids: Optional[Sequence[int]] = None,
+             timeout: float = 600.0) -> None:
+        """Pump until every rid (default: all) is done."""
+        if rids is None:
+            rids = list(self._requests)
+        deadline = time.monotonic() + timeout
+        while time.monotonic() < deadline:
+            self.pump()
+            if all(self._requests[r].done for r in rids):
+                return
+            time.sleep(0.005)
+        pending = [r for r in rids if not self._requests[r].done]
+        raise TimeoutError(f"requests never finished: {pending}")
+
+    def result(self, rid: int) -> List[int]:
+        req = self._requests[rid]
+        if not req.done:
+            raise ValueError(f"request {rid} not finished")
+        return list(req.tokens)
+
+    # -- metrics ------------------------------------------------------------ #
+
+    def admission_latency_p99(self, tenant: str) -> float:
+        """p99 of submit->dispatch latency for ``tenant`` (seconds);
+        0.0 when the tenant never dispatched."""
+        lat = sorted(self._lat.get(tenant, ()))
+        if not lat:
+            return 0.0
+        return lat[min(len(lat) - 1, int(0.99 * len(lat)))]
+
+    def worker_stats(self) -> List[Dict[str, Any]]:
+        return [w.stats() for w in self.workers]

@@ -1,0 +1,322 @@
+"""Fleet worker: one PagedServeScheduler per process behind a pipe.
+
+Each worker owns a full serving stack — model, params, DevicePagePool,
+``KVPager.for_fleet`` TierStack whose bottom level is the fleet's
+:class:`~repro.memory.shared.SharedTier`, and a slice-mode PrefixCache.
+Workers are spawned (never forked — JAX is fork-hostile) from a
+picklable :class:`WorkerSpec`; every worker initialises params from the
+same seed, so the fleet serves one model and KV pages are
+interchangeable across processes.
+
+Protocol (dicts over a ``multiprocessing.Pipe``), parent -> worker::
+
+    {"op": "submit", "rid", "prompt", "max_new", "weight"}
+    {"op": "stats"}         -> one {"op": "stats", ...} reply
+    {"op": "drain"}         -> {"op": "drained", "streams": [...]}
+    {"op": "stop"}          -> worker exits its loop
+
+worker -> parent::
+
+    {"op": "ready", "pid"}                  once, after jit warm-up
+    {"op": "tokens", "rid", "tokens"}       incremental decode output
+    {"op": "done", "rid", "tokens"}         full output, stream finished
+    {"op": "stats", "scheduler", "tier", "prefix", "shared"}
+    {"op": "drained", "streams"}            re-admissible descriptors
+
+``drain`` exists for elastic resilience: it returns, for every
+unfinished stream, the descriptor a *surviving* worker needs to
+re-admit it (prompt + tokens emitted so far + remaining budget +
+weight).  The front-end does not use it on the happy path; it is the
+designed seam for moving load off a worker being retired.
+
+Prefix sharing is push/pull: after every scheduler step the worker
+diffs ``PrefixCache.export_records()`` against what it has already
+published, copies each fresh node's payload into the shared tier
+(``TierStack.put_at("shared", ...)``) and appends the records to the
+:class:`~repro.serve.fleet.board.PrefixBoard`; before every admission
+it polls the board and ``adopt_nodes``s what peers published.  Payload
+reads on the consumer side go through the ordinary stack read path, so
+a peer's page read-through-promotes into the local fast tier.
+"""
+
+from __future__ import annotations
+
+import multiprocessing as mp
+from collections import deque
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Any, Deque, Dict, List, Optional
+
+from repro.memory.tiers import CapacityError
+
+
+@dataclass(frozen=True)
+class WorkerSpec:
+    """Everything a spawned worker needs to build its serving stack.
+
+    Must stay picklable (crosses the spawn boundary).  ``seed`` is the
+    params seed — all workers of one fleet must share it."""
+
+    shared_root: str
+    arch: str = "phi3-mini-3.8b"
+    slots: int = 2
+    max_len: int = 32
+    page_tokens: int = 4
+    quantum: int = 3
+    pool_pages: Optional[int] = None
+    spec_k: int = 0
+    fast_bytes: int = 8 << 20
+    page_bytes: int = 8 * 1024
+    kv_codec: Optional[str] = None
+    shared_capacity: int = 1 << 30
+    seed: int = 0
+
+
+def _build_scheduler(spec: WorkerSpec):
+    # imports live here so the parent can import this module (for the
+    # spawn target) without paying for jax/model state
+    import jax
+
+    from repro.configs import get_config
+    from repro.memory.shared import SharedTier
+    from repro.models.registry import get_model
+    from repro.serve.kvpage import KVPager
+    from repro.serve.prefix import PrefixCache
+    from repro.serve.scheduler import PagedServeScheduler
+
+    cfg = get_config(spec.arch).reduced()
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(spec.seed), cfg)
+    shared = SharedTier(Path(spec.shared_root) / "domain",
+                        capacity_bytes=spec.shared_capacity)
+    pager = KVPager.for_fleet(shared, fast_bytes=spec.fast_bytes,
+                              page_bytes=spec.page_bytes)
+    prefix = PrefixCache.for_model(pager.stack, cfg, model, spec.max_len,
+                                   page_tokens=spec.page_tokens)
+    sched = PagedServeScheduler(
+        cfg, model, params, slots=spec.slots, max_len=spec.max_len,
+        pager=pager, quantum=spec.quantum, prefix=prefix,
+        page_tokens=spec.page_tokens, pool_pages=spec.pool_pages,
+        spec_k=spec.spec_k, kv_codec=spec.kv_codec)
+    return sched, pager, prefix, shared
+
+
+def publish_nodes(sched, board, published: set) -> int:
+    """Push this worker's fresh prefix nodes to the fleet: payload bytes
+    into the shared tier, records onto the board.  ``published`` is the
+    caller-owned set of digests already shipped (records seen via the
+    board poll count — adopting a peer's node must not re-publish it).
+    Best-effort by design: a payload already evicted, or a shared domain
+    at capacity, skips the node — sharing degrades, correctness does not.
+    """
+    from repro.serve.prefix import prefix_page_key
+
+    prefix = sched.prefix
+    stack = prefix.stack
+    fresh: List[Dict[str, Any]] = []
+    for rec in prefix.export_records():     # parents before children
+        if rec["digest"] in published:
+            continue
+        key = prefix_page_key(rec["digest"])
+        try:
+            payload = stack.get(key, promote=False)
+        except (KeyError, IOError):
+            continue                        # evicted under us: skip
+        try:
+            stack.put_at("shared", key, payload)
+        except CapacityError:
+            continue                        # domain full: stop sharing
+        published.add(rec["digest"])
+        fresh.append(rec)
+    if fresh:
+        board.publish(fresh)
+    return len(fresh)
+
+
+def worker_main(conn, spec: WorkerSpec) -> None:
+    """Entry point of a spawned worker process."""
+    from repro.serve.fleet.board import PrefixBoard
+
+    sched, pager, prefix, shared = _build_scheduler(spec)
+    board = PrefixBoard(Path(spec.shared_root))
+    published: set = set()
+    rid_of: Dict[int, Any] = {}             # sid -> front-end request id
+    emitted: Dict[int, int] = {}            # sid -> tokens already sent
+    conn.send({"op": "ready", "pid": __import__("os").getpid()})
+    running = True
+    try:
+        while running:
+            busy = bool(sched.unfinished())
+            # drain the pipe; block briefly when idle so we don't spin
+            while conn.poll(0 if busy else 0.02):
+                try:
+                    msg = conn.recv()
+                except EOFError:
+                    running = False
+                    break
+                op = msg["op"]
+                if op == "submit":
+                    # adopt peers' prefixes *before* admission, so this
+                    # prompt's prefill can hit pages computed elsewhere
+                    recs = board.poll()
+                    if recs:
+                        prefix.adopt_nodes(recs)
+                        published.update(r["digest"] for r in recs)
+                    sid = sched.submit(msg["prompt"], msg["max_new"],
+                                       quantum_weight=msg.get("weight", 1))
+                    rid_of[sid] = msg["rid"]
+                    emitted[sid] = 0
+                elif op == "stats":
+                    import time
+                    conn.send({
+                        "op": "stats",
+                        "scheduler": dict(sched.stats),
+                        "tier": pager.stack.stats(),
+                        "prefix": dict(prefix.stats),
+                        # this process's cumulative CPU seconds: the
+                        # fleet benchmark takes deltas to compute the
+                        # critical path (max over workers), i.e. the
+                        # parallel wall on non-oversubscribed hardware
+                        "cpu_s": time.process_time(),
+                        "shared": {"used_bytes": shared.used_bytes(),
+                                   "board_published": board.published,
+                                   "board_seen": board.adopt_seen},
+                    })
+                elif op == "drain":
+                    streams = []
+                    for sid, s in sched.streams.items():
+                        if s.state.name == "DONE":
+                            continue
+                        out = s.tokens[s.plen:]
+                        streams.append({
+                            "rid": rid_of.get(sid),
+                            "prompt": s.tokens[:s.plen],
+                            "emitted": list(out),
+                            "max_new": s.max_new - len(out),
+                            "weight": s.quantum_weight,
+                        })
+                    conn.send({"op": "drained", "streams": streams})
+                elif op == "stop":
+                    running = False
+                else:
+                    raise ValueError(f"unknown op {op!r}")
+            if not running:
+                break
+            if not sched.unfinished():
+                continue
+            for sid, tok in sched.step():
+                emitted[sid] = emitted.get(sid, 0) + 1
+                conn.send({"op": "tokens", "rid": rid_of.get(sid),
+                           "tokens": [int(tok)]})
+            # publish BEFORE reporting completions: a stream's prefix
+            # nodes are inserted at admission, so by the time its "done"
+            # reaches the front-end the pages are already on the board —
+            # a peer admitting the next same-prefix request cannot race
+            # the publish
+            publish_nodes(sched, board, published)
+            for sid in [s for s, st in sched.streams.items()
+                        if st.state.name == "DONE" and s in rid_of]:
+                s = sched.streams[sid]
+                conn.send({"op": "done", "rid": rid_of.pop(sid),
+                           "tokens": [int(t) for t in s.tokens[s.plen:]]})
+                emitted.pop(sid, None)
+    finally:
+        try:
+            sched.close()
+        except Exception:
+            pass
+        conn.close()
+
+
+class WorkerHandle:
+    """Parent-side handle: spawned process + pipe + message inbox.
+
+    ``request`` pattern: synchronous ops (stats/drain) read the pipe
+    until the matching reply arrives, buffering unrelated messages
+    (tokens/done) into ``inbox`` so the front-end's pump never loses
+    them."""
+
+    def __init__(self, proc, conn, spec: WorkerSpec):
+        self.proc = proc
+        self.conn = conn
+        self.spec = spec
+        self.inbox: Deque[Dict[str, Any]] = deque()
+        self.ready = False
+
+    @classmethod
+    def launch(cls, spec: WorkerSpec) -> "WorkerHandle":
+        ctx = mp.get_context("spawn")       # JAX state must not fork
+        parent, child = ctx.Pipe()
+        proc = ctx.Process(target=worker_main, args=(child, spec),
+                           daemon=True)
+        proc.start()
+        child.close()
+        return cls(proc, parent, spec)
+
+    def wait_ready(self, timeout: float = 300.0) -> None:
+        if self.ready:
+            return
+        if not self.conn.poll(timeout):
+            raise TimeoutError("worker did not come up")
+        try:
+            msg = self.conn.recv()
+        except EOFError:
+            raise RuntimeError(
+                f"worker died during startup (exitcode "
+                f"{self.proc.exitcode})") from None
+        if msg.get("op") != "ready":
+            raise RuntimeError(f"expected ready, got {msg!r}")
+        self.ready = True
+
+    def send(self, **msg: Any) -> None:
+        self.conn.send(msg)
+
+    def submit(self, rid: Any, prompt: List[int], max_new: int,
+               weight: int = 1) -> None:
+        self.send(op="submit", rid=rid, prompt=list(prompt),
+                  max_new=int(max_new), weight=int(weight))
+
+    def messages(self) -> List[Dict[str, Any]]:
+        """Everything received so far (inbox first, then the pipe)."""
+        out = list(self.inbox)
+        self.inbox.clear()
+        try:
+            while self.conn.poll(0):
+                out.append(self.conn.recv())
+        except (EOFError, OSError):
+            pass
+        return out
+
+    def request(self, op: str, reply_op: str,
+                timeout: float = 60.0) -> Dict[str, Any]:
+        self.send(op=op)
+        import time
+        deadline = time.monotonic() + timeout
+        while time.monotonic() < deadline:
+            if not self.conn.poll(min(0.05, timeout)):
+                continue
+            msg = self.conn.recv()
+            if msg.get("op") == reply_op:
+                return msg
+            self.inbox.append(msg)
+        raise TimeoutError(f"no {reply_op!r} reply from worker")
+
+    def stats(self) -> Dict[str, Any]:
+        return self.request("stats", "stats")
+
+    def drain(self) -> List[Dict[str, Any]]:
+        return self.request("drain", "drained")["streams"]
+
+    def stop(self, timeout: float = 30.0) -> None:
+        try:
+            self.send(op="stop")
+        except (BrokenPipeError, OSError):
+            pass
+        self.proc.join(timeout)
+        if self.proc.is_alive():            # pragma: no cover - hang path
+            self.proc.terminate()
+            self.proc.join(5)
+        try:
+            self.conn.close()
+        except OSError:                     # pragma: no cover
+            pass

@@ -258,6 +258,35 @@ class DevicePagePool:
         return {name: arr[:, None]
                 for name, arr in self.read_page(phys).items()}
 
+    def write_token_range(self, phys: int, part: Any, n: int) -> None:
+        """Scatter the first ``n`` tokens of a page — a partial-page
+        tail payload, leaves (L, 1, n, *rest) — into slot ``phys``.
+        Positions past ``n`` are untouched: they are stream-private and
+        get written by the owner's suffix prefill, which is why tails
+        share *compute* but never physical pages."""
+        if not 0 < n <= self.page_tokens:
+            raise ValueError(f"token range {n} outside (0, {self.page_tokens}]")
+        for name in self.data_names:
+            arr = np.asarray(part[name])[:, 0]      # (L, n, *rest)
+            leaf = self.leaves[name]
+            if self.quantized:
+                q, scale = int8_quantize(arr, axis=-1)
+                self.leaves[name] = leaf.at[:, phys, :n].set(q)
+                sleaf = self.leaves[name + SCALE_SUFFIX]
+                self.leaves[name + SCALE_SUFFIX] = sleaf.at[:, phys, :n].set(
+                    scale[..., 0])
+            else:
+                self.leaves[name] = leaf.at[:, phys, :n].set(
+                    jnp.asarray(arr, leaf.dtype))
+
+    def read_token_range(self, phys: int, n: int) -> Any:
+        """The first ``n`` tokens of a page as a payload pytree (leaves
+        (L, 1, n, *rest)) — the tail-registration read."""
+        if not 0 < n <= self.page_tokens:
+            raise ValueError(f"token range {n} outside (0, {self.page_tokens}]")
+        return {name: arr[:, None, :n]
+                for name, arr in self.read_page(phys).items()}
+
     # -- checkpoint -------------------------------------------------------- #
 
     def snapshot(self) -> Dict[str, np.ndarray]:

@@ -56,13 +56,14 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import zlib
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
 
 from repro.io.serialization import StateBlob, deserialize_state, serialize_state
-from repro.memory.stack import TierStack
+from repro.memory.stack import KeyClass, TierStack
 from repro.memory.tiers import CapacityError
 
 
@@ -187,6 +188,8 @@ class PrefixCache:
         self.stats: Dict[str, int] = {
             "hits": 0, "misses": 0, "tokens_reused": 0, "pages_inserted": 0,
             "pages_evicted": 0, "insert_rejected": 0, "bytes_cached": 0,
+            "tail_hits": 0, "tail_tokens_reused": 0, "tail_pages_inserted": 0,
+            "nodes_adopted": 0,
         }
         if self.mode == "slice":
             part = layout.extract(layout.zero_lane(), 0, self.page_tokens)
@@ -197,6 +200,8 @@ class PrefixCache:
             self._part_manifest = serialize_state(
                 jax.tree_util.tree_unflatten(
                     layout.treedef, layout.template_leaves)).manifest
+        # per-token-count (template, manifest) for partial-page tails
+        self._tail_like: Dict[int, Tuple[Any, Dict[str, Any]]] = {}
 
     # default trie budget for for_model: enough for many distinct shared
     # prefixes, small enough that a long-running server cannot grow the
@@ -278,17 +283,45 @@ class PrefixCache:
         self.stats["tokens_reused"] += covered
         return covered
 
+    def _kv_lossy(self) -> bool:
+        """True when the stack's ``kv`` codec changes bytes (e.g. int8):
+        a payload demoted past the fast level then decodes to *different*
+        bytes than were inserted, by design."""
+        rule = self.stack.codec_for(KeyClass.KV)
+        return rule is not None and not rule.codec.lossless
+
     def _deserialize(self, data: bytes, node: _Node) -> Any:
         # the manifest carries the INSERT-time crc, so the integrity
         # check inside deserialize_state actually detects a payload
         # corrupted between insert and fetch (recomputing it here from
-        # the fetched bytes would make the check tautological)
-        manifest = dict(self._part_manifest)
-        manifest["crc32"] = node.crc32
-        like = (self._part_template if self.mode == "slice"
-                else jax.tree_util.tree_unflatten(
-                    self.layout.treedef, self.layout.template_leaves))
+        # the fetched bytes would make the check tautological).  Under a
+        # LOSSY kv codec that check cannot hold: a demoted payload
+        # legitimately decodes to different bytes, so — exactly as
+        # KVPager.fetch re-anchors parked-page manifests — the crc is
+        # recomputed over the fetched bytes and integrity is tolerance-
+        # gated instead (without this, every demotion under an int8
+        # codec silently dropped the subtree and sharing was lost)
+        if self.mode == "slice" and len(node.chunk) != self.page_tokens:
+            like, base_manifest = self._tail_template(len(node.chunk))
+        elif self.mode == "slice":
+            like, base_manifest = self._part_template, self._part_manifest
+        else:
+            like = jax.tree_util.tree_unflatten(
+                self.layout.treedef, self.layout.template_leaves)
+            base_manifest = self._part_manifest
+        manifest = dict(base_manifest)
+        manifest["crc32"] = (zlib.crc32(data) & 0xFFFFFFFF
+                             if self._kv_lossy() else node.crc32)
         return deserialize_state(StateBlob(data=data, manifest=manifest), like)
+
+    def _tail_template(self, m: int) -> Tuple[Any, Dict[str, Any]]:
+        """(template pytree, manifest) for an ``m``-token partial page."""
+        cached = self._tail_like.get(m)
+        if cached is None:
+            part = self.layout.extract(self.layout.zero_lane(), 0, m)
+            cached = (part, serialize_state(part).manifest)
+            self._tail_like[m] = cached
+        return cached
 
     # -- insertion --------------------------------------------------------- #
 
@@ -349,6 +382,102 @@ class PrefixCache:
             self.acquire(sid, path)
         self._maybe_evict()
         return path
+
+    # -- partial-page tails -------------------------------------------------- #
+    #
+    # A prefix only dedups whole pages through `match`/`extend`, so two
+    # prompts sharing (say) a 6-token system preamble under page_tokens=8
+    # shared *nothing*.  Tail nodes fix that: the last, partially-filled
+    # page of a prompt is registered as a node whose chunk is shorter
+    # than page_tokens, living in the same children dict as full pages
+    # (chunk length disambiguates — full chunks are exactly page_tokens).
+    # Tails are slice-mode only (a snapshot at a non-boundary is a whole
+    # lane per prompt length — not worth caching), are always leaves
+    # (children attach only under full pages), and save *compute*, not
+    # physical pages: the pool path copies a tail into the stream's own
+    # fresh page, since the rest of that page is stream-private.
+
+    def match_tail(self, tokens: Sequence[int], covered: int,
+                   path: List[_Node]) -> Optional[_Node]:
+        """Longest registered tail extending a full-page match: a tail
+        under ``path[-1]`` (or the root) whose chunk is a prefix of
+        ``tokens[covered:]``.  KV for positions ``[covered, tail.end)``
+        depends only on ``tokens[:tail.end]``, so any stream agreeing on
+        those tokens can reuse the slice — even with a longer prompt."""
+        if self.mode != "slice":
+            return None
+        pt = self.page_tokens
+        rest = [int(t) for t in tokens[covered:]]
+        if not rest:
+            return None
+        level = path[-1].children if path else self._root
+        best: Optional[_Node] = None
+        for chunk, node in level.items():
+            if len(chunk) >= pt or len(chunk) > len(rest):
+                continue
+            if chunk == tuple(rest[:len(chunk)]):
+                if best is None or node.end > best.end:
+                    best = node
+        if best is not None:
+            self._clock += 1
+            best.last_used = self._clock
+            self.stats["tail_hits"] += 1
+            self.stats["tail_tokens_reused"] += len(best.chunk)
+        return best
+
+    def register_tail(self, tokens: Sequence[int], upto: int, lane: Any,
+                      sid: Optional[int] = None,
+                      payload_fn: Optional[Any] = None) -> Optional[_Node]:
+        """Register the partially-filled last page of ``tokens[:upto]``
+        (the ``upto % page_tokens`` remainder past the last full-page
+        boundary) as a tail node.  Requires the full-page path up to
+        that boundary to already exist (``extend`` runs first); returns
+        the tail node, or None when there is no remainder, the ancestors
+        are missing, or the mode is snapshot."""
+        if self.mode != "slice":
+            return None
+        tokens = [int(t) for t in tokens]
+        pt = self.page_tokens
+        base = (upto // pt) * pt
+        if upto - base == 0 or upto > len(tokens):
+            return None
+        path: List[_Node] = []
+        level = self._root
+        parent: Optional[_Node] = None
+        for j in range(base // pt):
+            node = level.get(tuple(tokens[j * pt:(j + 1) * pt]))
+            if node is None:
+                return None
+            path.append(node)
+            parent, level = node, node.children
+        chunk = tuple(tokens[base:upto])
+        self._clock += 1
+        node = level.get(chunk)
+        if node is None:
+            if payload_fn is not None:
+                blob = serialize_state(
+                    jax.tree_util.tree_map(np.asarray, payload_fn(upto)))
+                payload, crc = blob.data, int(blob.manifest["crc32"])
+            else:
+                blob = serialize_state(self.layout.extract(lane, base, upto))
+                payload, crc = blob.data, int(blob.manifest["crc32"])
+            digest = chain_digest(parent.digest if parent else "", chunk)
+            try:
+                self.stack.put(prefix_page_key(digest), payload)
+            except CapacityError:
+                self.stats["insert_rejected"] += 1
+                return None
+            node = _Node(digest=digest, parent=parent, chunk=chunk,
+                         end=upto, nbytes=len(payload), crc32=crc)
+            level[chunk] = node
+            self._nodes[digest] = node
+            self.stats["tail_pages_inserted"] += 1
+            self.stats["bytes_cached"] += node.nbytes
+        node.last_used = self._clock
+        if sid is not None:
+            self.acquire(sid, [node])
+        self._maybe_evict()
+        return node
 
     def _payload(self, lane: Any, end: int) -> Tuple[bytes, int]:
         if self.mode == "slice":
@@ -464,6 +593,59 @@ class PrefixCache:
     def cached_bytes(self) -> int:
         return self.stats["bytes_cached"]
 
+    # -- fleet publish / subscribe ------------------------------------------- #
+
+    def export_records(self) -> List[Dict[str, Any]]:
+        """Node records only (no payload reads), parents before children —
+        the publish half of cross-process trie sharing.  A worker diffs
+        these against its published set and ships payloads separately
+        (serve/fleet): chain digests are process-independent, so a record
+        plus its payload bytes is enough for any peer to adopt the node."""
+        return [{
+            "digest": node.digest,
+            "parent": node.parent.digest if node.parent else "",
+            "chunk": list(node.chunk),
+            "end": node.end,
+            "nbytes": node.nbytes,
+            "crc32": node.crc32,
+        } for node in sorted(self._nodes.values(), key=lambda n: n.end)]
+
+    def adopt_nodes(self, records: List[Dict[str, Any]]) -> int:
+        """Merge peer-published node records into this trie WITHOUT
+        putting payloads — the subscribe half.  The payload is expected
+        to be readable through the stack (a shared level holds it); the
+        first fetch read-through-promotes it into this process's fast
+        tier.  Records whose parent is unknown here are skipped (the
+        publisher emits parents first, so a full feed never orphans);
+        records colliding with an existing chunk are skipped (same
+        content ⇒ same chain digest ⇒ already present).  Returns the
+        number of nodes adopted."""
+        adopted = 0
+        for rec in records:
+            digest = rec["digest"]
+            if digest in self._nodes:
+                continue
+            parent: Optional[_Node] = None
+            if rec["parent"]:
+                parent = self._nodes.get(rec["parent"])
+                if parent is None:
+                    continue
+            chunk = tuple(int(t) for t in rec["chunk"])
+            level = parent.children if parent else self._root
+            if chunk in level:
+                continue
+            node = _Node(digest=digest, parent=parent, chunk=chunk,
+                         end=int(rec["end"]), nbytes=int(rec["nbytes"]),
+                         crc32=int(rec["crc32"]), last_used=self._clock)
+            level[chunk] = node
+            self._nodes[digest] = node
+            self.stats["bytes_cached"] += node.nbytes
+            self.stats["nodes_adopted"] += 1
+            adopted += 1
+        if adopted:
+            self._maybe_evict()
+        return adopted
+
     # -- checkpoint / restore ------------------------------------------------ #
 
     def export_nodes(self) -> Tuple[List[Dict[str, Any]], List[bytes]]:
@@ -502,7 +684,6 @@ class PrefixCache:
         from a checkpoint export; stream references are re-acquired so
         the restored scheduler's refcounts match the saved ones."""
         self.clear()
-        import zlib
         for rec, payload in zip(records, payloads):
             parent = self._nodes.get(rec["parent"]) if rec["parent"] else None
             chunk = tuple(int(t) for t in rec["chunk"])

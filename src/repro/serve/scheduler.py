@@ -139,6 +139,7 @@ class DecodeStream:
     slot: Optional[int] = None
     ran: int = 0                 # steps since last admit (quantum accounting)
     finished_step: Optional[int] = None
+    quantum_weight: int = 1      # priority class: quantum multiplier
 
     @property
     def emitted(self) -> List[int]:
@@ -221,9 +222,15 @@ class ServeScheduler:
 
     # -- submission -------------------------------------------------------- #
 
-    def submit(self, prompt: Sequence[int], max_new: int) -> int:
+    def submit(self, prompt: Sequence[int], max_new: int,
+               quantum_weight: int = 1) -> int:
         """Queue one decode stream; it joins a slot at the next step
-        boundary.  Returns the stream id."""
+        boundary.  ``quantum_weight`` is the stream's priority class as a
+        quantum multiplier — a weight-``w`` stream runs ``w * quantum``
+        consecutive steps before round-robin preemption parks it, so
+        higher classes get proportionally more decode time under
+        contention (the fleet front-end maps priority classes onto this).
+        Returns the stream id."""
         prompt = [int(t) for t in np.asarray(prompt).reshape(-1)]
         if not prompt:
             raise ValueError("empty prompt")
@@ -232,11 +239,14 @@ class ServeScheduler:
                              f"{self.max_len}")
         if max_new < 1:
             raise ValueError("max_new must be >= 1")
+        if quantum_weight < 1:
+            raise ValueError("quantum_weight must be >= 1")
         sid = self._next_sid
         self._next_sid += 1
         self.streams[sid] = DecodeStream(
             sid=sid, tokens=list(prompt), plen=len(prompt), max_new=int(max_new),
-            submitted_step=self.step_count)
+            submitted_step=self.step_count,
+            quantum_weight=int(quantum_weight))
         self._runq.append(sid)
         return sid
 
@@ -277,13 +287,33 @@ class ServeScheduler:
         host_lane = None
         if self.prefix is not None and target > 0:
             _, path = self.prefix.match(s.tokens[:target])
+            live: List[Any] = []
             if path:
                 host_lane = self.prefix.layout.zero_lane()
                 covered = self.prefix.fetch_into(path, host_lane)
                 if covered:
-                    self.prefix.acquire(s.sid, path[:covered // self.prefix.page_tokens])
+                    live = path[:covered // self.prefix.page_tokens]
+                    self.prefix.acquire(s.sid, live)
                     self.stats["prefix_hits"] += 1
                     self.stats["prefill_tokens_saved"] += covered
+            if covered < target:
+                # partial-page tail: reuse the last, partially-filled
+                # page of a common prefix (short shared prompts under
+                # page_tokens share through this path alone)
+                tail = self.prefix.match_tail(s.tokens[:target], covered, live)
+                if tail is not None:
+                    try:
+                        part = self.prefix.read_node_part(tail)
+                    except (KeyError, IOError):
+                        self.prefix._drop_subtree(tail)
+                    else:
+                        if host_lane is None:
+                            host_lane = self.prefix.layout.zero_lane()
+                        self.prefix.layout.inject(host_lane, part,
+                                                  covered, tail.end)
+                        self.prefix.acquire(s.sid, [tail])
+                        self.stats["prefill_tokens_saved"] += tail.end - covered
+                        covered = tail.end
         lane = jax.tree_util.tree_map(
             jnp.asarray, host_lane if host_lane is not None else self._lane_template)
         if self.prefix is not None and self.prefix.mode == "snapshot":
@@ -306,6 +336,9 @@ class ServeScheduler:
                 if upto > covered:
                     self.prefix.extend(s.tokens[:upto], upto,
                                        jax.device_get(lane), sid=s.sid)
+                if target > upto:
+                    self.prefix.register_tail(s.tokens[:target], target,
+                                              jax.device_get(lane), sid=s.sid)
         s.pos = max(target, 0)
         return lane
 
@@ -359,7 +392,9 @@ class ServeScheduler:
             sid = self._slot_sid[slot]
             if sid is None:
                 continue
-            if self.streams[sid].ran >= self.quantum and self._park(sid):
+            s = self.streams[sid]
+            if (s.ran >= self.quantum * s.quantum_weight
+                    and self._park(sid)):
                 self._admit(self._runq.popleft(), slot)
 
     # -- the decode loop ---------------------------------------------------- #
@@ -454,7 +489,7 @@ class ServeScheduler:
     # reads *before* building the template — so a fresh process can
     # restore with zero prior knowledge of the stream set.
 
-    _META_COLS = 9  # plen, ntok, pos, state, slot, max_new, ran, sub, fin
+    _META_COLS = 10  # plen, ntok, pos, state, slot, max_new, ran, sub, fin, qw
 
     def _stream_state_arrays(self) -> Tuple[Dict[str, Any], Dict[str, Any]]:
         """The scheduler-core checkpoint pieces shared by the contiguous
@@ -471,6 +506,7 @@ class ServeScheduler:
                 -1 if s.slot is None else s.slot, s.max_new, s.ran,
                 s.submitted_step,
                 -1 if s.finished_step is None else s.finished_step,
+                s.quantum_weight,
             ]
         runq = np.full((len(sids),), -1, np.int32)
         runq[:len(self._runq)] = list(self._runq)
@@ -499,13 +535,14 @@ class ServeScheduler:
         checkpoint arrays (the inverse of :meth:`_stream_state_arrays`)."""
         self.streams = {}
         for row in range(n):
-            plen, ntok, pos, code, slot, max_new, ran, sub, fin = (
+            plen, ntok, pos, code, slot, max_new, ran, sub, fin, qw = (
                 int(v) for v in state["meta"][row])
             self.streams[row] = DecodeStream(
                 sid=row, tokens=[int(t) for t in state["tokens"][row, :ntok]],
                 plen=plen, max_new=max_new, submitted_step=sub, pos=pos,
                 state=_CODE_STATE[code], slot=None if slot < 0 else slot,
-                ran=ran, finished_step=None if fin < 0 else fin)
+                ran=ran, finished_step=None if fin < 0 else fin,
+                quantum_weight=max(1, qw))
         self._runq = deque(int(s) for s in state["runq"] if s >= 0)
         self._slot_sid = [None if s < 0 else int(s)
                           for s in state["slot_sid"]]
@@ -839,6 +876,16 @@ class PagedServeScheduler(ServeScheduler):
                 self.prefix.acquire(s.sid, path[:covered // pt])
                 self.stats["prefix_hits"] += 1
                 self.stats["prefill_tokens_saved"] += covered
+            tail_node = tail_part = None
+            if self.prefix is not None and covered < target:
+                tail_node = self.prefix.match_tail(
+                    s.tokens[:target], covered, path[:covered // pt])
+                if tail_node is not None:
+                    try:
+                        tail_part = self.prefix.read_node_part(tail_node)
+                    except (KeyError, IOError):
+                        self.prefix._drop_subtree(tail_node)
+                        tail_node = None
             table.extend(self.pool.alloc(self.pool.pages_per_lane - len(table)))
         except CapacityError:
             for phys in table:
@@ -846,6 +893,15 @@ class PagedServeScheduler(ServeScheduler):
             if self.prefix is not None:
                 self.prefix.release_stream(s.sid)
             raise
+        if tail_node is not None and tail_part is not None:
+            # partial-page tail: copied into the stream's own fresh page
+            # (the rest of that page is stream-private suffix KV, so
+            # physical sharing is impossible — tails save compute only)
+            m = tail_node.end - covered
+            self.pool.write_token_range(table[covered // pt], tail_part, m)
+            self.prefix.acquire(s.sid, [tail_node])
+            self.stats["prefill_tokens_saved"] += m
+            covered = tail_node.end
         self._paged_prefill(table, s.tokens, covered, target)
         if self.prefix is not None and target > 0:
             upto = (target // pt) * pt
@@ -861,6 +917,11 @@ class PagedServeScheduler(ServeScheduler):
                     if self.pool.lookup_digest(node.digest) is None:
                         self.pool.bind_digest(
                             node.digest, table[node.end // pt - 1])
+            if target > upto:
+                self.prefix.register_tail(
+                    s.tokens[:target], target, None, sid=s.sid,
+                    payload_fn=lambda end: self.pool.read_token_range(
+                        table[upto // pt], end - upto))
         s.pos = max(target, 0)
         return table
 
@@ -964,7 +1025,8 @@ class PagedServeScheduler(ServeScheduler):
             if not self._runq:
                 return
             sid = self._slot_sid[slot]
-            if sid is None or self.streams[sid].ran < self.quantum:
+            if (sid is None or self.streams[sid].ran
+                    < self.quantum * self.streams[sid].quantum_weight):
                 continue
             self._park(sid)
             nxt = self._runq.popleft()

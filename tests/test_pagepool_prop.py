@@ -49,9 +49,10 @@ def tiny_pool() -> DevicePagePool:
 class Harness:
     """Drives pool + pager and mirrors them in a pure-python shadow."""
 
-    def __init__(self):
+    def __init__(self, pager=None):
         self.pool = tiny_pool()
-        self.pager = KVPager.for_capacity(fast_bytes=10**8, page_bytes=256)
+        self.pager = pager if pager is not None else KVPager.for_capacity(
+            fast_bytes=10**8, page_bytes=256)
         self.tables = {}           # sid -> [phys] (pool-resident streams)
         self.spilled = set()       # sids parked out through the pager
         self.bound = {}            # digest -> phys (shadow of residency)
@@ -229,6 +230,136 @@ def test_pool_never_leaks_or_double_frees(ops):
     keeps refcounts exactly equal to live references and drains to an
     empty pool."""
     run_sequence(ops)
+
+
+class FleetHarness:
+    """Two Harnesses (fleet workers A and B) whose pager stacks share
+    one SharedTier domain.  On top of the per-pool invariants, the fleet
+    ops model cross-process prefix-page sharing: ``publish`` copies a
+    pool-resident digest page into the shared level, ``adopt`` lets the
+    *other* pool bind it from the shared bytes.  The shadow ``published``
+    map pins the round-trip: adopted page bytes must equal the bytes the
+    publisher shipped — across any interleaving with the single-pool ops
+    (including kills of either pool)."""
+
+    def __init__(self, root):
+        from repro.memory.shared import SharedTier
+
+        self.members = [
+            Harness(KVPager.for_fleet(SharedTier(root), fast_bytes=10**8,
+                                      page_bytes=256))
+            for _ in range(2)
+        ]
+        self.published = {}        # digest -> bytes as last published
+
+    def publish(self, who, pick):
+        h = self.members[who]
+        if not h.bound:
+            return
+        digest = sorted(h.bound)[pick % len(h.bound)]
+        blob = bytes(h.pool.page_blob(h.bound[digest]))
+        try:
+            h.pager.stack.put_at("shared", f"kv/prefix/{digest}.bin", blob)
+        except CapacityError:
+            return
+        self.published[digest] = blob
+
+    def adopt(self, who, pick):
+        h = self.members[who]
+        if not self.published:
+            return
+        digest = sorted(self.published)[pick % len(self.published)]
+        if digest in h.bound:
+            return
+        try:
+            data = h.pager.stack.get(f"kv/prefix/{digest}.bin")
+        except KeyError:
+            return
+        try:
+            phys = h.pool.alloc(1)[0]
+        except CapacityError:
+            return
+        h.pool.write_blob(phys, data)
+        h.pool.bind_digest(digest, phys)
+        h.pool.deref(phys)
+        h.bound[digest] = phys
+        # the round-trip claim: shared-tier transport is byte-exact
+        assert bytes(h.pool.page_blob(phys)) == self.published[digest]
+
+    def check(self):
+        for h in self.members:
+            h.check()
+
+    def drain(self):
+        for h in self.members:
+            h.drain()
+
+
+def run_fleet_sequence(ops, root):
+    """ops: (code, arg) with code 0-6 the single-pool ops (arg's low bit
+    picks the pool), 7 publish, 8 adopt."""
+    f = FleetHarness(root)
+    for code, arg in ops:
+        who = arg & 1
+        if code == 7:
+            f.publish(who, arg >> 1)
+        elif code == 8:
+            f.adopt(who, arg >> 1)
+        else:
+            h = f.members[who]
+            pick = arg >> 1
+            if code == 0:
+                h.admit(share_digest=DIGESTS[pick % len(DIGESTS)]
+                        if pick % 2 else None)
+            elif code == 1:
+                h.bind(DIGESTS[pick % len(DIGESTS)])
+            elif code == 2:
+                h.drop(DIGESTS[pick % len(DIGESTS)])
+            elif code == 3:
+                h.spill(pick)
+            elif code == 4:
+                h.resume(pick)
+            elif code == 5:
+                h.finish(pick)
+            elif code == 6:
+                h.kill()
+        f.check()
+    f.drain()
+
+
+def test_fleet_fixed_seed_random_sequences(tmp_path):
+    rng = np.random.default_rng(4321)
+    for i in range(25):
+        n = int(rng.integers(5, 30))
+        ops = [(int(rng.integers(0, 9)), int(rng.integers(0, 16)))
+               for _ in range(n)]
+        run_fleet_sequence(ops, tmp_path / f"dom{i}")
+
+
+def test_directed_publish_adopt_across_pools(tmp_path):
+    """By construction: A binds + publishes, B adopts + shares it into
+    streams, A drops and recycles the page, B's adopted copy survives;
+    then B kills and everything drains."""
+    ops = [(1, 0),             # A binds dA
+           (7, 0),             # A publishes dA
+           (8, 1),             # B adopts dA
+           (0, 3),             # B admits a stream sharing dA
+           (2, 0),             # A drops dA (B's copy must be unaffected)
+           (0, 2),             # A admits a plain stream over the page
+           (6, 1),             # B kill/restore round-trip
+           (5, 1), (2, 1)]     # B finishes the stream, drops dA
+    run_fleet_sequence(ops, tmp_path / "dom")
+
+
+@given(st.lists(st.tuples(st.integers(min_value=0, max_value=8),
+                          st.integers(min_value=0, max_value=15)),
+                min_size=1, max_size=30))
+@settings(max_examples=40, deadline=None)
+def test_fleet_pools_never_leak_or_corrupt(tmp_path_factory, ops):
+    """Hypothesis property: ANY interleaving of the two pools' ops plus
+    publish/adopt keeps both allocators exact and the shared-tier
+    round-trip byte-exact."""
+    run_fleet_sequence(ops, tmp_path_factory.mktemp("fleetdom"))
 
 
 def test_trash_page_is_never_allocatable():
