@@ -19,9 +19,12 @@ dimensionless rates:
   spec_acceptance_rate  dense: n-gram speculative acceptance
   quant_resident_ratio  quant: resident streams at equal device bytes
 
-A metric fails when ``fresh < (1 - max_drop) * baseline``.  Metrics the
-baseline does not carry yet are seeded (reported, never failed), so new
-bench sections can land without a flag day.
+A metric fails when ``fresh < (1 - max_drop) * baseline``.  Metrics may
+carry an optional direction: ``"lower"`` inverts the gate for
+latency-shaped numbers (fig13's stall seconds), failing when
+``fresh > (1 + max_drop) * baseline``.  Metrics the baseline does not
+carry yet are seeded (reported, never failed), so new bench sections can
+land without a flag day.
 
   PYTHONPATH=src python -m benchmarks.check_regression \
       --baseline /tmp/fig10_baseline.json \
@@ -36,7 +39,10 @@ import sys
 from pathlib import Path
 from typing import Optional
 
-# metric name -> (numerator path, denominator path or None for a rate)
+# metric name -> (numerator path, denominator path or None for a rate);
+# an optional 4th element is the direction: "higher" (default — a drop
+# below the floor fails) or "lower" (latency-shaped — a rise above the
+# ceiling fails)
 METRICS = [
     ("paged_vs_unpaged",
      "paged.tokens_per_s", "unpaged.tokens_per_s"),
@@ -62,6 +68,16 @@ METRICS_BY_BENCH = {
         # cross-worker sharing: fraction of worker B's prefill the
         # shared tier absorbed (deterministic at fixed prompt geometry)
         ("fleet_prefix_saved_frac", "shared_prefix.saved_fraction", None),
+    ],
+    "fig13_elastic_fleet": [
+        # elastic recovery latencies (seconds, lower is better): the
+        # surviving streams' p99 inter-token gap across the failure
+        # window, and the migrated streams' worst token gap across the
+        # kill -> re-admit -> resume path
+        ("elastic_survivor_p99_stall",
+         "elastic.p99_stall_survivors", None, "lower"),
+        ("elastic_recovery_stall",
+         "elastic.recovery_stall", None, "lower"),
     ],
 }
 
@@ -93,8 +109,10 @@ def _metric(doc: dict, num: str, den: Optional[str]) -> Optional[float]:
 def check(baseline: dict, fresh: dict, max_drop: float) -> int:
     failures = []
     metrics = METRICS_BY_BENCH.get(fresh.get("bench", ""), METRICS)
-    print(f"{'metric':24s} {'baseline':>10s} {'fresh':>10s} {'floor':>10s}")
-    for name, num, den in metrics:
+    print(f"{'metric':24s} {'baseline':>10s} {'fresh':>10s} {'limit':>10s}")
+    for entry in metrics:
+        name, num, den = entry[:3]
+        direction = entry[3] if len(entry) > 3 else "higher"
         base = _metric(baseline, num, den)
         new = _metric(fresh, num, den)
         if new is None:
@@ -107,13 +125,20 @@ def check(baseline: dict, fresh: dict, max_drop: float) -> int:
             print(f"{name:24s} {'-':>10s} {new:10.4f}   (seeded — "
                   "baseline lacks it)")
             continue
-        floor = (1.0 - max_drop) * base
-        status = "OK" if new >= floor else "FAIL"
-        print(f"{name:24s} {base:10.4f} {new:10.4f} {floor:10.4f}   {status}")
-        if new < floor:
+        if direction == "lower":
+            limit = (1.0 + max_drop) * base
+            bad = new > limit
+            cmp = ">"
+        else:
+            limit = (1.0 - max_drop) * base
+            bad = new < limit
+            cmp = "<"
+        status = "FAIL" if bad else "OK"
+        print(f"{name:24s} {base:10.4f} {new:10.4f} {limit:10.4f}   {status}")
+        if bad:
             failures.append(
-                f"{name}: {new:.4f} < floor {floor:.4f} "
-                f"(baseline {base:.4f}, max drop {max_drop:.0%})")
+                f"{name}: {new:.4f} {cmp} limit {limit:.4f} "
+                f"(baseline {base:.4f}, max drift {max_drop:.0%})")
     if failures:
         print("\nREGRESSION:", file=sys.stderr)
         for f in failures:

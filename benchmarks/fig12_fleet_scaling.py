@@ -42,21 +42,19 @@ from typing import Dict, List
 import numpy as np
 
 from benchmarks.common import bench_json, row
-from repro.serve.fleet import (
-    FleetFrontend,
-    TenantQuota,
-    WorkerHandle,
-    WorkerSpec,
-)
+from repro.serve import Serve, ServeConfig
+from repro.serve.fleet import TenantQuota, WorkerHandle
 
 ARCH = "phi3-mini-3.8b"
 PAGE_TOKENS = 4
 MAX_LEN = 32
 
+_CFG = ServeConfig(arch=ARCH, slots=2, max_len=MAX_LEN,
+                   page_tokens=PAGE_TOKENS, quantum=3)
 
-def _spec(root: Path) -> WorkerSpec:
-    return WorkerSpec(shared_root=str(root), arch=ARCH, slots=2,
-                      max_len=MAX_LEN, page_tokens=PAGE_TOKENS, quantum=3)
+
+def _spec(root: Path):
+    return _CFG.worker_spec(str(root))
 
 
 def _prompts(n: int, shared_len: int, rng, lo=3, hi=7) -> List[List[int]]:
@@ -146,7 +144,7 @@ def measure_fleet(tmp: Path, n_workers: int, n_requests: int,
     root = tmp / f"fleet{n_workers}"
     rng = np.random.default_rng(7)
     prompts = _prompts(n_requests, shared_len=9, rng=rng)
-    fe = FleetFrontend.launch([_spec(root) for _ in range(n_workers)])
+    fe = Serve.fleet(_CFG, workers=n_workers, shared_root=str(root))
     try:
         # warmup: one request per worker compiles prefill+decode and
         # publishes the shared prefix; excluded from the timed window
@@ -192,8 +190,8 @@ def measure_fleet(tmp: Path, n_workers: int, n_requests: int,
 def check_quota_isolation(tmp: Path, max_new: int) -> Dict:
     root = tmp / "quota"
     rng = np.random.default_rng(11)
-    fe = FleetFrontend.launch(
-        [_spec(root)],
+    fe = Serve.fleet(
+        _CFG, workers=1, shared_root=str(root),
         quotas={"noisy": TenantQuota(1), "quiet": TenantQuota(4)})
     try:
         noisy = [fe.submit(p, max_new=max_new, tenant="noisy")

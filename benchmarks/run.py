@@ -25,6 +25,7 @@ def modules():
         fig10_serve_throughput,
         fig11_prefix_reuse,
         fig12_fleet_scaling,
+        fig13_elastic_fleet,
         roofline,
     )
 
@@ -40,6 +41,7 @@ def modules():
         "fig10serve": fig10_serve_throughput,
         "fig11prefix": fig11_prefix_reuse,
         "fig12fleet": fig12_fleet_scaling,
+        "fig13elastic": fig13_elastic_fleet,
         "roofline": roofline,
     }
 

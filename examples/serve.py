@@ -1,5 +1,5 @@
 """Multi-request serving example: continuous batching + tiered KV paging
-+ shared-prefix page cache.
++ shared-prefix page cache, built through the unified serving API.
 
 Submits more decode streams than there are decode slots — all opening
 with the same "system prompt" — and lets the ServeScheduler round-robin
@@ -11,6 +11,10 @@ hit-rate promotion decide the tier), the full multi-stream state —
 dedup'd page pool and prefix trie included — is checkpointed through an
 SCR-style session mid-decode, the scheduler AND a node are killed, and
 a fresh scheduler restores everything and finishes byte-identically.
+
+All construction goes through ``ServeConfig`` + ``Serve.local`` /
+``Serve.fleet`` (repro/serve/api.py) — one declarative config instead
+of hand-wiring pager/prefix/scheduler kwargs.
 
   PYTHONPATH=src python examples/serve.py [--arch minicpm3-4b] [--steps 8]
 
@@ -27,16 +31,12 @@ import argparse
 import tempfile
 from pathlib import Path
 
-import jax
 import numpy as np
 
 from repro.api import ResilienceSession
 from repro.cluster.topology import VirtualCluster
-from repro.configs import get_config
 from repro.core.scr import Strategy
-from repro.io.serialization import serialize_state
-from repro.models.registry import get_model
-from repro.serve import KVPager, PrefixCache, ServeScheduler
+from repro.serve import Serve, ServeConfig
 
 
 def main():
@@ -56,70 +56,57 @@ def main():
         fleet_main(args)
         return
 
-    cfg = get_config(args.arch).reduced()
-    model = get_model(cfg)
-    params = model.init(jax.random.PRNGKey(0), cfg)
-    max_len = 32
-
-    # the KV stack: a fast tier that holds only a few lane caches, so
-    # oversubscription forces parked streams down the hierarchy
-    lane_bytes = serialize_state(
-        jax.device_get(model.init_cache(cfg, 1, max_len))).nbytes
-
-    def make_scheduler(session):
-        pager = KVPager.for_capacity(fast_bytes=(args.slots + 1) * lane_bytes,
-                                     page_bytes=8 * 1024)
-        # the prefix cache shares the pager's stack: prefix pages and
-        # parked page tables live under one placement policy
-        prefix = PrefixCache.for_model(pager.stack, cfg, model, max_len,
-                                       page_tokens=4)
-        return ServeScheduler(cfg, model, params, slots=args.slots,
-                              max_len=max_len, pager=pager, session=session,
-                              quantum=3, prefix=prefix)
+    # the whole stack from one config: contiguous lanes here (the paged
+    # pool path is the fleet's default), a fast tier that holds only a
+    # few lane caches so oversubscription forces parked streams down
+    # the hierarchy (fast_bytes=None auto-sizes to slots + 1 lanes)
+    cfg = ServeConfig(arch=args.arch, paged=False, slots=args.slots,
+                      max_len=32, page_tokens=4, quantum=3)
 
     rng = np.random.default_rng(7)
-    system_prompt = rng.integers(0, cfg.vocab_size, size=9).tolist()
+    srv = Serve.local(cfg)
+    vocab = srv.arch.vocab_size
+    system_prompt = rng.integers(0, vocab, size=9).tolist()
     prompts = [system_prompt
-               + rng.integers(0, cfg.vocab_size,
+               + rng.integers(0, vocab,
                               size=int(rng.integers(3, 8))).tolist()
                for _ in range(args.streams)]
 
     # reference: the same workload decoded with no interruption
-    ref_sched = make_scheduler(session=None)
     for p in prompts:
-        ref_sched.submit(p, max_new=args.max_new)
-    ref_sched.run()
-    ref = {sid: ref_sched.output(sid) for sid in ref_sched.streams}
-    ref_stats = dict(ref_sched.stats)
-    ref_sched.close()
+        srv.submit(p, max_new=args.max_new)
+    srv.run()
+    ref = {sid: srv.output(sid) for sid in srv.scheduler.streams}
+    ref_stats = dict(srv.stats)
+    srv.close()
 
     root = Path(tempfile.mkdtemp(prefix="deeper_serve_"))
     cluster = VirtualCluster(4, 4, root=root)
     with ResilienceSession.for_cluster(cluster, strategy=Strategy.XOR,
                                        procs_per_node=2) as session:
-        sched = make_scheduler(session)
+        srv = Serve.local(cfg, session=session)
         for p in prompts:
-            sched.submit(p, max_new=args.max_new)
-        sched.run(max_steps=args.steps)     # decode partway...
-        sched.save()                        # ...one transaction saves it all
-        parked = len(sched.pager.parked_sids())
-        sched.close()                       # the "kill": all state gone
+            srv.submit(p, max_new=args.max_new)
+        srv.run(max_steps=args.steps)       # decode partway...
+        srv.save()                          # ...one transaction saves it all
+        parked = len(srv.pager.parked_sids())
+        srv.close()                         # the "kill": all state gone
 
         # a node dies too; XOR reconstruction covers the lost fragments
         cluster.fail(1)
         cluster.recover(1)
         session.invalidate_node(1)
 
-        sched2 = make_scheduler(session)    # fresh process stand-in
-        sched2.restore()                    # stream set comes from the ckpt
-        sched2.run()
-        out = {sid: sched2.output(sid) for sid in sched2.streams}
-        sched2.close()
+        srv2 = Serve.local(cfg, session=session)   # fresh process stand-in
+        srv2.restore()                      # stream set comes from the ckpt
+        srv2.run()
+        out = {sid: srv2.output(sid) for sid in srv2.scheduler.streams}
+        srv2.close()
 
     assert out == ref, "post-restore decode diverged"
     total = sum(len(v) for v in out.values())
     print(f"decoded {total} tokens across {args.streams} streams on "
-          f"{cfg.name} ({args.slots} slots, quantum 3): "
+          f"{srv2.arch.name} ({args.slots} slots, quantum 3): "
           f"{ref_stats['parked']} parks, {ref_stats['resumed']} resumes, "
           f"max {ref_stats['max_resident']} resident")
     print(f"shared system prompt: {ref_stats['prefix_hits']} prefix hits, "
@@ -133,15 +120,12 @@ def main():
 def fleet_main(args):
     """--workers N: the same shared-prompt workload through the fleet
     (serve/fleet): spawned workers over one SharedTier domain, admission
-    front-end with tenant quotas, cross-process prefix reuse."""
-    from repro.serve.fleet import FleetFrontend, TenantQuota, WorkerSpec
+    front-end with tenant quotas, cross-process prefix reuse — built by
+    ``Serve.fleet`` from the same config shape as the local path."""
+    from repro.serve.fleet import TenantQuota
 
-    root = Path(tempfile.mkdtemp(prefix="deeper_fleet_"))
-    page_tokens = 4
-    specs = [WorkerSpec(shared_root=str(root), arch=args.arch,
-                        slots=args.slots, max_len=32,
-                        page_tokens=page_tokens, quantum=3)
-             for _ in range(args.workers)]
+    cfg = ServeConfig(arch=args.arch, slots=args.slots, max_len=32,
+                      page_tokens=4, quantum=3)
     rng = np.random.default_rng(7)
     # vocab size differs per arch; workers build the config themselves,
     # so sample from a safe floor every arch clears
@@ -150,8 +134,8 @@ def fleet_main(args):
                + rng.integers(0, 1000, size=int(rng.integers(3, 8))).tolist()
                for _ in range(args.streams)]
 
-    with FleetFrontend.launch(
-            specs, quotas={"bulk": TenantQuota(2)}) as fe:
+    with Serve.fleet(cfg, workers=args.workers,
+                     quotas={"bulk": TenantQuota(2)}) as fe:
         rids = [fe.submit(p, max_new=args.max_new,
                           tenant="bulk" if i % 2 else "latency",
                           prio="batch" if i % 2 else "interactive")

@@ -104,21 +104,29 @@ class ResilienceSession:
         n_booster: int = 0,
         strategy: Strategy = Strategy.BUDDY,
         policy: Optional[CheckpointPolicy] = None,
+        domain: str = "scr",
         **scr_kw,
     ) -> "ResilienceSession":
         """A session whose whole storage hierarchy lives under a serving
-        fleet's shared domain root (``<shared_root>/scr``).  Checkpoints
-        land on the fleet's shared filesystem, so a *fresh process*
-        opening a session over the same root discovers and restores them
-        (``available_steps`` scans committed descriptors from disk) —
-        the fleet-worker analogue of restarting onto BeeOND-cached
-        checkpoints instead of re-pulling from global storage."""
+        fleet's shared domain root (``<shared_root>/<domain>``).
+        Checkpoints land on the fleet's shared filesystem, so a *fresh
+        process* opening a session over the same root discovers and
+        restores them (``available_steps`` scans committed descriptors
+        from disk) — the fleet-worker analogue of restarting onto
+        BeeOND-cached checkpoints instead of re-pulling from global
+        storage.
+
+        ``domain`` namespaces sessions within one shared root: each
+        fleet worker checkpoints its live stream set under its own
+        domain (``scr-<worker>``), so the frontend can open exactly the
+        dead worker's checkpoint line during recovery, and two workers'
+        epochs never contend on one descriptor sequence."""
         from pathlib import Path
 
         from repro.cluster.topology import VirtualCluster
 
         cluster = VirtualCluster(n_cluster=n_cluster, n_booster=n_booster,
-                                 root=Path(shared_root) / "scr")
+                                 root=Path(shared_root) / domain)
         return cls.for_cluster(cluster, strategy=strategy, policy=policy,
                                **scr_kw)
 

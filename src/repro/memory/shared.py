@@ -31,12 +31,16 @@ Correctness under concurrent access rests on two mechanisms:
   published, deleting is a no-op on the shared copy).
 
 A crashed publisher leaves its pid registered; that pins its objects
-(garbage, not corruption) until the domain is recreated — the same
-recovery granularity as a BeeOND cache domain, and the price of not
-running a daemon.  Consumers must tolerate objects vanishing between
-``exists`` and ``get`` (a ``get`` of an unlinked object raises
-``KeyError``): every stack consumer already does, because a plain
-eviction races identically.
+(garbage, not corruption).  :meth:`SharedTier.gc` reclaims them without
+a daemon: any process may sweep the manifest under the domain lock and
+unlink objects whose publishers have *all* exited and whose manifest
+records are older than a TTL — the age guard keeps a freshly published
+object of a just-crashed worker visible long enough for the frontend's
+recovery path to restore from it before the space is reclaimed.
+Consumers must tolerate objects vanishing between ``exists`` and
+``get`` (a ``get`` of an unlinked object raises ``KeyError``): every
+stack consumer already does, because a plain eviction races
+identically.
 """
 
 from __future__ import annotations
@@ -101,7 +105,8 @@ class SharedTier:
     Layout under ``root``::
 
         objs/<key>          committed payloads (rename-commit)
-        manifest.json       {key: {"size": int, "pubs": [pid, ...]}}
+        manifest.json       {key: {"size": int, "pubs": [pid, ...],
+                                   "t": last-publish unix time}}
         .lock               advisory lock file for manifest updates
 
     Any number of processes may construct a ``SharedTier`` over the same
@@ -123,6 +128,9 @@ class SharedTier:
         self._lock_path = self.root / ".lock"
         self._objs.mkdir(parents=True, exist_ok=True)
         self._serial = 0
+        self.gc_stats = {"gc_runs": 0, "gc_reclaimed": 0,
+                         "gc_reclaimed_bytes": 0, "gc_pinned_live": 0,
+                         "gc_pinned_young": 0}
 
     # -- paths ------------------------------------------------------------ #
 
@@ -173,7 +181,8 @@ class SharedTier:
             pubs = list(entry["pubs"]) if entry else []
             if os.getpid() not in pubs:
                 pubs.append(os.getpid())
-            manifest[key] = {"size": len(data), "pubs": pubs}
+            manifest[key] = {"size": len(data), "pubs": pubs,
+                             "t": time.time()}
             path.parent.mkdir(parents=True, exist_ok=True)
             tmp = path.with_name(
                 f"{path.name}.{os.getpid()}.{self._serial}.tmp")
@@ -214,7 +223,7 @@ class SharedTier:
                 return
             pubs = [p for p in entry["pubs"] if p != os.getpid()]
             if pubs:
-                manifest[key] = {"size": entry["size"], "pubs": pubs}
+                manifest[key] = dict(entry, pubs=pubs)
             else:
                 manifest.pop(key, None)
                 try:
@@ -222,6 +231,73 @@ class SharedTier:
                 except FileNotFoundError:
                     pass
             self._write_manifest(manifest)
+
+    # -- garbage collection ------------------------------------------------ #
+
+    @staticmethod
+    def _pid_alive(pid: int) -> bool:
+        try:
+            os.kill(pid, 0)
+        except ProcessLookupError:
+            return False
+        except PermissionError:   # pragma: no cover - alive, other user
+            return True
+        except (OverflowError, ValueError):
+            return False
+        return True
+
+    def gc(self, ttl_s: float = 0.0, pid_alive=None,
+           now: Optional[float] = None) -> Dict[str, int]:
+        """Reclaim objects stranded by dead publishers.
+
+        An object is collected iff **every** registered publisher pid has
+        exited *and* its manifest record is older than ``ttl_s`` (records
+        written before the timestamp upgrade count as infinitely old).
+        The TTL is the consistency window: a worker that just crashed may
+        have streams mid-recovery on a survivor reading its last epoch
+        checkpoint from this domain, so callers pass a TTL comfortably
+        above the fleet's checkpoint cadence + recovery time.  Runs
+        entirely under the domain lock; any fleet member (typically the
+        frontend, after a recovery) may call it.
+
+        ``pid_alive`` injects a liveness oracle for tests; the default
+        probes with ``os.kill(pid, 0)``.  Returns the per-call summary
+        and accumulates :attr:`gc_stats`.
+        """
+        alive = pid_alive if pid_alive is not None else self._pid_alive
+        t_now = time.time() if now is None else float(now)
+        reclaimed = reclaimed_bytes = pinned_live = pinned_young = 0
+        with _DomainLock(self._lock_path):
+            manifest = self._read_manifest()
+            live_cache: Dict[int, bool] = {}
+            for key in list(manifest):
+                entry = manifest[key]
+                pubs = entry.get("pubs", [])
+                if any(live_cache.setdefault(p, bool(alive(p)))
+                       for p in pubs):
+                    pinned_live += 1
+                    continue
+                age = t_now - float(entry.get("t", float("-inf")))
+                if age <= ttl_s:
+                    pinned_young += 1
+                    continue
+                manifest.pop(key)
+                try:
+                    self._path(key).unlink()
+                except (FileNotFoundError, KeyError):
+                    pass
+                reclaimed += 1
+                reclaimed_bytes += int(entry.get("size", 0))
+            if reclaimed:
+                self._write_manifest(manifest)
+        out = {"gc_reclaimed": reclaimed,
+               "gc_reclaimed_bytes": reclaimed_bytes,
+               "gc_pinned_live": pinned_live,
+               "gc_pinned_young": pinned_young}
+        self.gc_stats["gc_runs"] += 1
+        for k, v in out.items():
+            self.gc_stats[k] += v
+        return out
 
     def keys(self) -> Iterator[str]:
         found: List[str] = []

@@ -1,3 +1,4 @@
+from repro.serve.api import LocalServe, Serve, ServeConfig
 from repro.serve.engine import ServeEngine
 from repro.serve.kvpage import KVPager, kv_page_key, page_digest
 from repro.serve.prefix import LaneLayout, PrefixCache, prefix_page_key
@@ -11,6 +12,9 @@ from repro.serve.scheduler import (
 
 __all__ = [
     "DecodeStream",
+    "LocalServe",
+    "Serve",
+    "ServeConfig",
     "KVPager",
     "LaneLayout",
     "PrefixCache",

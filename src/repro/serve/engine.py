@@ -10,10 +10,16 @@ preemption — with the same checkpoint semantics (the full serving state
 rides one :class:`~repro.api.session.ResilienceSession` transaction; a
 killed decode resumes byte-identically, demonstrated in
 examples/serve.py).
+
+Deprecated as a *construction* path: new code should declare a
+:class:`~repro.serve.api.ServeConfig` and call ``Serve.local`` /
+``Serve.fleet`` (one config, every wiring).  Constructing ``ServeEngine``
+directly keeps working and warns once per process.
 """
 
 from __future__ import annotations
 
+import warnings
 from collections import deque
 from typing import Any, Deque, Dict, List, Optional
 
@@ -27,6 +33,8 @@ from repro.core.scr import SCRManager
 from repro.models.registry import ModelApi
 from repro.serve.scheduler import (PagedServeScheduler, ServeScheduler,
                                    StreamState)
+
+_WARNED_DEPRECATED = False
 
 
 class ServeEngine:
@@ -52,6 +60,14 @@ class ServeEngine:
         ``"int8"`` additionally holds pool-resident KV as int8 +
         per-channel scales (~2-4x more resident streams at equal HBM,
         tolerance-gated instead of bit-exact)."""
+        global _WARNED_DEPRECATED
+        if not _WARNED_DEPRECATED:
+            _WARNED_DEPRECATED = True
+            warnings.warn(
+                "constructing ServeEngine directly is deprecated; build a "
+                "repro.serve.api.ServeConfig and use Serve.local(cfg) "
+                "(or Serve.fleet for multi-process serving)",
+                DeprecationWarning, stacklevel=2)
         self.cfg = cfg
         self.model = model
         self.params = params

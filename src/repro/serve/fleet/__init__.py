@@ -12,21 +12,26 @@ scales out — through a *shared level*, not shared memory:
   digests are process-independent, so a record plus the payload in the
   shared tier is enough for any peer to adopt the node;
 * :mod:`worker` runs one ``PagedServeScheduler`` per process behind a
-  pipe protocol (submit / tokens / done / stats / drain / stop),
-  designed so a ``drain`` returns re-admissible stream descriptors (the
-  elastic-resilience follow-up re-admits them on survivors);
+  pipe protocol (submit / hb / tokens / done / stats / drain / stop);
+  ``drain`` returns re-admissible stream descriptors, and with
+  ``ckpt_every`` > 0 the worker periodically epoch-checkpoints the same
+  descriptors (plus its live KV pages) through the shared tier;
 * :class:`FleetFrontend` (frontend.py) is the traffic-facing admission
   router: per-tenant quotas, priority classes mapped onto the
   scheduler's weighted quanta, least-loaded routing, incremental token
-  streaming back.
+  streaming back — and the fleet's failure detector: a dead worker's
+  streams are re-admitted on survivors with their recovered token
+  prefixes replayed, token-identical to an uninterrupted run.
 
-Measured by benchmarks/fig12_fleet_scaling.py.
+Measured by benchmarks/fig12_fleet_scaling.py (scale-out) and
+benchmarks/fig13_elastic_fleet.py (kill-one-of-N recovery).
 """
 
 from repro.memory.shared import SharedTier
 from repro.serve.fleet.board import PrefixBoard
 from repro.serve.fleet.frontend import FleetFrontend, PriorityClass, TenantQuota
-from repro.serve.fleet.worker import WorkerHandle, WorkerSpec, worker_main
+from repro.serve.fleet.worker import (WorkerHandle, WorkerSpec,
+                                      load_epoch, worker_main)
 
 __all__ = [
     "FleetFrontend",
@@ -36,5 +41,6 @@ __all__ = [
     "TenantQuota",
     "WorkerHandle",
     "WorkerSpec",
+    "load_epoch",
     "worker_main",
 ]

@@ -12,7 +12,31 @@ incrementally as workers emit them.
 The front-end is single-threaded and cooperative: callers drive it by
 calling :meth:`pump` (or :meth:`wait`, which pumps).  Every pump drains
 worker pipes first — so completions free quota before admission runs —
-then admits from the backlogs in arrival order per tenant.
+then runs the failure detector, then admits from the backlogs in
+arrival order per tenant.
+
+**Failure detection** follows the detection / containment / recovery
+decomposition of the HPC resilience pattern language: heartbeat
+staleness (``hb_timeout_s`` without any pipe traffic) is the cheap
+*trigger*, process liveness is the authoritative *classification* — a
+slow-but-alive worker goes ``suspect`` and keeps its streams (its
+eventual output is still correct), only an actually-exited process is
+declared ``dead``.  This conjunction makes false positives structurally
+impossible: no amount of scheduling jitter can kill a live worker's
+streams.
+
+**Recovery** re-admits a dead worker's unfinished streams on the
+survivors: the frontend loads the worker's last epoch checkpoint
+(:func:`~repro.serve.fleet.worker.load_epoch`), takes for each stream
+the longer of the token prefix it streamed itself and the checkpointed
+prefix — both are prefixes of the *same* deterministic greedy
+continuation, so "longer" is strictly more recovered work, never a
+conflict — and re-dispatches with ``prompt' = prompt + emitted`` and
+``max_new' = remaining``.  The replayed prefix is recorded per request
+and merged in front of the surviving worker's output, so callers see
+token streams identical to an uninterrupted run.  Survivors adopt the
+dead worker's epoch-published KV pages from the board, turning most of
+the replayed-prefix prefill into page reuse (park-on-A / resume-on-B).
 
 Admission latency (submit -> dispatch-to-worker) is recorded per
 tenant; :meth:`admission_latency_p99` is the metric the fig12 benchmark
@@ -22,6 +46,7 @@ tenant is throttled.
 
 from __future__ import annotations
 
+import dataclasses
 import time
 from collections import deque
 from dataclasses import dataclass, field
@@ -65,6 +90,10 @@ class _Request:
     worker: Optional[int] = None
     tokens: List[int] = field(default_factory=list)
     done: bool = False
+    # tokens recovered (streamed and/or checkpointed) before a
+    # migration: replayed into the resumed stream as prompt suffix and
+    # merged in front of the surviving worker's output
+    replayed: List[int] = field(default_factory=list)
 
     @property
     def cost(self) -> int:
@@ -73,7 +102,8 @@ class _Request:
 
 
 class FleetFrontend:
-    """Admission + routing over ``workers`` (WorkerHandle list)."""
+    """Admission + routing + failure recovery over ``workers``
+    (WorkerHandle list)."""
 
     def __init__(
         self,
@@ -81,6 +111,7 @@ class FleetFrontend:
         quotas: Optional[Dict[str, TenantQuota]] = None,
         classes: Optional[Dict[str, PriorityClass]] = None,
         default_quota: TenantQuota = TenantQuota(),
+        hb_timeout_s: float = 2.0,
     ):
         if not workers:
             raise ValueError("need at least one worker")
@@ -88,16 +119,18 @@ class FleetFrontend:
         self.quotas = dict(quotas or {})
         self.classes = dict(classes or DEFAULT_CLASSES)
         self.default_quota = default_quota
+        self.hb_timeout_s = float(hb_timeout_s)
         self._requests: Dict[int, _Request] = {}
         self._backlog: Dict[str, Deque[int]] = {}
         self._inflight: Dict[str, int] = {}
         self._load = [0] * len(self.workers)    # outstanding cost / worker
-        self._rid_worker: Dict[int, int] = {}
+        self._dead: set = set()
         self._lat: Dict[str, List[float]] = {}
         self._next_rid = 0
         self.stats: Dict[str, int] = {
             "submitted": 0, "dispatched": 0, "completed": 0,
-            "throttle_events": 0,
+            "throttle_events": 0, "workers_failed": 0,
+            "streams_migrated": 0, "streams_completed_on_recovery": 0,
         }
 
     # -- lifecycle --------------------------------------------------------- #
@@ -106,14 +139,19 @@ class FleetFrontend:
     def launch(cls, specs: Sequence[WorkerSpec],
                ready_timeout: float = 600.0, **kw) -> "FleetFrontend":
         """Spawn a worker per spec (in parallel — jit warm-up dominates)
-        and wait until every one is ready."""
+        and wait until every one is ready.  Unnamed specs get the fleet
+        identity ``w<i>``, which namespaces their epoch checkpoints."""
+        specs = [s if s.name else dataclasses.replace(s, name=f"w{i}")
+                 for i, s in enumerate(specs)]
         workers = [WorkerHandle.launch(s) for s in specs]
         for w in workers:
             w.wait_ready(ready_timeout)
         return cls(workers, **kw)
 
     def stop(self) -> None:
-        for w in self.workers:
+        for wi, w in enumerate(self.workers):
+            if wi in self._dead:
+                continue
             w.stop()
 
     def __enter__(self) -> "FleetFrontend":
@@ -144,12 +182,16 @@ class FleetFrontend:
     # -- the pump ----------------------------------------------------------- #
 
     def pump(self) -> None:
-        """One cooperative cycle: collect worker output, then admit."""
+        """One cooperative cycle: collect worker output, run the
+        failure detector, then admit."""
         self._collect()
+        self._detect_failures()
         self._admit()
 
     def _collect(self) -> None:
         for wi, w in enumerate(self.workers):
+            if wi in self._dead:
+                continue
             for msg in w.messages():
                 op = msg.get("op")
                 req = self._requests.get(msg.get("rid"))
@@ -158,7 +200,9 @@ class FleetFrontend:
                 if op == "tokens":
                     req.tokens.extend(msg["tokens"])
                 elif op == "done":
-                    req.tokens = list(msg["tokens"])    # authoritative
+                    # the worker reports only what it decoded itself; a
+                    # migrated stream's replayed prefix goes in front
+                    req.tokens = req.replayed + list(msg["tokens"])
                     if not req.done:
                         req.done = True
                         self.stats["completed"] += 1
@@ -166,6 +210,85 @@ class FleetFrontend:
                             self._inflight.get(req.tenant, 1) - 1)
                         if req.worker is not None:
                             self._load[req.worker] -= req.cost
+
+    # -- failure detection --------------------------------------------------- #
+
+    def worker_state(self, wi: int) -> str:
+        """``"ok"`` / ``"suspect"`` (heartbeat stale but process alive)
+        / ``"dead"`` (classified and recovered from)."""
+        if wi in self._dead:
+            return "dead"
+        w = self.workers[wi]
+        age_fn = getattr(w, "heartbeat_age", None)
+        if age_fn is None or age_fn() <= self.hb_timeout_s:
+            return "ok"
+        return "suspect"
+
+    def _detect_failures(self) -> None:
+        for wi, w in enumerate(self.workers):
+            if wi in self._dead:
+                continue
+            # heartbeat staleness is only the trigger: probing liveness
+            # costs a syscall, so healthy-looking workers are never
+            # probed.  Handles without the liveness surface (test
+            # stubs) are trusted alive.
+            age_fn = getattr(w, "heartbeat_age", None)
+            alive_fn = getattr(w, "alive", None)
+            if age_fn is None or alive_fn is None:
+                continue
+            if age_fn() <= self.hb_timeout_s:
+                continue
+            if alive_fn():
+                continue        # suspect: slow, not dead — no recovery
+            self._recover_worker(wi)
+
+    def _recover_worker(self, wi: int) -> None:
+        """Containment + recovery for one dead worker: mark it dead (no
+        further routing/collection), restore its last epoch checkpoint,
+        and re-admit every unfinished stream it held with the recovered
+        token prefix replayed."""
+        w = self.workers[wi]
+        self._dead.add(wi)
+        self._load[wi] = 0
+        self.stats["workers_failed"] += 1
+        epochs: Dict[Any, Dict[str, Any]] = {}
+        spec = getattr(w, "spec", None)
+        if spec is not None and getattr(spec, "ckpt_every", 0):
+            from repro.serve.fleet.worker import load_epoch
+            epochs = load_epoch(spec.shared_root, spec.name)
+        victims = sorted(
+            (r for r in self._requests.values()
+             if r.worker == wi and not r.done),
+            key=lambda r: r.rid)
+        for req in victims:
+            # frontend-streamed tokens and the epoch checkpoint are both
+            # prefixes of the same greedy continuation: take the longer
+            emitted = list(req.tokens)
+            ep = epochs.get(req.rid)
+            if ep and len(ep["emitted"]) > len(emitted):
+                emitted = [int(t) for t in ep["emitted"]]
+            emitted = emitted[:req.max_new]
+            req.replayed = emitted
+            req.tokens = list(emitted)
+            req.worker = None
+            self._inflight[req.tenant] = self._inflight.get(req.tenant, 1) - 1
+            self.stats["streams_migrated"] += 1
+            if len(emitted) >= req.max_new:
+                # budget already spent before the failure: complete
+                # directly from the recovered prefix
+                req.done = True
+                self.stats["completed"] += 1
+                self.stats["streams_completed_on_recovery"] += 1
+            else:
+                # front of its tenant's backlog: it was admitted once
+                # already, so it outranks never-dispatched arrivals
+                self._backlog.setdefault(req.tenant, deque()).appendleft(
+                    req.rid)
+
+    def live_workers(self) -> List[int]:
+        return [i for i in range(len(self.workers)) if i not in self._dead]
+
+    # -- admission ----------------------------------------------------------- #
 
     def _quota(self, tenant: str) -> TenantQuota:
         return self.quotas.get(tenant, self.default_quota)
@@ -185,9 +308,17 @@ class FleetFrontend:
 
     def _dispatch(self, rid: int) -> None:
         req = self._requests[rid]
-        wi = min(range(len(self.workers)), key=lambda i: self._load[i])
-        self.workers[wi].submit(rid, req.prompt, req.max_new,
-                                weight=req.weight)
+        live = self.live_workers()
+        if not live:
+            raise RuntimeError("no live workers left in the fleet")
+        wi = min(live, key=lambda i: self._load[i])
+        # a migrated request resumes where it left off: the recovered
+        # prefix rides as prompt suffix, the budget shrinks to match —
+        # greedy decode over the same token history continues the very
+        # same continuation on the new worker
+        self.workers[wi].submit(
+            rid, req.prompt + req.replayed,
+            req.max_new - len(req.replayed), weight=req.weight)
         req.worker = wi
         req.dispatched_s = time.monotonic()
         self._load[wi] += req.cost
@@ -218,6 +349,36 @@ class FleetFrontend:
             raise ValueError(f"request {rid} not finished")
         return list(req.tokens)
 
+    def progress(self, rid: int) -> List[int]:
+        """Tokens streamed back so far (replayed prefix included), done
+        or not — the incremental view fig13's stall probe samples."""
+        return list(self._requests[rid].tokens)
+
+    def assignment(self, rid: int) -> Optional[int]:
+        """Worker index currently holding ``rid`` (``None`` while it
+        waits in a backlog — including between a failure and its
+        re-dispatch)."""
+        return self._requests[rid].worker
+
+    # -- maintenance --------------------------------------------------------- #
+
+    def gc_shared(self, ttl_s: float = 60.0) -> Dict[str, int]:
+        """Sweep the fleet's shared KV domain for objects stranded by
+        dead publishers (``SharedTier.gc``).  Explicit, not automatic:
+        call it *after* recovered streams have re-admitted, with a TTL
+        comfortably above the checkpoint cadence, so a just-dead
+        worker's epoch pages survive long enough to be adopted."""
+        for w in self.workers:
+            spec = getattr(w, "spec", None)
+            if spec is not None:
+                from pathlib import Path
+
+                from repro.memory.shared import SharedTier
+                tier = SharedTier(Path(spec.shared_root) / "domain",
+                                  capacity_bytes=spec.shared_capacity)
+                return tier.gc(ttl_s=ttl_s)
+        return {}
+
     # -- metrics ------------------------------------------------------------ #
 
     def admission_latency_p99(self, tenant: str) -> float:
@@ -229,4 +390,5 @@ class FleetFrontend:
         return lat[min(len(lat) - 1, int(0.99 * len(lat)))]
 
     def worker_stats(self) -> List[Dict[str, Any]]:
-        return [w.stats() for w in self.workers]
+        return [w.stats() for wi, w in enumerate(self.workers)
+                if wi not in self._dead]

@@ -18,6 +18,7 @@ Protocol (dicts over a ``multiprocessing.Pipe``), parent -> worker::
 worker -> parent::
 
     {"op": "ready", "pid"}                  once, after jit warm-up
+    {"op": "hb", "pid", "step"}             liveness heartbeat (periodic)
     {"op": "tokens", "rid", "tokens"}       incremental decode output
     {"op": "done", "rid", "tokens"}         full output, stream finished
     {"op": "stats", "scheduler", "tier", "prefix", "shared"}
@@ -28,6 +29,19 @@ unfinished stream, the descriptor a *surviving* worker needs to
 re-admit it (prompt + tokens emitted so far + remaining budget +
 weight).  The front-end does not use it on the happy path; it is the
 designed seam for moving load off a worker being retired.
+
+The *unplanned* counterpart is the periodic **epoch checkpoint**
+(``WorkerSpec.ckpt_every`` scheduler steps): the worker registers its
+live streams' complete KV pages into the prefix trie
+(``export_live_pages``), publishes them through the shared tier like
+any prefix node, then saves the same drain-shaped descriptors through
+``ResilienceSession.for_shared_tier`` under its own checkpoint domain
+(``scr-<name>``), and marks the epoch with a ``kind="epoch"`` board
+record.  If the worker dies, the frontend's failure detector (heartbeat
+staleness triggering a process-liveness probe) loads the last epoch via
+:func:`load_epoch` and re-admits the streams on survivors — which adopt
+the published pages from the board, so the replayed prefix's prefill is
+mostly page reuse rather than recompute.
 
 Prefix sharing is push/pull: after every scheduler step the worker
 diffs ``PrefixCache.export_records()`` against what it has already
@@ -55,7 +69,18 @@ class WorkerSpec:
     """Everything a spawned worker needs to build its serving stack.
 
     Must stay picklable (crosses the spawn boundary).  ``seed`` is the
-    params seed — all workers of one fleet must share it."""
+    params seed — all workers of one fleet must share it (token-identity
+    across migration additionally rests on it: a survivor can only
+    continue a dead peer's stream because both run the same params and
+    greedy decode is a pure function of token history).
+
+    ``name`` is the worker's fleet-unique identity (``FleetFrontend``
+    assigns ``w<i>`` when empty); it namespaces the worker's epoch
+    checkpoint domain.  ``ckpt_every`` > 0 enables the periodic epoch
+    checkpoint (in scheduler steps — the recovery-stall bound is
+    proportional to it); ``hb_interval_s`` paces heartbeats;
+    ``adopt_batch`` > 0 bounds how many board records one admission
+    adopts (the large-fleet throttle)."""
 
     shared_root: str
     arch: str = "phi3-mini-3.8b"
@@ -70,6 +95,15 @@ class WorkerSpec:
     kv_codec: Optional[str] = None
     shared_capacity: int = 1 << 30
     seed: int = 0
+    name: str = ""
+    ckpt_every: int = 0
+    hb_interval_s: float = 0.25
+    adopt_batch: int = 0
+
+
+def epoch_domain(worker_name: str) -> str:
+    """The per-worker checkpoint namespace under the shared root."""
+    return f"scr-{worker_name or 'w'}"
 
 
 def _build_scheduler(spec: WorkerSpec):
@@ -133,20 +167,114 @@ def publish_nodes(sched, board, published: set) -> int:
     return len(fresh)
 
 
+EPOCH_META_COLS = 4     # plen, ntok, max_new_total, weight
+
+
+def save_epoch(sess, sched, rid_of: Dict[int, Any], step: int) -> int:
+    """Checkpoint the live stream set as fixed-shape arrays through the
+    worker's epoch session.  The state is exactly the drain seam's
+    descriptors — full token history + cursors — packed as ``tokens``
+    (n, cap) / ``meta`` (n, EPOCH_META_COLS) int32 with the
+    variable-size facts (rids, shapes) in the descriptor's JSON meta,
+    so the frontend can restore with zero prior knowledge of the
+    stream set.  Returns the number of streams checkpointed."""
+    import os
+
+    import numpy as np
+
+    descs = [d for d in sched.live_descriptors()
+             if rid_of.get(d["sid"]) is not None]
+    if not descs:
+        return 0
+    cap = max(len(d["tokens"]) for d in descs)
+    tokens = np.zeros((len(descs), cap), np.int32)
+    meta = np.zeros((len(descs), EPOCH_META_COLS), np.int32)
+    rids = []
+    for i, d in enumerate(descs):
+        tokens[i, :len(d["tokens"])] = d["tokens"]
+        total = d["max_new"] + (len(d["tokens"]) - d["plen"])
+        meta[i] = (d["plen"], len(d["tokens"]), total, d["weight"])
+        rids.append(rid_of[d["sid"]])
+    sess.save(step, {"tokens": tokens, "meta": meta},
+              meta={"elastic": {"rids": rids, "n": len(descs),
+                                "cap": int(cap), "pid": os.getpid(),
+                                "step": int(step)}})
+    return len(descs)
+
+
+def load_epoch(shared_root, worker_name: str) -> Dict[Any, Dict[str, Any]]:
+    """The recovery half of :func:`save_epoch`: open the dead worker's
+    checkpoint domain from *this* process and return its last epoch as
+    ``rid -> {"prompt", "emitted", "max_new_total", "weight", "step"}``.
+    Best-effort by design — a worker that died before its first epoch
+    (or was launched with ``ckpt_every=0``) yields ``{}``, and the
+    caller falls back to the token prefixes it streamed itself."""
+    import numpy as np
+
+    from repro.api.session import ResilienceSession
+
+    try:
+        sess = ResilienceSession.for_shared_tier(
+            shared_root, domain=epoch_domain(worker_name))
+    except Exception:
+        return {}
+    try:
+        steps = sorted(sess.available_steps())
+        if not steps:
+            return {}
+        step = steps[-1]
+        em = sess.checkpoint_meta(step).get("elastic")
+        if not em:
+            return {}
+        like = {"tokens": np.zeros((em["n"], em["cap"]), np.int32),
+                "meta": np.zeros((em["n"], EPOCH_META_COLS), np.int32)}
+        state, _ = sess.restore_latest(like, step=step)
+        out: Dict[Any, Dict[str, Any]] = {}
+        for i, rid in enumerate(em["rids"]):
+            plen, ntok, total, weight = (int(x) for x in state["meta"][i])
+            toks = [int(t) for t in state["tokens"][i, :ntok]]
+            out[rid] = {"prompt": toks[:plen], "emitted": toks[plen:],
+                        "max_new_total": total, "weight": weight,
+                        "step": int(em.get("step", step))}
+        return out
+    except Exception:
+        return {}
+    finally:
+        sess.close()
+
+
 def worker_main(conn, spec: WorkerSpec) -> None:
     """Entry point of a spawned worker process."""
-    from repro.serve.fleet.board import PrefixBoard
+    import os
+    import time
+
+    from repro.serve.fleet.board import PrefixBoard, record_kind
 
     sched, pager, prefix, shared = _build_scheduler(spec)
     board = PrefixBoard(Path(spec.shared_root))
     published: set = set()
     rid_of: Dict[int, Any] = {}             # sid -> front-end request id
     emitted: Dict[int, int] = {}            # sid -> tokens already sent
-    conn.send({"op": "ready", "pid": __import__("os").getpid()})
+    sess = None
+    if spec.ckpt_every > 0:
+        from repro.api.session import ResilienceSession
+        sess = ResilienceSession.for_shared_tier(
+            spec.shared_root, domain=epoch_domain(spec.name))
+    pid = os.getpid()
+    conn.send({"op": "ready", "pid": pid})
     running = True
+    last_hb = 0.0
+    last_ckpt_step = 0
     try:
         while running:
             busy = bool(sched.unfinished())
+            # heartbeat first — busy or idle, the frontend's failure
+            # detector must keep seeing us
+            now = time.monotonic()
+            if now - last_hb >= spec.hb_interval_s:
+                conn.send({"op": "hb", "pid": pid,
+                           "step": sched.step_count})
+                last_hb = now
             # drain the pipe; block briefly when idle so we don't spin
             while conn.poll(0 if busy else 0.02):
                 try:
@@ -157,8 +285,11 @@ def worker_main(conn, spec: WorkerSpec) -> None:
                 op = msg["op"]
                 if op == "submit":
                     # adopt peers' prefixes *before* admission, so this
-                    # prompt's prefill can hit pages computed elsewhere
-                    recs = board.poll()
+                    # prompt's prefill can hit pages computed elsewhere;
+                    # bounded batches (adopt_batch) keep one admission
+                    # from stalling on a journal backlog
+                    recs = board.poll(spec.adopt_batch or None)
+                    recs = [r for r in recs if record_kind(r) == "prefix"]
                     if recs:
                         prefix.adopt_nodes(recs)
                         published.update(r["digest"] for r in recs)
@@ -167,7 +298,6 @@ def worker_main(conn, spec: WorkerSpec) -> None:
                     rid_of[sid] = msg["rid"]
                     emitted[sid] = 0
                 elif op == "stats":
-                    import time
                     conn.send({
                         "op": "stats",
                         "scheduler": dict(sched.stats),
@@ -183,19 +313,11 @@ def worker_main(conn, spec: WorkerSpec) -> None:
                                    "board_seen": board.adopt_seen},
                     })
                 elif op == "drain":
-                    streams = []
-                    for sid, s in sched.streams.items():
-                        if s.state.name == "DONE":
-                            continue
-                        out = s.tokens[s.plen:]
-                        streams.append({
-                            "rid": rid_of.get(sid),
-                            "prompt": s.tokens[:s.plen],
-                            "emitted": list(out),
-                            "max_new": s.max_new - len(out),
-                            "weight": s.quantum_weight,
-                        })
-                    conn.send({"op": "drained", "streams": streams})
+                    conn.send({"op": "drained", "streams": [
+                        {"rid": rid_of.get(d["sid"]), "prompt":
+                         d["tokens"][:d["plen"]], "emitted": d["emitted"],
+                         "max_new": d["max_new"], "weight": d["weight"]}
+                        for d in sched.live_descriptors()]})
                 elif op == "stop":
                     running = False
                 else:
@@ -214,6 +336,22 @@ def worker_main(conn, spec: WorkerSpec) -> None:
             # a peer admitting the next same-prefix request cannot race
             # the publish
             publish_nodes(sched, board, published)
+            if (sess is not None
+                    and sched.step_count - last_ckpt_step >= spec.ckpt_every):
+                # epoch checkpoint: pages first (export + publish), then
+                # descriptors, then the board marker — a marker is only
+                # ever visible for a fully committed epoch
+                try:
+                    sched.export_live_pages()
+                    publish_nodes(sched, board, published)
+                    if save_epoch(sess, sched, rid_of, sched.step_count):
+                        board.publish([{
+                            "kind": "epoch", "worker": spec.name,
+                            "pid": pid, "step": sched.step_count,
+                            "t": time.time()}])
+                except CapacityError:
+                    pass    # shared domain full: epoch skipped, not torn
+                last_ckpt_step = sched.step_count
             for sid in [s for s, st in sched.streams.items()
                         if st.state.name == "DONE" and s in rid_of]:
                 s = sched.streams[sid]
@@ -221,6 +359,11 @@ def worker_main(conn, spec: WorkerSpec) -> None:
                            "tokens": [int(t) for t in s.tokens[s.plen:]]})
                 emitted.pop(sid, None)
     finally:
+        if sess is not None:
+            try:
+                sess.close()
+            except Exception:
+                pass
         try:
             sched.close()
         except Exception:
@@ -237,11 +380,35 @@ class WorkerHandle:
     them."""
 
     def __init__(self, proc, conn, spec: WorkerSpec):
+        import time
         self.proc = proc
         self.conn = conn
         self.spec = spec
         self.inbox: Deque[Dict[str, Any]] = deque()
         self.ready = False
+        # liveness: any received message refreshes this (heartbeats are
+        # just the guaranteed minimum traffic)
+        self.last_hb = time.monotonic()
+
+    # -- liveness ---------------------------------------------------------- #
+
+    def _saw_traffic(self) -> None:
+        import time
+        self.last_hb = time.monotonic()
+
+    def alive(self) -> bool:
+        """Process liveness (the authoritative half of the failure
+        detector — heartbeat staleness only *triggers* this probe)."""
+        return self.proc.is_alive()
+
+    def heartbeat_age(self) -> float:
+        import time
+        return time.monotonic() - self.last_hb
+
+    def kill(self) -> None:
+        """SIGKILL the worker (failure injection — fig13's scenario)."""
+        self.proc.kill()
+        self.proc.join(5)
 
     @classmethod
     def launch(cls, spec: WorkerSpec) -> "WorkerHandle":
@@ -267,6 +434,7 @@ class WorkerHandle:
         if msg.get("op") != "ready":
             raise RuntimeError(f"expected ready, got {msg!r}")
         self.ready = True
+        self._saw_traffic()
 
     def send(self, **msg: Any) -> None:
         self.conn.send(msg)
@@ -277,7 +445,9 @@ class WorkerHandle:
                   max_new=int(max_new), weight=int(weight))
 
     def messages(self) -> List[Dict[str, Any]]:
-        """Everything received so far (inbox first, then the pipe)."""
+        """Everything received so far (inbox first, then the pipe).
+        Heartbeats are consumed here — they refresh :attr:`last_hb` and
+        are filtered out of the returned list."""
         out = list(self.inbox)
         self.inbox.clear()
         try:
@@ -285,7 +455,9 @@ class WorkerHandle:
                 out.append(self.conn.recv())
         except (EOFError, OSError):
             pass
-        return out
+        if out:
+            self._saw_traffic()
+        return [m for m in out if m.get("op") != "hb"]
 
     def request(self, op: str, reply_op: str,
                 timeout: float = 60.0) -> Dict[str, Any]:
@@ -296,9 +468,11 @@ class WorkerHandle:
             if not self.conn.poll(min(0.05, timeout)):
                 continue
             msg = self.conn.recv()
+            self._saw_traffic()
             if msg.get("op") == reply_op:
                 return msg
-            self.inbox.append(msg)
+            if msg.get("op") != "hb":
+                self.inbox.append(msg)
         raise TimeoutError(f"no {reply_op!r} reply from worker")
 
     def stats(self) -> Dict[str, Any]:

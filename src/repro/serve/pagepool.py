@@ -258,6 +258,30 @@ class DevicePagePool:
         return {name: arr[:, None]
                 for name, arr in self.read_page(phys).items()}
 
+    def blob_to_token_slice(self, blob: bytes) -> Any:
+        """Reinterpret one page *blob* (:meth:`page_blob` layout —
+        decoded bytes, leaves concatenated in sorted name order) as a
+        prefix-cache payload pytree, without touching the device.  The
+        epoch-checkpoint exporter uses this to register a *spilled*
+        stream's parked pages straight from the pager's blobs, so
+        streams off-pool at checkpoint time are recoverable on a peer
+        at the same fidelity as pool-resident ones."""
+        if len(blob) != self.page_nbytes:
+            raise ValueError(
+                f"page blob of {len(blob)} bytes != page size "
+                f"{self.page_nbytes}")
+        off = 0
+        part = {}
+        for name in self.data_names:
+            leaf = self.leaves[name]
+            dtype = self.dtypes[name]
+            shape = (leaf.shape[0], self.page_tokens) + leaf.shape[3:]
+            n = int(np.prod(shape, dtype=np.int64)) * dtype.itemsize
+            part[name] = np.frombuffer(
+                blob[off:off + n], dtype).reshape(shape)[:, None]
+            off += n
+        return part
+
     def write_token_range(self, phys: int, part: Any, n: int) -> None:
         """Scatter the first ``n`` tokens of a page — a partial-page
         tail payload, leaves (L, 1, n, *rest) — into slot ``phys``.

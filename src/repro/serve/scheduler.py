@@ -472,6 +472,29 @@ class ServeScheduler:
             return None
         return s.finished_step - s.submitted_step
 
+    def live_descriptors(self) -> List[Dict[str, Any]]:
+        """Re-admission descriptors for every unfinished stream: the
+        full token history plus the cursors a *peer* scheduler needs to
+        continue the stream exactly (greedy decode is a pure function
+        of token history, so prompt' = tokens and max_new' = remaining
+        budget reproduce the uninterrupted continuation).  This is the
+        payload of both the worker ``drain`` seam and the periodic
+        epoch checkpoint the failure-recovery path restores from."""
+        out = []
+        for sid in sorted(self.streams):
+            s = self.streams[sid]
+            if s.state is StreamState.DONE:
+                continue
+            out.append({
+                "sid": sid,
+                "tokens": list(s.tokens),
+                "plen": s.plen,
+                "emitted": list(s.emitted),
+                "max_new": s.max_new - s.n_emitted,
+                "weight": s.quantum_weight,
+            })
+        return out
+
     # -- checkpoint / restore ----------------------------------------------- #
     #
     # Fixed-shape state (the serializer cross-checks template shapes):
@@ -1048,6 +1071,53 @@ class PagedServeScheduler(ServeScheduler):
         parked = sum(1 for s in self.streams.values()
                      if s.state is StreamState.PARKED)
         return active + parked
+
+    def export_live_pages(self) -> int:
+        """Register every live stream's *complete* KV pages — decoded
+        history included, not just the admission-time prompt — into the
+        prefix trie, keyed by the stream's token chain.  KV at position
+        ``i`` is a pure function of ``tokens[:i+1]``, so a full page is
+        exactly a prefix page for the chain it covers; the periodic
+        epoch checkpoint calls this right before ``publish_nodes`` so a
+        surviving worker that re-admits a migrated stream finds its
+        pages on the board and skips the replayed-prefix prefill.
+
+        Pool-resident streams read through their page tables;
+        *spilled* streams reinterpret their parked pager blobs
+        (:meth:`DevicePagePool.blob_to_token_slice`) — no device
+        traffic either way beyond the pool page reads.  Partial pages
+        (positions past the last page boundary) are skipped: the
+        resumer's suffix prefill recomputes them.  Returns the number
+        of page registrations attempted."""
+        if self.prefix is None:
+            return 0
+        pt = self.pool.page_tokens
+        n = 0
+        for sid in sorted(self.streams):
+            s = self.streams[sid]
+            if s.state is StreamState.DONE:
+                continue
+            upto = (min(s.pos, len(s.tokens)) // pt) * pt
+            if upto <= 0:
+                continue
+            table = self._ptables.get(sid)
+            if table is not None:
+                self.prefix.extend(
+                    s.tokens[:upto], upto, None, sid=sid,
+                    payload_fn=lambda end, t=table:
+                        self.pool.read_token_slice(t[end // pt - 1]))
+            elif (self.pager is not None and self.pager.is_parked(sid)
+                  and self.pager.parked_kind(sid) == "pool_pages"):
+                digests = self.pager.page_table(sid)[:upto // pt]
+                self.prefix.extend(
+                    s.tokens[:upto], upto, None, sid=sid,
+                    payload_fn=lambda end, d=digests:
+                        self.pool.blob_to_token_slice(
+                            self.pager.page_payload(d[end // pt - 1])))
+            else:
+                continue   # WAITING, never prefilled: descriptor-only
+            n += upto // pt
+        return n
 
     # -- the decode loop ---------------------------------------------------- #
 

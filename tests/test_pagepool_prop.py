@@ -240,17 +240,19 @@ class FleetHarness:
     *other* pool bind it from the shared bytes.  The shadow ``published``
     map pins the round-trip: adopted page bytes must equal the bytes the
     publisher shipped — across any interleaving with the single-pool ops
-    (including kills of either pool)."""
+    (including kills of either pool, and whole-worker replacement via
+    ``kill_worker``)."""
 
     def __init__(self, root):
+        self.root = root
+        self.members = [self._fresh_member() for _ in range(2)]
+        self.published = {}        # digest -> bytes as last published
+
+    def _fresh_member(self):
         from repro.memory.shared import SharedTier
 
-        self.members = [
-            Harness(KVPager.for_fleet(SharedTier(root), fast_bytes=10**8,
-                                      page_bytes=256))
-            for _ in range(2)
-        ]
-        self.published = {}        # digest -> bytes as last published
+        return Harness(KVPager.for_fleet(SharedTier(self.root),
+                                         fast_bytes=10**8, page_bytes=256))
 
     def publish(self, who, pick):
         h = self.members[who]
@@ -286,6 +288,15 @@ class FleetHarness:
         # the round-trip claim: shared-tier transport is byte-exact
         assert bytes(h.pool.page_blob(phys)) == self.published[digest]
 
+    def kill_worker(self, who):
+        """Unplanned worker death (the fig13 scenario at allocator
+        scale): the member's pool, pager and local tiers vanish with the
+        process; a replacement joins over the same shared domain.  The
+        survivor's refcounts/bindings must be untouched, and everything
+        in ``published`` must stay byte-exact adoptable by the
+        replacement — the shared level owns the bytes, not the worker."""
+        self.members[who] = self._fresh_member()
+
     def check(self):
         for h in self.members:
             h.check()
@@ -297,7 +308,7 @@ class FleetHarness:
 
 def run_fleet_sequence(ops, root):
     """ops: (code, arg) with code 0-6 the single-pool ops (arg's low bit
-    picks the pool), 7 publish, 8 adopt."""
+    picks the pool), 7 publish, 8 adopt, 9 kill-and-replace a worker."""
     f = FleetHarness(root)
     for code, arg in ops:
         who = arg & 1
@@ -305,6 +316,8 @@ def run_fleet_sequence(ops, root):
             f.publish(who, arg >> 1)
         elif code == 8:
             f.adopt(who, arg >> 1)
+        elif code == 9:
+            f.kill_worker(who)
         else:
             h = f.members[who]
             pick = arg >> 1
@@ -331,7 +344,7 @@ def test_fleet_fixed_seed_random_sequences(tmp_path):
     rng = np.random.default_rng(4321)
     for i in range(25):
         n = int(rng.integers(5, 30))
-        ops = [(int(rng.integers(0, 9)), int(rng.integers(0, 16)))
+        ops = [(int(rng.integers(0, 10)), int(rng.integers(0, 16)))
                for _ in range(n)]
         run_fleet_sequence(ops, tmp_path / f"dom{i}")
 
@@ -351,7 +364,24 @@ def test_directed_publish_adopt_across_pools(tmp_path):
     run_fleet_sequence(ops, tmp_path / "dom")
 
 
-@given(st.lists(st.tuples(st.integers(min_value=0, max_value=8),
+def test_directed_worker_death_and_adoption(tmp_path):
+    """By construction: A binds + publishes dA and runs streams on both
+    members; A dies unplanned (code 9) mid-traffic; the replacement A
+    and the survivor B both adopt dA byte-exact from the shared domain;
+    B then kill/restores and drops dA cleanly."""
+    ops = [(1, 0),             # A binds dA
+           (7, 0),             # A publishes dA
+           (0, 2),             # a plain stream on A
+           (0, 3),             # a stream on B
+           (9, 0),             # A dies; fresh member joins the domain
+           (8, 0),             # replacement A adopts dA (byte-exact)
+           (8, 1),             # B adopts dA too
+           (6, 1),             # B kill/restore round-trip
+           (2, 1)]             # B drops dA
+    run_fleet_sequence(ops, tmp_path / "dom")
+
+
+@given(st.lists(st.tuples(st.integers(min_value=0, max_value=9),
                           st.integers(min_value=0, max_value=15)),
                 min_size=1, max_size=30))
 @settings(max_examples=40, deadline=None)
