@@ -18,6 +18,7 @@ dimensionless rates:
   int8_vs_fp32          quant: int8 residency steady-state tokens/s
   spec_acceptance_rate  dense: n-gram speculative acceptance
   quant_resident_ratio  quant: resident streams at equal device bytes
+  trace_overhead_ratio  obs: traced / untraced tokens/s (the <=3% gate)
 
 A metric fails when ``fresh < (1 - max_drop) * baseline``.  Metrics may
 carry an optional direction: ``"lower"`` inverts the gate for
@@ -25,6 +26,13 @@ latency-shaped numbers (fig13's stall seconds), failing when
 ``fresh > (1 + max_drop) * baseline``.  Metrics the baseline does not
 carry yet are seeded (reported, never failed), so new bench sections can
 land without a flag day.
+
+Metric paths resolve through the artifact's embedded obs registry
+snapshot too: a path that lands on a serialized quantile sketch
+(``kind="qsketch"``) may continue with a stat suffix — ``p50`` / ``p99``
+/ any ``pNN`` (re-hydrated and queried), ``mean``, ``count``, ``min``,
+``max`` — e.g. ``registry.merged.histograms.frontend.\
+admission_latency_s.tenant=quiet.p99``.
 
   PYTHONPATH=src python -m benchmarks.check_regression \
       --baseline /tmp/fig10_baseline.json \
@@ -54,6 +62,9 @@ METRICS = [
      "quant.int8.tokens_per_s", "quant.fp32.tokens_per_s"),
     ("spec_acceptance_rate", "dense.spec_acceptance_rate", None),
     ("quant_resident_ratio", "quant.resident_ratio", None),
+    # observability perf contract: tracing on the decode path must stay
+    # ~free (the bench itself asserts >= 0.97; the gate tracks drift)
+    ("trace_overhead_ratio", "trace.traced_vs_untraced", None),
 ]
 
 # per-bench metric tables, selected by the fresh artifact's "bench"
@@ -68,6 +79,12 @@ METRICS_BY_BENCH = {
         # cross-worker sharing: fraction of worker B's prefill the
         # shared tier absorbed (deterministic at fixed prompt geometry)
         ("fleet_prefix_saved_frac", "shared_prefix.saved_fraction", None),
+        # quota isolation, read straight from the embedded registry
+        # snapshot: the quiet tenant's admission-latency sketch p99
+        ("fleet_quiet_admission_p99",
+         "registry.merged.histograms.frontend.admission_latency_s"
+         ".tenant=quiet.p99",
+         None, "lower"),
     ],
     "fig13_elastic_fleet": [
         # elastic recovery latencies (seconds, lower is better): the
@@ -82,10 +99,39 @@ METRICS_BY_BENCH = {
 }
 
 
+def _sketch_stat(node: dict, stat: str) -> Optional[float]:
+    """Resolve a stat suffix against a serialized quantile sketch (a
+    registry-snapshot histogram leaf).  Precomputed fields (``p50``,
+    ``p99``, ``count``, ``min``...) read directly; any other ``pNN``
+    re-hydrates the sketch and queries it; ``mean`` derives from
+    sum/count."""
+    if stat in node:
+        try:
+            return float(node[stat])
+        except (TypeError, ValueError):
+            return None
+    from repro.obs.metrics import QuantileSketch
+    sk = QuantileSketch.from_dict(node)
+    if not sk.count:
+        return None
+    if stat.startswith("p") and stat[1:].isdigit():
+        digits = stat[1:]
+        return sk.quantile(int(digits) / 10 ** len(digits))
+    if stat == "mean":
+        return sk.mean
+    return None
+
+
 def _get(doc: dict, path: str) -> Optional[float]:
     node = doc
-    for part in path.split("."):
-        if not isinstance(node, dict) or part not in node:
+    parts = path.split(".")
+    for i, part in enumerate(parts):
+        if not isinstance(node, dict):
+            return None
+        if node.get("kind") == "qsketch":
+            # sketch leaf mid-path: the rest of the path is a stat name
+            return _sketch_stat(node, ".".join(parts[i:]))
+        if part not in node:
             return None
         node = node[part]
     try:

@@ -89,18 +89,28 @@ def bench_json(
     bench: str,
     result: Dict,
     tier_stats: Optional[Dict[str, Mapping[str, int]]] = None,
+    registry: Optional[Dict] = None,
 ) -> Path:
     """Write ``BENCH_<bench>.json`` (the per-PR CI artifact contract).
 
     ``tier_stats`` maps a label (e.g. ``"paged"``, ``"serve"``) to a
     ``TierStack.stats()`` / ``KVPager.stats()`` snapshot; each is stored
     with derived per-level hit rates so the artifact records how the
-    hierarchy behaved for this figure, not only how fast it went."""
+    hierarchy behaved for this figure, not only how fast it went.
+
+    ``registry`` embeds a full obs snapshot under ``"registry"`` — either
+    one ``Registry.snapshot()`` or a fleet view
+    (``FleetFrontend.fleet_stats()``: merged + per-worker), so every
+    counter and quantile sketch the run accumulated rides in the
+    artifact; ``check_regression.py`` resolves its metrics (including
+    ``p99``-style sketch quantiles) from this map."""
     payload = dict(result)
     payload["bench"] = bench
     if tier_stats:
         payload["tier_stats"] = {
             label: with_hit_rates(snap) for label, snap in tier_stats.items()}
+    if registry:
+        payload["registry"] = registry
     path = Path(f"BENCH_{bench}.json")
     path.write_text(json.dumps(payload, indent=1))
     return path

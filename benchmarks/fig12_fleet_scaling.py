@@ -203,6 +203,9 @@ def check_quota_isolation(tmp: Path, max_new: int) -> Dict:
         p99_quiet = fe.admission_latency_p99("quiet")
         p99_noisy = fe.admission_latency_p99("noisy")
         stats = dict(fe.stats)
+        # fleet-wide registry view (worker snapshots merged sketch-wise
+        # with the frontend's own, per-tenant latency sketches included)
+        fleet_obs = fe.fleet_stats()
     finally:
         fe.stop()
     assert stats["throttle_events"] > 0, \
@@ -219,6 +222,7 @@ def check_quota_isolation(tmp: Path, max_new: int) -> Dict:
         "completed": stats["completed"],
         "p99_admission_latency_quiet_s": p99_quiet,
         "p99_admission_latency_noisy_s": p99_noisy,
+        "_registry": fleet_obs,
     }
 
 
@@ -248,6 +252,7 @@ def bench(smoke: bool, worker_counts: List[int], n_requests: int,
         f"{scaling['1w']['agg_tokens_per_s']:.0f} tok/s)")
 
     quota = check_quota_isolation(tmp, max_new=max_new)
+    registry = quota.pop("_registry")
 
     saved_fraction = (criterion["b_prefill_tokens_saved"]
                       / (criterion["b_prefill_tokens_saved"]
@@ -264,12 +269,15 @@ def bench(smoke: bool, worker_counts: List[int], n_requests: int,
         "scaling": dict(scaling, speedup_2w=speedup_2w),
         "quota": quota,
         "_tier_stats": tier_stats,
+        "_registry": registry,
     }
 
 
 def _emit_json(res: Dict) -> Path:
     tier_stats = res.pop("_tier_stats")
-    return bench_json("fig12_fleet_scaling", res, tier_stats=tier_stats)
+    registry = res.pop("_registry", None)
+    return bench_json("fig12_fleet_scaling", res, tier_stats=tier_stats,
+                      registry=registry)
 
 
 def run(smoke: bool = True):

@@ -47,6 +47,7 @@ from typing import Any, Dict, Iterator, Mapping, Optional, Tuple
 
 from repro.api.policy import CheckpointPolicy, IntervalPolicy, PolicyContext
 from repro.core.scr import CheckpointRecord, SCRManager, Strategy
+from repro.obs.trace import Tracer, default_tracer
 
 
 class ResilienceSession:
@@ -64,8 +65,10 @@ class ResilienceSession:
         scr: SCRManager,
         policy: Optional[CheckpointPolicy] = None,
         own_engine: bool = True,
+        tracer: Optional[Tracer] = None,
     ):
         self.scr = scr
+        self.tracer = tracer if tracer is not None else default_tracer()
         # with no explicit policy every step is *eligible* (callers that
         # gate checkpoints themselves keep working); the flag lets a layer
         # that owns the cadence (Trainer) install its own default instead
@@ -249,6 +252,7 @@ class ResilienceSession:
         if not state:
             raise RuntimeError("complete_checkpoint with nothing routed")
         t0 = time.perf_counter()
+        _sp = self.tracer.begin("ckpt_txn", step=step, parts=len(state))
         try:
             record = self.scr.save(step, dict(state), meta=meta)
         except BaseException:
@@ -256,7 +260,9 @@ class ResilienceSession:
             # fragments in any tier (descriptor, NVM, staged, NAM parity)
             self.scr.discard(step)
             self.stats["aborted"] += 1
+            self.tracer.end(_sp, committed=False)
             raise
+        self.tracer.end(_sp, committed=True)
         wall = time.perf_counter() - t0
         self.policy.observe_save(record, wall)
         self.last_checkpoint_step = step
@@ -311,7 +317,8 @@ class ResilienceSession:
         self._check_open()
         if self._txn_step is not None:
             self.abort_checkpoint()
-        state, got = self.scr.restore(like, step=step, rebuild=rebuild)
+        with self.tracer.span("restore"):
+            state, got = self.scr.restore(like, step=step, rebuild=rebuild)
         self.last_checkpoint_step = got
         self._last_cp_wall = time.monotonic()
         return state, got

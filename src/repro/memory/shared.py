@@ -52,6 +52,7 @@ from pathlib import Path
 from typing import Dict, Iterator, List, Optional
 
 from repro.memory.tiers import CapacityError, TierKind, TierSpec
+from repro.obs.metrics import Registry, StatsView
 
 try:
     import fcntl
@@ -119,7 +120,8 @@ class SharedTier:
     accepts_spill = True
 
     def __init__(self, root, capacity_bytes: int = 4 << 30,
-                 spec: TierSpec = SHARED_SPEC):
+                 spec: TierSpec = SHARED_SPEC,
+                 registry: Optional[Registry] = None):
         self.root = Path(root)
         self.spec = spec
         self._capacity = int(capacity_bytes)
@@ -128,9 +130,11 @@ class SharedTier:
         self._lock_path = self.root / ".lock"
         self._objs.mkdir(parents=True, exist_ok=True)
         self._serial = 0
-        self.gc_stats = {"gc_runs": 0, "gc_reclaimed": 0,
-                         "gc_reclaimed_bytes": 0, "gc_pinned_live": 0,
-                         "gc_pinned_young": 0}
+        self.registry = registry if registry is not None else Registry()
+        self.gc_stats = StatsView(self.registry, "shared", {
+            "gc_runs": 0, "gc_reclaimed": 0,
+            "gc_reclaimed_bytes": 0, "gc_pinned_live": 0,
+            "gc_pinned_young": 0})
 
     # -- paths ------------------------------------------------------------ #
 
@@ -196,6 +200,40 @@ class SharedTier:
         # commit must be atomic anyway, so the stream joins first
         return self.put(key, b"".join(bytes(c) for c in chunks),
                         streams=streams)
+
+    def append(self, key: str, data: bytes) -> int:
+        """Append ``data`` to an object in place; returns the object's
+        new size.
+
+        Deliberately NOT rename-commit — this is the journal seam the
+        flight recorder (:mod:`repro.obs.recorder`) flushes through,
+        where crash semantics invert: a process killed mid-append may
+        leave a torn final record, and every byte *before* the append
+        is still intact precisely because nothing was rewritten.  The
+        reader owns torn-tail tolerance (``read_flight`` drops
+        unparsable lines); consumers needing atomic visibility use
+        :meth:`put`.  Manifest bookkeeping (size, publisher pid,
+        capacity check) runs under the domain lock like any write."""
+        path = self._path(key)
+        with _DomainLock(self._lock_path):
+            manifest = self._read_manifest()
+            entry = manifest.get(key)
+            used = sum(e["size"] for e in manifest.values())
+            if used + len(data) > self._capacity:
+                raise CapacityError(
+                    f"shared domain full: {used} + {len(data)} > "
+                    f"{self._capacity}")
+            pubs = list(entry["pubs"]) if entry else []
+            if os.getpid() not in pubs:
+                pubs.append(os.getpid())
+            path.parent.mkdir(parents=True, exist_ok=True)
+            with open(path, "ab") as f:
+                f.write(data)
+            size = path.stat().st_size
+            manifest[key] = {"size": size, "pubs": pubs, "t": time.time()}
+            self._write_manifest(manifest)
+        self.spec.write_time(len(data), 1)
+        return size
 
     def get(self, key: str, streams: int = 1) -> bytes:
         # lock-free read: rename-commit guarantees a complete object

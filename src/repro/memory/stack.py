@@ -47,6 +47,7 @@ from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 from repro.memory.codecs import CodecRule, decode_blob, is_encoded
 from repro.memory.store import BufferStore, NAMStore, OffloadOp
 from repro.memory.tiers import CapacityError, MemoryHierarchy
+from repro.obs.metrics import Registry, StatsView
 
 
 class KeyClass(enum.Enum):
@@ -130,14 +131,6 @@ class HitRatePromotion:
             raise ValueError("promotion window must be >= 1")
 
 
-class _Stats(dict):
-    """Counter map that is also callable: ``stack.stats["hits_x"]`` for
-    one counter, ``stack.stats()`` for an immutable snapshot."""
-
-    def __call__(self) -> Dict[str, int]:
-        return dict(self)
-
-
 class _ReplayableChunks:
     """Record a chunk iterable as it is consumed so a capacity-failed
     ``put_stream`` can be replayed after eviction or on the next level.
@@ -180,6 +173,7 @@ class TierStack:
         admission_fraction: Optional[float] = None,
         promotion: Optional[HitRatePromotion] = None,
         codecs: Optional[Dict[KeyClass, CodecRule]] = None,
+        registry: Optional[Registry] = None,
     ):
         if not levels:
             raise ValueError("TierStack needs at least one level")
@@ -227,7 +221,12 @@ class TierStack:
         # per-class reuse.
         self._ticks: Dict[KeyClass, int] = {c: 0 for c in KeyClass}
         self._hit_log: Dict[str, List[int]] = {}
-        self.stats = _Stats({
+        # counters live in an obs Registry (shared across a serving
+        # stack's components so one snapshot covers tier + pager +
+        # scheduler); ``stats`` keeps its historical shape — a mapping
+        # of the same keys that is also callable for a snapshot
+        self.registry = registry if registry is not None else Registry()
+        self.stats = StatsView(self.registry, "tier", {
             "evictions": 0, "promotions": 0, "spills": 0,
             "admission_routed": 0, "offloads": 0, "direct_puts": 0,
             **{f"hits_{n}": 0 for n in names},

@@ -1,0 +1,38 @@
+"""Unified observability layer: metrics registry, span tracer, flight
+recorder.
+
+DEEP-ER paired its I/O and resiliency extensions with measurement
+tooling showing *where* time and bytes go across the hierarchy; the
+resilience pattern literature makes monitoring/diagnosis a first-class
+pattern that detection and recovery build on.  This package is that
+layer for the serving stack:
+
+* :mod:`repro.obs.metrics` — counters, gauges, and mergeable
+  quantile-sketch histograms behind one :class:`~repro.obs.metrics.Registry`;
+  the ad-hoc ``stats()`` dicts of ``TierStack`` / ``KVPager`` /
+  ``SharedTier`` / the schedulers / ``FleetFrontend`` are thin
+  :class:`~repro.obs.metrics.StatsView`s over it, so every legacy key
+  keeps resolving while the fleet gets one mergeable snapshot format.
+* :mod:`repro.obs.trace` — per-stream span timelines
+  (admit → prefix-match → prefill → decode steps → park/spill/fetch/
+  resume → complete, plus checkpoint-transaction and recovery spans)
+  recorded off the hot path into a bounded ring, exported as
+  Chrome-trace/Perfetto JSON.
+* :mod:`repro.obs.recorder` — a bounded flight recorder per worker,
+  flushed append-only through the fleet's ``SharedTier`` so a
+  SIGKILL'd worker's last seconds are post-mortem-readable from the
+  frontend (the observability analogue of the epoch board markers).
+"""
+
+from repro.obs.metrics import (Counter, Gauge, Histogram, QuantileSketch,
+                               Registry, StatsView, merge_snapshots,
+                               quantile)
+from repro.obs.recorder import FlightRecorder, flight_key, read_flight
+from repro.obs.trace import Tracer, default_tracer, set_default_tracer
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "QuantileSketch", "Registry",
+    "StatsView", "merge_snapshots", "quantile",
+    "Tracer", "default_tracer", "set_default_tracer",
+    "FlightRecorder", "flight_key", "read_flight",
+]

@@ -224,5 +224,19 @@ class Serve:
             kw["classes"] = classes
         return FleetFrontend.launch(specs, ready_timeout=ready_timeout, **kw)
 
+    @staticmethod
+    def stats(handle: Any) -> Dict[str, Any]:
+        """The unified observability view over either entrypoint's
+        handle: ``{"merged": <registry snapshot>, "frontend"/"local":
+        <snapshot>, "workers": {name: <snapshot>}}``.  For a fleet this
+        is :meth:`FleetFrontend.fleet_stats` (worker snapshots merged
+        sketch-wise); for a local stack the single registry is its own
+        merge."""
+        fleet_stats = getattr(handle, "fleet_stats", None)
+        if callable(fleet_stats):
+            return fleet_stats()
+        snap = handle.scheduler.registry.snapshot()
+        return {"merged": snap, "local": snap, "workers": {}}
+
 
 __all__ = ["LocalServe", "Serve", "ServeConfig"]

@@ -52,6 +52,9 @@ from collections import deque
 from dataclasses import dataclass, field
 from typing import Any, Deque, Dict, List, Optional, Sequence
 
+from repro.obs.metrics import Registry, StatsView, merge_snapshots
+from repro.obs.recorder import read_flight
+from repro.obs.trace import Tracer, default_tracer
 from repro.serve.fleet.worker import WorkerHandle, WorkerSpec
 
 
@@ -112,6 +115,8 @@ class FleetFrontend:
         classes: Optional[Dict[str, PriorityClass]] = None,
         default_quota: TenantQuota = TenantQuota(),
         hb_timeout_s: float = 2.0,
+        registry: Optional[Registry] = None,
+        tracer: Optional[Tracer] = None,
     ):
         if not workers:
             raise ValueError("need at least one worker")
@@ -125,13 +130,14 @@ class FleetFrontend:
         self._inflight: Dict[str, int] = {}
         self._load = [0] * len(self.workers)    # outstanding cost / worker
         self._dead: set = set()
-        self._lat: Dict[str, List[float]] = {}
         self._next_rid = 0
-        self.stats: Dict[str, int] = {
+        self.registry = registry if registry is not None else Registry()
+        self.tracer = tracer if tracer is not None else default_tracer()
+        self.stats = StatsView(self.registry, "frontend", {
             "submitted": 0, "dispatched": 0, "completed": 0,
             "throttle_events": 0, "workers_failed": 0,
             "streams_migrated": 0, "streams_completed_on_recovery": 0,
-        }
+        })
 
     # -- lifecycle --------------------------------------------------------- #
 
@@ -177,6 +183,7 @@ class FleetFrontend:
             submitted_s=time.monotonic())
         self._backlog.setdefault(tenant, deque()).append(rid)
         self.stats["submitted"] += 1
+        self.tracer.event("submit", tid=rid, tenant=tenant, prio=prio)
         return rid
 
     # -- the pump ----------------------------------------------------------- #
@@ -248,6 +255,9 @@ class FleetFrontend:
         and re-admit every unfinished stream it held with the recovered
         token prefix replayed."""
         w = self.workers[wi]
+        spec0 = getattr(w, "spec", None)
+        _sp = self.tracer.begin(
+            "recover_worker", worker=getattr(spec0, "name", str(wi)))
         self._dead.add(wi)
         self._load[wi] = 0
         self.stats["workers_failed"] += 1
@@ -273,6 +283,8 @@ class FleetFrontend:
             req.worker = None
             self._inflight[req.tenant] = self._inflight.get(req.tenant, 1) - 1
             self.stats["streams_migrated"] += 1
+            self.tracer.event("migrate", tid=req.rid,
+                              replayed=len(emitted))
             if len(emitted) >= req.max_new:
                 # budget already spent before the failure: complete
                 # directly from the recovered prefix
@@ -284,6 +296,7 @@ class FleetFrontend:
                 # already, so it outranks never-dispatched arrivals
                 self._backlog.setdefault(req.tenant, deque()).appendleft(
                     req.rid)
+        self.tracer.end(_sp, migrated=len(victims))
 
     def live_workers(self) -> List[int]:
         return [i for i in range(len(self.workers)) if i not in self._dead]
@@ -323,8 +336,9 @@ class FleetFrontend:
         req.dispatched_s = time.monotonic()
         self._load[wi] += req.cost
         self._inflight[req.tenant] = self._inflight.get(req.tenant, 0) + 1
-        self._lat.setdefault(req.tenant, []).append(
-            req.dispatched_s - req.submitted_s)
+        self.registry.histogram(
+            "frontend.admission_latency_s", tenant=req.tenant,
+        ).observe(req.dispatched_s - req.submitted_s)
         self.stats["dispatched"] += 1
 
     # -- completion --------------------------------------------------------- #
@@ -383,12 +397,57 @@ class FleetFrontend:
 
     def admission_latency_p99(self, tenant: str) -> float:
         """p99 of submit->dispatch latency for ``tenant`` (seconds);
-        0.0 when the tenant never dispatched."""
-        lat = sorted(self._lat.get(tenant, ()))
-        if not lat:
+        0.0 when the tenant never dispatched.  Served from the tenant's
+        registry sketch — relative error <= the sketch's alpha (1%)."""
+        h = self.registry.histogram("frontend.admission_latency_s",
+                                    tenant=tenant)
+        if h.sketch.count == 0:
             return 0.0
-        return lat[min(len(lat) - 1, int(0.99 * len(lat)))]
+        return h.sketch.quantile(0.99)
 
     def worker_stats(self) -> List[Dict[str, Any]]:
         return [w.stats() for wi, w in enumerate(self.workers)
                 if wi not in self._dead]
+
+    def fleet_stats(self) -> Dict[str, Any]:
+        """The fleet-wide observability view: every live worker's
+        registry snapshot plus the frontend's own, *merged* — counters
+        and gauges sum, quantile sketches merge bucket-wise (the merge
+        of the parts is exactly the sketch of the whole; averaging
+        per-worker percentiles would be wrong).  Returns::
+
+            {"merged": <snapshot>, "frontend": <snapshot>,
+             "workers": {name: <snapshot>}}
+        """
+        per_worker: Dict[str, Any] = {}
+        for wi, w in enumerate(self.workers):
+            if wi in self._dead:
+                continue
+            try:
+                snap = w.stats().get("registry")
+            except (TimeoutError, OSError, EOFError):
+                continue
+            if snap:
+                name = getattr(getattr(w, "spec", None), "name", "") or f"w{wi}"
+                per_worker[name] = snap
+        own = self.registry.snapshot()
+        merged = merge_snapshots([own] + list(per_worker.values()))
+        return {"merged": merged, "frontend": own, "workers": per_worker}
+
+    def postmortem(self, wi: int, last: Optional[int] = None,
+                   ) -> Dict[str, Any]:
+        """Read a worker's flight journal back from the shared domain —
+        the black box, readable whether the worker is alive, stopped, or
+        SIGKILL'd (a kill mid-append tears at most the final record;
+        ``torn`` counts what was dropped).  Returns
+        ``{"worker", "records", "torn"}``."""
+        spec = getattr(self.workers[wi], "spec", None)
+        if spec is None:
+            return {"worker": str(wi), "records": [], "torn": 0}
+        from pathlib import Path
+
+        from repro.memory.shared import SharedTier
+        tier = SharedTier(Path(spec.shared_root) / "domain",
+                          capacity_bytes=spec.shared_capacity)
+        records, torn = read_flight(tier, spec.name, last=last)
+        return {"worker": spec.name, "records": records, "torn": torn}

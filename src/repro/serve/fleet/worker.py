@@ -118,20 +118,30 @@ def _build_scheduler(spec: WorkerSpec):
     from repro.serve.prefix import PrefixCache
     from repro.serve.scheduler import PagedServeScheduler
 
+    from repro.obs.metrics import Registry
+    from repro.obs.trace import Tracer
+
     cfg = get_config(spec.arch).reduced()
     model = get_model(cfg)
     params = model.init(jax.random.PRNGKey(spec.seed), cfg)
+    # one registry spans the worker's whole stack (tier/kv/sched/shared
+    # prefixes), so a single snapshot() covers everything the frontend
+    # needs to merge fleet-wide
+    registry = Registry()
+    tracer = Tracer(process=spec.name or "w")
     shared = SharedTier(Path(spec.shared_root) / "domain",
-                        capacity_bytes=spec.shared_capacity)
+                        capacity_bytes=spec.shared_capacity,
+                        registry=registry)
     pager = KVPager.for_fleet(shared, fast_bytes=spec.fast_bytes,
-                              page_bytes=spec.page_bytes)
+                              page_bytes=spec.page_bytes, registry=registry)
     prefix = PrefixCache.for_model(pager.stack, cfg, model, spec.max_len,
                                    page_tokens=spec.page_tokens)
     sched = PagedServeScheduler(
         cfg, model, params, slots=spec.slots, max_len=spec.max_len,
         pager=pager, quantum=spec.quantum, prefix=prefix,
         page_tokens=spec.page_tokens, pool_pages=spec.pool_pages,
-        spec_k=spec.spec_k, kv_codec=spec.kv_codec)
+        spec_k=spec.spec_k, kv_codec=spec.kv_codec,
+        registry=registry, tracer=tracer)
     return sched, pager, prefix, shared
 
 
@@ -248,9 +258,15 @@ def worker_main(conn, spec: WorkerSpec) -> None:
     import os
     import time
 
+    from repro.obs.recorder import FlightRecorder
     from repro.serve.fleet.board import PrefixBoard, record_kind
 
     sched, pager, prefix, shared = _build_scheduler(spec)
+    # black box: every completed span/event lands in the recorder; the
+    # heartbeat tick flushes it append-only through the shared tier so
+    # the frontend can read this worker's last seconds post-mortem
+    recorder = FlightRecorder(spec.name or "w")
+    sched.tracer.sink = recorder
     board = PrefixBoard(Path(spec.shared_root))
     published: set = set()
     rid_of: Dict[int, Any] = {}             # sid -> front-end request id
@@ -260,6 +276,7 @@ def worker_main(conn, spec: WorkerSpec) -> None:
         from repro.api.session import ResilienceSession
         sess = ResilienceSession.for_shared_tier(
             spec.shared_root, domain=epoch_domain(spec.name))
+        sess.tracer = sched.tracer      # ckpt_txn spans reach the black box
     pid = os.getpid()
     conn.send({"op": "ready", "pid": pid})
     running = True
@@ -275,6 +292,10 @@ def worker_main(conn, spec: WorkerSpec) -> None:
                 conn.send({"op": "hb", "pid": pid,
                            "step": sched.step_count})
                 last_hb = now
+                try:
+                    recorder.flush(shared)
+                except Exception:
+                    pass    # black box degrades, serving does not
             # drain the pipe; block briefly when idle so we don't spin
             while conn.poll(0 if busy else 0.02):
                 try:
@@ -303,6 +324,10 @@ def worker_main(conn, spec: WorkerSpec) -> None:
                         "scheduler": dict(sched.stats),
                         "tier": pager.stack.stats(),
                         "prefix": dict(prefix.stats),
+                        # full registry snapshot: the frontend *merges*
+                        # these across workers (sketches merge exactly,
+                        # counters sum) into the fleet-wide view
+                        "registry": sched.registry.snapshot(),
                         # this process's cumulative CPU seconds: the
                         # fleet benchmark takes deltas to compute the
                         # critical path (max over workers), i.e. the
@@ -342,13 +367,15 @@ def worker_main(conn, spec: WorkerSpec) -> None:
                 # descriptors, then the board marker — a marker is only
                 # ever visible for a fully committed epoch
                 try:
-                    sched.export_live_pages()
-                    publish_nodes(sched, board, published)
-                    if save_epoch(sess, sched, rid_of, sched.step_count):
-                        board.publish([{
-                            "kind": "epoch", "worker": spec.name,
-                            "pid": pid, "step": sched.step_count,
-                            "t": time.time()}])
+                    with sched.tracer.span("epoch_ckpt",
+                                           step=sched.step_count):
+                        sched.export_live_pages()
+                        publish_nodes(sched, board, published)
+                        if save_epoch(sess, sched, rid_of, sched.step_count):
+                            board.publish([{
+                                "kind": "epoch", "worker": spec.name,
+                                "pid": pid, "step": sched.step_count,
+                                "t": time.time()}])
                 except CapacityError:
                     pass    # shared domain full: epoch skipped, not torn
                 last_ckpt_step = sched.step_count
@@ -359,6 +386,10 @@ def worker_main(conn, spec: WorkerSpec) -> None:
                            "tokens": [int(t) for t in s.tokens[s.plen:]]})
                 emitted.pop(sid, None)
     finally:
+        try:
+            recorder.flush(shared)      # clean exit: ship the tail too
+        except Exception:
+            pass
         if sess is not None:
             try:
                 sess.close()

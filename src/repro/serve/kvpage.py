@@ -44,6 +44,7 @@ from repro.io.serialization import StateBlob, deserialize_state, serialize_state
 from repro.memory.codecs import CodecRule, make_codec
 from repro.memory.stack import HitRatePromotion, KeyClass, TierStack
 from repro.memory.tiers import CapacityError, MemoryTier, TierKind, TierSpec
+from repro.obs.metrics import StatsView
 
 KV_PAGE_BYTES = 64 * 1024  # default paging granularity
 
@@ -91,10 +92,13 @@ class KVPager:
         self._own_stack = own_stack
         self._tables: Dict[int, _TableEntry] = {}
         self._pages: Dict[str, _PoolPage] = {}
-        self._stats: Dict[str, int] = {
+        # pager counters share the stack's registry: one snapshot spans
+        # the whole KV path (tier placement + page-pool behaviour)
+        self.registry = stack.registry
+        self._stats = StatsView(self.registry, "kv", {
             "kv_clean_page_skips": 0, "kv_page_dedup_hits": 0,
             "kv_pages_put": 0, "kv_resume_bytes_moved": 0,
-        }
+        })
 
     # -- construction ----------------------------------------------------- #
 
@@ -110,6 +114,7 @@ class KVPager:
         kv_codec: Optional[str] = None,
         codec_dtype: str = "float32",
         codec_block: int = 128,
+        registry=None,
     ) -> "KVPager":
         """A serving KV stack sized by its fast tier.
 
@@ -145,6 +150,7 @@ class KVPager:
             promotion=promotion if promotion is not None
             else HitRatePromotion(k=2, window=256),
             codecs={KeyClass.KV: CodecRule(codec)} if codec else None,
+            registry=registry,
         )
         return cls(stack, page_bytes=page_bytes, own_stack=True)
 
@@ -159,6 +165,7 @@ class KVPager:
         kv_codec: Optional[str] = None,
         codec_dtype: str = "float32",
         codec_block: int = 128,
+        registry=None,
     ) -> "KVPager":
         """A fleet worker's serving KV stack: a process-private fast tier
         over a cross-process :class:`~repro.memory.shared.SharedTier`
@@ -181,6 +188,7 @@ class KVPager:
             promotion=promotion if promotion is not None
             else HitRatePromotion(k=2, window=256),
             codecs={KeyClass.KV: CodecRule(codec)} if codec else None,
+            registry=registry,
         )
         return cls(stack, page_bytes=page_bytes, own_stack=True)
 

@@ -56,6 +56,8 @@ from repro.memory.codecs import CodecRule, make_codec
 from repro.memory.stack import KeyClass
 from repro.memory.tiers import CapacityError
 from repro.models.registry import ModelApi
+from repro.obs.metrics import Registry, StatsView
+from repro.obs.trace import Tracer, default_tracer
 from repro.serve.kvpage import KVPager
 from repro.serve.prefix import PrefixCache
 
@@ -183,6 +185,8 @@ class ServeScheduler:
         session: Optional[ResilienceSession] = None,
         quantum: int = 0,
         prefix: Optional[PrefixCache] = None,
+        registry: Optional[Registry] = None,
+        tracer: Optional[Tracer] = None,
     ):
         if slots < 1:
             raise ValueError("need at least one decode slot")
@@ -197,6 +201,15 @@ class ServeScheduler:
         self.session = session
         self.quantum = int(quantum)
         self.prefix = prefix
+        # one registry spans the serving stack: share the pager's (which
+        # is the tier stack's) unless the caller injects one, so a
+        # single snapshot covers tier + pager + scheduler counters.
+        # Spans record into the (default per-process) tracer — pass
+        # Tracer(enabled=False) to measure the tracing-off baseline.
+        self.registry = (registry if registry is not None
+                         else pager.registry if pager is not None
+                         else Registry())
+        self.tracer = tracer if tracer is not None else default_tracer()
         lane = model.init_cache(cfg, 1, max_len)
         self._lane_template = jax.device_get(lane)
         # every lane serializes to the same layout; cached once so the
@@ -213,12 +226,12 @@ class ServeScheduler:
         self._runq: Deque[int] = deque()
         self._next_sid = 0
         self.step_count = 0
-        self.stats: Dict[str, int] = {
+        self.stats = StatsView(self.registry, "sched", {
             "steps": 0, "joined": 0, "parked": 0, "resumed": 0,
             "finished": 0, "park_failures": 0, "max_resident": 0,
             "prefill_calls": 0, "prefill_tokens": 0,
             "prefix_hits": 0, "prefill_tokens_saved": 0,
-        }
+        })
 
     # -- submission -------------------------------------------------------- #
 
@@ -248,6 +261,8 @@ class ServeScheduler:
             submitted_step=self.step_count,
             quantum_weight=int(quantum_weight))
         self._runq.append(sid)
+        self.tracer.event("submit", tid=sid, prompt=len(prompt),
+                          max_new=int(max_new))
         return sid
 
     # -- slot management --------------------------------------------------- #
@@ -286,7 +301,8 @@ class ServeScheduler:
         covered = 0
         host_lane = None
         if self.prefix is not None and target > 0:
-            _, path = self.prefix.match(s.tokens[:target])
+            with self.tracer.span("prefix_match", tid=s.sid):
+                _, path = self.prefix.match(s.tokens[:target])
             live: List[Any] = []
             if path:
                 host_lane = self.prefix.layout.zero_lane()
@@ -350,11 +366,14 @@ class ServeScheduler:
             assert self.pager is not None
             # release=False retains the page table as the dirty-tracking
             # baseline: the next park re-puts only pages that changed
-            self._set_lane(slot, self.pager.fetch(sid, self._lane_template,
-                                                  release=False))
+            with self.tracer.span("resume", tid=sid, slot=slot):
+                self._set_lane(slot, self.pager.fetch(sid, self._lane_template,
+                                                      release=False))
             self.stats["resumed"] += 1
         else:
-            self._set_lane(slot, self._prefilled_lane(s))
+            with self.tracer.span("prefill", tid=sid, slot=slot,
+                                  plen=s.plen):
+                self._set_lane(slot, self._prefilled_lane(s))
             self.stats["joined"] += 1
         s.state, s.slot, s.ran = StreamState.ACTIVE, slot, 0
         self._slot_sid[slot] = sid
@@ -366,7 +385,8 @@ class ServeScheduler:
         assert s.state is StreamState.ACTIVE and s.slot is not None
         assert self.pager is not None
         try:
-            self.pager.park(sid, self._lane(s.slot))
+            with self.tracer.span("park", tid=sid):
+                self.pager.park(sid, self._lane(s.slot))
         except CapacityError:
             self.stats["park_failures"] += 1
             s.ran = 0      # retry after another quantum, not every step
@@ -405,6 +425,7 @@ class ServeScheduler:
         s.state, s.slot = StreamState.DONE, None
         s.finished_step = self.step_count
         self.stats["finished"] += 1
+        self.tracer.event("finish", tid=s.sid, emitted=s.n_emitted)
         if self.prefix is not None:
             self.prefix.release_stream(s.sid)
         if self.pager is not None:
@@ -420,10 +441,12 @@ class ServeScheduler:
     def step(self) -> List[Tuple[int, int]]:
         """One batched decode step at a stream-join/evict boundary.
         Returns the ``(sid, token)`` pairs emitted this step."""
+        _sp = self.tracer.begin("step", tid=0)
         self._schedule()
         active = [(slot, self.streams[sid])
                   for slot, sid in enumerate(self._slot_sid) if sid is not None]
         if not active:
+            self.tracer.end(_sp, active=0)
             return []
         tokens = np.zeros((self.slots, 1), np.int32)
         pos = np.zeros((self.slots,), np.int32)
@@ -447,6 +470,7 @@ class ServeScheduler:
         self.stats["steps"] += 1
         self.stats["max_resident"] = max(self.stats["max_resident"],
                                          self.resident_streams())
+        self.tracer.end(_sp, active=len(active), emitted=len(emitted))
         return emitted
 
     def unfinished(self) -> int:
@@ -782,9 +806,12 @@ class PagedServeScheduler(ServeScheduler):
         spec_k: int = 0,
         proposer: Optional[Any] = None,
         kv_codec: Optional[str] = None,
+        registry: Optional[Registry] = None,
+        tracer: Optional[Tracer] = None,
     ):
         super().__init__(cfg, model, params, slots, max_len, pager=pager,
-                         session=session, quantum=quantum, prefix=prefix)
+                         session=session, quantum=quantum, prefix=prefix,
+                         registry=registry, tracer=tracer)
         if model.paged_decode_step is None:
             raise ValueError(
                 f"model family {model.family!r} has no paged_decode_step "
@@ -877,7 +904,8 @@ class PagedServeScheduler(ServeScheduler):
         covered = 0
         path: List[Any] = []
         if self.prefix is not None and target > 0:
-            _, path = self.prefix.match(s.tokens[:target])
+            with self.tracer.span("prefix_match", tid=s.sid):
+                _, path = self.prefix.match(s.tokens[:target])
         try:
             for node in path:
                 phys = self.pool.lookup_digest(node.digest)
@@ -925,7 +953,9 @@ class PagedServeScheduler(ServeScheduler):
             self.prefix.acquire(s.sid, [tail_node])
             self.stats["prefill_tokens_saved"] += m
             covered = tail_node.end
-        self._paged_prefill(table, s.tokens, covered, target)
+        with self.tracer.span("prefill", tid=s.sid,
+                              tokens=max(target - covered, 0), saved=covered):
+            self._paged_prefill(table, s.tokens, covered, target)
         if self.prefix is not None and target > 0:
             upto = (target // pt) * pt
             if upto > covered:
@@ -953,6 +983,7 @@ class PagedServeScheduler(ServeScheduler):
         if s.state is StreamState.PARKED:
             if self.pager is not None and self.pager.is_parked(sid):
                 # spilled: the only resume path that moves KV bytes
+                _sp = self.tracer.begin("fetch", tid=sid)
                 phys = self.pool.alloc(self.pool.pages_per_lane)
                 try:
                     blobs = self.pager.fetch_pages(sid, release=True)
@@ -963,9 +994,10 @@ class PagedServeScheduler(ServeScheduler):
                 for p, b in zip(phys, blobs):
                     self.pool.write_blob(p, b)
                 self._ptables[sid] = phys
+                moved = sum(len(b) for b in blobs)
+                self.tracer.end(_sp, bytes_moved=moved)
                 self.stats["refilled"] += 1
-                self.stats["kv_resume_bytes_moved"] += sum(
-                    len(b) for b in blobs)
+                self.stats["kv_resume_bytes_moved"] += moved
             # else: pages never left the pool — resume moves 0 KV bytes
             self.stats["resumed"] += 1
         else:
@@ -999,8 +1031,9 @@ class PagedServeScheduler(ServeScheduler):
                 continue
             table = self._ptables.pop(sid)
             try:
-                self.pager.park_pages(
-                    sid, [self.pool.page_blob(p) for p in table])
+                with self.tracer.span("spill", tid=sid, pages=len(table)):
+                    self.pager.park_pages(
+                        sid, [self.pool.page_blob(p) for p in table])
             except CapacityError:
                 self._ptables[sid] = table
                 return False        # the tier stack is full too
@@ -1033,6 +1066,7 @@ class PagedServeScheduler(ServeScheduler):
         s.state, s.slot = StreamState.PARKED, None
         self._runq.append(sid)
         self.stats["parked"] += 1
+        self.tracer.event("park", tid=sid)
         return True
 
     def _schedule(self) -> None:
@@ -1129,11 +1163,13 @@ class PagedServeScheduler(ServeScheduler):
         rejected positions' KV writes land beyond the committed length
         and are overwritten by the next step's real writes.  May emit
         several ``(sid, token)`` pairs per stream per step."""
+        _sp = self.tracer.begin("step", tid=0)
         self._schedule()
         active = [(slot, self.streams[sid])
                   for slot, sid in enumerate(self._slot_sid)
                   if sid is not None]
         if not active:
+            self.tracer.end(_sp, active=0)
             return []
         T = self.spec_k + 1
         feed = np.zeros((self.slots, T), np.int32)
@@ -1182,6 +1218,7 @@ class PagedServeScheduler(ServeScheduler):
         self.stats["steps"] += 1
         self.stats["max_resident"] = max(self.stats["max_resident"],
                                          self.resident_streams())
+        self.tracer.end(_sp, active=len(active), emitted=len(emitted))
         return emitted
 
     # -- checkpoint / restore ----------------------------------------------- #
